@@ -1,0 +1,66 @@
+"""Paper Table IV: ablation of BERT-Tiny inference on AccelTran-Server.
+
+Rows: full config / w/o DynaTran / w/o MP / w/o sparsity-aware modules /
+w/o monolithic-3D RRAM.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import energy as E
+from repro.core.scheduler import EncoderSpec
+from repro.core.simulator import Simulator
+
+from .common import banner, save
+
+PAPER = {
+    "AccelTran-Server": (172_180, 0.1396, 24.04),
+    "w/o DynaTran": (93_333, 0.1503, 14.03),
+    "w/o MP": (163_484, 0.2009, 32.85),
+    "w/o Sparsity-aware modules": (90_410, 0.2701, 24.43),
+    "w/o Monolithic-3D RRAM": (88_736, 0.1737, 15.42),
+}
+
+
+def run(quick: bool = False) -> dict:
+    banner("Table IV: AccelTran-Server ablation (BERT-Tiny)")
+    spec = EncoderSpec.bert_tiny()
+    dram = dataclasses.replace(
+        E.ACCELTRAN_SERVER, name="server-dram", mem_bandwidth_gbps=25.6, mem_kind="lpddr3"
+    )
+    runs = {
+        "AccelTran-Server": (Simulator(E.ACCELTRAN_SERVER), dict(weight_density=0.5, act_density=0.5)),
+        "w/o DynaTran": (Simulator(E.ACCELTRAN_SERVER), dict(weight_density=0.5, act_density=1.0)),
+        "w/o MP": (Simulator(E.ACCELTRAN_SERVER), dict(weight_density=1.0, act_density=0.5)),
+        "w/o Sparsity-aware modules": (
+            Simulator(E.ACCELTRAN_SERVER, sparsity_modules=False),
+            dict(weight_density=0.5, act_density=0.5),
+        ),
+        "w/o Monolithic-3D RRAM": (
+            Simulator(dram),
+            dict(weight_density=0.5, act_density=0.5, embedding_resident=False),
+        ),
+    }
+    rows = {}
+    for name, (sim, kw) in runs.items():
+        res = sim.run_encoder(spec, batch=32, **kw)
+        p_thr, p_e, p_w = PAPER[name]
+        rows[name] = {
+            "throughput_seq_s": res.throughput_seq_s,
+            "energy_mj_per_seq": res.energy_per_seq_j * 1e3,
+            "net_power_w": res.avg_power_w,
+            "paper_throughput": p_thr,
+            "paper_energy_mj": p_e,
+            "paper_power_w": p_w,
+            "throughput_ratio_vs_paper": res.throughput_seq_s / p_thr,
+        }
+        print(
+            f"  {name:28s} thr={res.throughput_seq_s:9.0f} (paper {p_thr:7d}) "
+            f"E={res.energy_per_seq_j*1e3:.4f} (paper {p_e:.4f}) P={res.avg_power_w:6.2f}W (paper {p_w:.2f})"
+        )
+    save("ablation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

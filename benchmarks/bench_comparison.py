@@ -1,0 +1,74 @@
+"""Paper Fig. 20: AccelTran-Edge vs edge platforms and AccelTran-Server vs
+server platforms (A100 / OPTIMUS / SpAtten / Energon).
+
+Baseline platform numbers are the paper's reported measurements (no
+Raspberry Pi / A100 in this container); our accelerators are simulated.
+"""
+from __future__ import annotations
+
+from repro.core import energy as E
+from repro.core.scheduler import EncoderSpec
+from repro.core.simulator import Simulator
+
+from .common import banner, save
+
+# Paper-reported baselines, normalised as in Fig. 20 (throughput seq/s,
+# energy mJ/seq).  BERT-Tiny for edge, BERT-Base for server.
+EDGE_BASELINES = {
+    "raspberry-pi-4b": {"throughput_seq_s": 0.143, "energy_mj_per_seq": 25_000.0},
+    "intel-ncs-v2": {"throughput_seq_s": 4.1, "energy_mj_per_seq": 450.0},
+    "apple-m1-cpu": {"throughput_seq_s": 38.0, "energy_mj_per_seq": 160.0},
+    "apple-m1-gpu": {"throughput_seq_s": 120.0, "energy_mj_per_seq": 85.0},
+}
+SERVER_BASELINES = {
+    "a100": {"throughput_seq_s": 570.0, "energy_mj_per_seq": 620.0},
+    "optimus": {"throughput_rel_a100": 4.9, "energy_rel_a100": 1 / 310.0},
+    "spatten": {"throughput_rel_a100": 9.0, "energy_rel_a100": 1 / 950.0},
+    "energon": {"throughput_rel_a100": 11.0, "energy_rel_a100": 1 / 2928.0},
+}
+
+
+def run(quick: bool = False) -> dict:
+    banner("Fig. 20: platform comparison")
+    edge = Simulator(E.ACCELTRAN_EDGE).run_encoder(
+        EncoderSpec.bert_tiny(), batch=4, weight_density=0.5, act_density=0.5
+    )
+    server = Simulator(E.ACCELTRAN_SERVER).run_encoder(
+        EncoderSpec.bert_base(), batch=32, weight_density=0.5, act_density=0.5
+    )
+    pi = EDGE_BASELINES["raspberry-pi-4b"]
+    a100 = SERVER_BASELINES["a100"]
+    energon_thr = a100["throughput_seq_s"] * SERVER_BASELINES["energon"]["throughput_rel_a100"]
+    energon_e = a100["energy_mj_per_seq"] * SERVER_BASELINES["energon"]["energy_rel_a100"] * 2928 / 2928
+    payload = {
+        "edge": {
+            "acceltran_edge": {
+                "throughput_seq_s": edge.throughput_seq_s,
+                "energy_mj_per_seq": edge.energy_per_seq_j * 1e3,
+            },
+            "baselines": EDGE_BASELINES,
+            "speedup_vs_raspberry_pi": edge.throughput_seq_s / pi["throughput_seq_s"],
+            "energy_gain_vs_raspberry_pi": pi["energy_mj_per_seq"] / (edge.energy_per_seq_j * 1e3),
+            "paper_claims": {"speedup": 330_578, "energy_gain": 93_300},
+        },
+        "server": {
+            "acceltran_server": {
+                "throughput_seq_s": server.throughput_seq_s,
+                "energy_mj_per_seq": server.energy_per_seq_j * 1e3,
+            },
+            "baselines": SERVER_BASELINES,
+            "speedup_vs_a100": server.throughput_seq_s / a100["throughput_seq_s"],
+            "paper_claims": {"speedup_vs_a100": 63, "speedup_vs_energon": 5.73, "energy_gain_vs_energon": 3.69},
+        },
+    }
+    e = payload["edge"]
+    s = payload["server"]
+    print(f"  Edge  vs Raspberry Pi: {e['speedup_vs_raspberry_pi']:.0f}x thr (paper 330,578x), "
+          f"{e['energy_gain_vs_raspberry_pi']:.0f}x energy (paper 93,300x)")
+    print(f"  Server vs A100: {s['speedup_vs_a100']:.1f}x thr (paper 63x)")
+    save("comparison", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

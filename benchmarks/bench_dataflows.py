@@ -1,0 +1,50 @@
+"""Paper Fig. 15: dynamic energy + reuse instances for all 24 dataflows
+under the paper's three W x A scenarios, 4 MAC lanes."""
+from __future__ import annotations
+
+from repro.core.dataflow import compare_dataflows
+
+from .common import banner, save
+
+SCENARIOS = {
+    "a": ((4, 64, 64), (4, 64, 64)),
+    "b": ((4, 64, 64), (4, 64, 128)),
+    "c": ((4, 128, 64), (4, 64, 64)),
+}
+
+
+def run(quick: bool = False) -> dict:
+    banner("Fig. 15: 24 dataflows x 3 scenarios")
+    out = {}
+    for name, (w, a) in SCENARIOS.items():
+        ranked = compare_dataflows(w, a, lanes=4)
+        out[name] = [
+            {
+                "dataflow": s.name,
+                "dynamic_energy_nj": s.dynamic_energy_nj,
+                "reuse_instances": s.reuse_instances,
+                "w_loads": s.w_loads,
+                "a_loads": s.a_loads,
+            }
+            for s in ranked
+        ]
+        best = ranked[0]
+        worst = ranked[-1]
+        print(
+            f"  scenario {name}: best {best.name} ({best.dynamic_energy_nj:.0f} nJ, "
+            f"{best.reuse_instances} reuse) worst {worst.name} ({worst.dynamic_energy_nj:.0f} nJ)"
+        )
+        # paper Fig. 15: [b,i,j,k] minimises energy.  In our lane-register
+        # replay it ties exactly for the symmetric scenario (a) and lands
+        # within 1% of the minimum for the asymmetric ones (the tie group
+        # shifts with the I/J aspect ratio) — assert both.
+        bijk = next(s for s in ranked if s.name == "[b,i,j,k]")
+        assert bijk.dynamic_energy_nj <= best.dynamic_energy_nj * 1.01, name
+        if name == "a":
+            assert bijk.dynamic_energy_nj <= best.dynamic_energy_nj * (1 + 1e-9)
+    save("dataflows", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

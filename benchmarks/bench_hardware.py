@@ -1,0 +1,48 @@
+"""Paper Table III + Fig. 18: area, peak TOP/s, power breakdown for
+AccelTran-Edge / -Server / Edge-LP, and the compute-module area/power split."""
+from __future__ import annotations
+
+from repro.core import energy as E
+from repro.core.scheduler import EncoderSpec
+from repro.core.simulator import Simulator
+
+from .common import banner, save
+
+
+def run(quick: bool = False) -> dict:
+    banner("Table III / Fig. 18: hardware summary")
+    rows = {}
+    # Table III power envelopes: Server runs BERT-Base (its design workload);
+    # Edge/Edge-LP run BERT-Tiny (Fig. 17's workload).
+    for cfg, spec, batch in [
+        (E.ACCELTRAN_SERVER, EncoderSpec.bert_base(), 32),
+        (E.ACCELTRAN_EDGE, EncoderSpec.bert_tiny(), 4),
+        (E.edge_lp_mode(), EncoderSpec.bert_tiny(), 4),
+    ]:
+        res = Simulator(cfg).run_encoder(spec, batch=batch, weight_density=0.5, act_density=0.5)
+        rows[cfg.name] = {
+            "area_mm2": cfg.area_mm2,
+            "peak_tops": cfg.peak_tops,
+            "paper_total_power_w": cfg.total_power_w,
+            "simulated_power_w": res.avg_power_w,
+            "throughput_seq_s": res.throughput_seq_s,
+            "energy_per_seq_mj": res.energy_per_seq_j * 1e3,
+        }
+        print(
+            f"  {cfg.name:22s} area={cfg.area_mm2:8.2f}mm2 peak={cfg.peak_tops:7.2f}TOP/s "
+            f"P_paper={cfg.total_power_w:6.2f}W P_sim={res.avg_power_w:6.2f}W"
+        )
+    payload = {
+        "note": "Table III total power is the all-modules-active envelope; "
+                "simulated power is the workload average (see EXPERIMENTS.md "
+                "calibration note on the Tiny/Base energy inconsistency)",
+        "table_iii": rows,
+        "fig18_area_breakdown": E.AREA_BREAKDOWN_EDGE,
+        "fig18_power_breakdown": E.POWER_BREAKDOWN_EDGE,
+    }
+    save("hardware", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

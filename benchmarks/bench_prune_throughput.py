@@ -1,0 +1,45 @@
+"""Paper Fig. 13: pruning-operation throughput, DynaTran vs top-k.
+
+DynaTran is a single fused compare; top-k sorts/selects per row (the paper
+measures up to 96x on GPU, 5.35x on CPU).  We measure wall-clock on this
+host (CPU backend) for BERT-Tiny- and BERT-Mini-sized activation stacks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dynatran import prune_
+from repro.core.topk import topk_prune
+
+from .common import banner, save, timeit
+
+
+CASES = {
+    # [B*H, S, S] attention-score stacks (the tensors both methods target)
+    "bert-tiny-like": (2 * 4, 128, 128),
+    "bert-mini-like": (4 * 8, 128, 128),
+}
+
+
+def run(quick: bool = False) -> dict:
+    banner("Fig. 13: pruning throughput DynaTran vs top-k")
+    rows = {}
+    dyn = jax.jit(lambda x: prune_(x, 0.01))
+    top = jax.jit(lambda x: topk_prune(x, 32)[0])
+    for name, shape in CASES.items():
+        x = jax.random.normal(jax.random.PRNGKey(0), shape)
+        t_dyn = timeit(dyn, x, repeat=3 if quick else 10)
+        t_top = timeit(top, x, repeat=3 if quick else 10)
+        rows[name] = {
+            "dynatran_us": t_dyn * 1e6,
+            "topk_us": t_top * 1e6,
+            "speedup": t_top / t_dyn,
+        }
+        print(f"  {name}: dynatran {t_dyn*1e6:8.1f}us  topk {t_top*1e6:8.1f}us  -> {t_top/t_dyn:5.2f}x")
+    save("prune_throughput", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""§Roofline report: aggregate the dry-run JSONs (experiments/dryrun/) into
+the per-(arch x shape x mesh) roofline table and print it."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import banner, save
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(quick: bool = False) -> dict:
+    banner("§Roofline: per-cell table from the dry-run artifacts")
+    cells = load_cells()
+    ok = [c for c in cells if "bottleneck" in c]
+    skipped = [c for c in cells if "skipped" in c]
+    failed = [c for c in cells if "error" in c]
+    hdr = f"  {'arch':15s} {'shape':12s} {'mesh':6s} {'strategy':7s} {'t_comp':>8s} {'t_mem':>8s} {'t_coll':>8s} {'bound':>10s} {'useful':>7s} {'roofline':>8s}"
+    print(hdr)
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        print(
+            f"  {c['arch']:15s} {c['shape']:12s} {c['mesh']:6s} {c.get('strategy','?'):7s} "
+            f"{c['t_compute_s']:8.3f} {c['t_memory_s']:8.3f} {c['t_collective_s']:8.3f} "
+            f"{c['bottleneck']:>10s} {c['useful_flops_ratio']:7.3f} {c['roofline_fraction']:8.3f}"
+        )
+    print(f"  ok={len(ok)} skipped(policy)={len(skipped)} failed={len(failed)}")
+    payload = {
+        "cells": ok,
+        "skipped": [{k: c[k] for k in ("arch", "shape", "mesh", "skipped")} for c in skipped],
+        "failed": [{k: c.get(k) for k in ("arch", "shape", "mesh", "error")} for c in failed],
+    }
+    save("roofline", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 16: compute/memory stalls vs number of PEs and buffer size
+(design-space exploration around the AccelTran-Edge point)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import energy as E
+from repro.core.scheduler import EncoderSpec
+from repro.core.simulator import Simulator
+
+from .common import banner, save
+
+
+def run(quick: bool = False) -> dict:
+    banner("Fig. 16: stalls vs hardware resources (Edge DSE)")
+    spec = EncoderSpec.bert_tiny()
+    pes_sweep = [32, 64, 128] if quick else [32, 64, 128, 256]
+    buf_sweep = [10, 13, 16]  # net MB at the paper's 4:8:1 ratio
+    rows = []
+    for pes in pes_sweep:
+        for net_mb in buf_sweep:
+            a, w, m = 4 * net_mb / 13, 8 * net_mb / 13, 1 * net_mb / 13
+            cfg = dataclasses.replace(
+                E.ACCELTRAN_EDGE, pes=pes, act_buffer_mb=a, weight_buffer_mb=w, mask_buffer_mb=m
+            )
+            res = Simulator(cfg).run_encoder(spec, batch=4, weight_density=0.5, act_density=0.5)
+            rows.append(
+                {
+                    "pes": pes, "net_buffer_mb": net_mb,
+                    "compute_stalls": res.compute_stalls, "memory_stalls": res.memory_stalls,
+                    "cycles": res.cycles,
+                }
+            )
+            print(
+                f"  pes={pes:4d} buf={net_mb:3d}MB: compute_stalls={res.compute_stalls:6d} "
+                f"memory_stalls={res.memory_stalls:5d} cycles={res.cycles:9.0f}"
+            )
+    save("stalls", {"rows": rows, "chosen_point": {"pes": 64, "net_buffer_mb": 13}})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark harness (one module per paper artifact)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def save(name: str, payload: dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timeit(fn: Callable, *args, repeat: int = 5, warmup: int = 2, **kw) -> float:
+    """Median wall-clock seconds per call (after jit warmup)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def banner(title: str) -> None:
+    print(f"\n=== {title} " + "=" * max(1, 70 - len(title)))

@@ -1,0 +1,177 @@
+"""Sharded, atomic, async-capable checkpointing with elastic restore.
+
+Design (fault-tolerance requirements):
+* **Atomicity** — write to ``<dir>/tmp.<step>`` then ``os.rename`` to
+  ``step_<n>``; a crash mid-save never corrupts the latest checkpoint.
+* **Manifest** — JSON with step, flat leaf index (path -> file, shape,
+  dtype), data-iterator state and user metadata; restore validates it.
+* **Per-host shards** — each host saves only the leaf shards it owns
+  (``process_index`` namespacing); single-host here, but the layout is the
+  multi-host one.
+* **Async** — `AsyncCheckpointer` snapshots device arrays to host memory
+  synchronously (cheap) and writes in a background thread, overlapping I/O
+  with the next train steps; `wait()` joins before the next save.
+* **Elastic restore** — `restore` takes an optional pytree of
+  `jax.sharding.NamedSharding` built on the *current* mesh and
+  `jax.device_put`s each loaded leaf, so a checkpoint taken on a 512-chip
+  mesh restores onto any other mesh (handles node loss / rescale).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16", "int8", "uint8", "uint16", "uint32", "uint64", "bool"}
+
+
+def _encode(a: np.ndarray) -> np.ndarray:
+    """npz can't round-trip ml_dtypes (bfloat16 etc.); store raw bytes."""
+    if a.dtype.name in _NATIVE:
+        return a
+    return np.ascontiguousarray(a).view(np.uint8)
+
+
+def _decode(a: np.ndarray, dtype_name: str, shape) -> np.ndarray:
+    if dtype_name in _NATIVE:
+        return a
+    import jax.numpy as jnp
+
+    dt = jnp.dtype(dtype_name)
+    return a.view(dt).reshape(shape)
+
+
+def _flatten(tree: Any) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, tree: Any, *, extra: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}.{os.getpid()}")
+    final = os.path.join(directory, f"step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    pid = jax.process_index()
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, f"shard_{pid}.npz"), **{k: _encode(a) for k, a in arrays.items()})
+    manifest = {
+        "step": step,
+        "process_count": jax.process_count(),
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)} for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    directory: str,
+    like: Any,
+    *,
+    step: Optional[int] = None,
+    shardings: Any = None,
+) -> tuple[Any, dict]:
+    """Restore into the structure of ``like``.  ``shardings`` (optional
+    pytree of NamedSharding matching ``like``) places leaves onto the current
+    mesh — the elastic-rescale path."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, f"shard_{jax.process_index() % max(jax.process_count(),1)}.npz"))
+    flat_like = _flatten(like)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint at step {step} missing leaves: {sorted(missing)[:5]}...")
+    out = {}
+    for k, leaf in flat_like.items():
+        meta = manifest["leaves"][k]
+        arr = _decode(data[k], meta["dtype"], tuple(meta["shape"]))
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"leaf {k}: checkpoint shape {arr.shape} != expected {want_shape}")
+        if k in flat_shard and flat_shard[k] is not None:
+            out[k] = jax.device_put(arr, flat_shard[k])
+        else:
+            out[k] = jax.numpy.asarray(arr, dtype=leaf.dtype)
+    # unflatten along like's treedef
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)
+    keys = [
+        SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        for path, _ in leaves_paths[0]
+    ]
+    tree = jax.tree_util.tree_unflatten(leaves_paths[1], [out[k] for k in keys])
+    return tree, manifest
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: snapshot synchronously, persist async."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def save_async(self, step: int, tree: Any, *, extra: Optional[dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)  # snapshot now
+
+        def _write():
+            try:
+                save(self.directory, step, host_tree, extra=extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)

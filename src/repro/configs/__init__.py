@@ -1,0 +1,40 @@
+"""Architecture registry: the 10 assigned archs + the paper's BERT family."""
+from importlib import import_module
+
+from .base import SHAPES, ModelConfig, ShapeConfig, input_specs  # noqa: F401
+
+ARCHS = {
+    "gemma2-9b": "gemma2_9b",
+    "qwen3-4b": "qwen3_4b",
+    "starcoder2-7b": "starcoder2_7b",
+    "deepseek-7b": "deepseek_7b",
+    "rwkv6-7b": "rwkv6_7b",
+    "hymba-1.5b": "hymba_1_5b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-tiny": "whisper_tiny",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.startswith("bert"):
+        from repro.models.bert import bert_config
+
+        return bert_config(name)
+    return import_module(f"repro.configs.{ARCHS[name]}").config()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return import_module(f"repro.configs.{ARCHS[name]}").smoke()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+# which (arch, shape) cells are runnable (DESIGN.md long_500k / decode policy)
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not (cfg.is_subquadratic or cfg.has_partial_window):
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md §6)"
+    return True, ""

@@ -1,0 +1,180 @@
+"""Model / shape / run configuration schema.
+
+Every assigned architecture provides one `ModelConfig` (exact public config)
+plus a `smoke()` reduction of the same family for CPU tests.  Shapes are the
+four assigned input-shape cells; `input_specs` builds ShapeDtypeStruct
+stand-ins for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dynatran import SparsityConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | encoder
+    layers: int
+    d_model: int
+    heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // heads
+    norm: str = "rms"  # rms | ln
+    act: str = "silu"  # silu | gelu
+    glu: bool = True  # gated MLP (SwiGLU/GeGLU)
+    qk_norm: bool = False  # qwen3
+    attn_logit_cap: Optional[float] = None  # gemma2 50.0
+    final_logit_cap: Optional[float] = None  # gemma2 30.0
+    post_norms: bool = False  # gemma2 post-attn/post-mlp norms
+    rope_theta: float = 10000.0
+    pos_kind: str = "rope"  # rope | mrope | learned | none
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)  # qwen2-vl (sums to head_dim/2)
+    attention_pattern: tuple[str, ...] = ("full",)  # cycled over layers
+    window: int = 0  # sliding-window size (for "sliding" pattern entries)
+    embed_scale: bool = False  # gemma: hidden *= sqrt(d_model)
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0  # expert FFN width (olmoe: 1024)
+    capacity_factor: float = 1.25
+    # --- SSM / hybrid (hymba) ---
+    ssm_state: int = 0  # mamba state size N (hymba: 16); 0 = no ssm heads
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_frames: int = 1500  # whisper mel-frame positions after conv stub
+    max_positions: int = 0  # learned positions table size (0 = not used)
+    # --- runtime ---
+    dtype: str = "bfloat16"
+    remat: str = "full"  # none | full | save_dots
+    kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8 (per-vector absmax)
+    # flash-attention chunking: HLO-scan accumulator HBM traffic scales with
+    # the number of KV chunks (S/chunk_k), so bigger KV chunks cut the memory
+    # roofline term; chunk_q bounds the f32 score block (cq x ck) transient.
+    attn_chunk_q: int = 512
+    attn_chunk_k: int = 1024
+    sparsity: SparsityConfig = dataclasses.field(default_factory=SparsityConfig)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/LM-head vocab padded to 256 so the vocab dim shards
+        cleanly on any production mesh (tokens/labels use the true vocab)."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def pattern_len(self) -> int:
+        return len(self.attention_pattern)
+
+    @property
+    def n_cycles(self) -> int:
+        assert self.layers % self.pattern_len == 0, (self.name, self.layers, self.attention_pattern)
+        return self.layers // self.pattern_len
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Can this arch run long_500k? (SSM / all layers windowed / hybrid)"""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return all(p == "sliding" for p in self.attention_pattern) and self.window > 0
+
+    @property
+    def has_partial_window(self) -> bool:
+        return any(p == "sliding" for p in self.attention_pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.layers
+        hd, H, Hkv = self.hd, self.heads, self.kv_heads
+        if self.family == "ssm":
+            # rwkv6: time-mix (r,k,v,g,o = 5 D^2) + channel-mix (2DF + D^2)
+            # + data-dependent token-shift loras (5x32 in/out) + decay lora (64)
+            per_layer = 6 * D * D + 2 * D * F + D * (2 * 5 * 32 + 2 * 64)
+            return L * per_layer + V * D * (1 if self.tie_embeddings else 2)
+        per_layer = D * hd * (H + 2 * Hkv) + H * hd * D  # qkvo
+        if self.n_experts:
+            Fe = self.moe_d_ff or F
+            per_layer += D * self.n_experts + self.n_experts * (2 + (1 if self.glu else 0)) * D * Fe
+        else:
+            per_layer += (2 + (1 if self.glu else 0)) * D * F
+        if self.ssm_state:
+            di, N = self.ssm_inner, self.ssm_state
+            per_layer += D * 2 * di + di * self.ssm_conv + di * (2 * N + 1) + di + di * D + 2 * di
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        enc = 0
+        if self.encoder_layers:
+            enc = self.encoder_layers * (4 * D * D + 2 * D * F)
+            per_layer += 4 * D * D  # decoder cross-attention
+        return L * per_layer + emb + enc
+
+    def active_param_count(self) -> int:
+        """Per-token active parameters (MoE: only routed experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        D, L = self.d_model, self.layers
+        Fe = self.moe_d_ff or self.d_ff
+        dense = self.param_count() - L * self.n_experts * (2 + (1 if self.glu else 0)) * D * Fe
+        return dense + L * self.experts_per_token * (2 + (1 if self.glu else 0)) * D * Fe
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens_per_step(self) -> int:
+        return self.seq_len * self.global_batch if self.kind != "decode" else self.global_batch
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Frontends are stubs per the brief: [vlm] gets precomputed patch
+    embeddings + 3-D M-RoPE position ids, [audio] gets precomputed mel-frame
+    embeddings for the encoder.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "vlm":
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+            specs["positions_3d"] = jax.ShapeDtypeStruct((B, 3, S), i32)
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    else:  # decode: one new token against a cache of S
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        if cfg.family == "vlm":
+            specs["positions_3d"] = jax.ShapeDtypeStruct((B, 3, 1), i32)
+    return specs

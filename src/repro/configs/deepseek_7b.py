@@ -1,0 +1,22 @@
+"""deepseek-7b [dense] — llama-arch (MHA: kv_heads == heads)
+[arXiv:2401.02954; hf]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-7b", family="dense",
+        layers=30, d_model=4096, heads=32, kv_heads=32, head_dim=128,
+        d_ff=11008, vocab=102400,
+        norm="rms", act="silu", glu=True,
+        rope_theta=10000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-smoke", family="dense",
+        layers=2, d_model=64, heads=4, kv_heads=4, head_dim=16,
+        d_ff=128, vocab=512,
+        norm="rms", act="silu", glu=True,
+    )

@@ -1,0 +1,28 @@
+"""gemma2-9b [dense] — local+global alternating attention, logit softcaps
+[arXiv:2408.00118; hf]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b", family="dense",
+        layers=42, d_model=3584, heads=16, kv_heads=8, head_dim=256,
+        d_ff=14336, vocab=256000,
+        norm="rms", act="gelu", glu=True,
+        attention_pattern=("sliding", "full"), window=4096,
+        attn_logit_cap=50.0, final_logit_cap=30.0,
+        post_norms=True, embed_scale=True, tie_embeddings=True,
+        rope_theta=10000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-smoke", family="dense",
+        layers=4, d_model=64, heads=4, kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512,
+        norm="rms", act="gelu", glu=True,
+        attention_pattern=("sliding", "full"), window=16,
+        attn_logit_cap=50.0, final_logit_cap=30.0,
+        post_norms=True, embed_scale=True, tie_embeddings=True,
+    )

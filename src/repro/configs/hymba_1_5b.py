@@ -1,0 +1,25 @@
+"""hymba-1.5b [hybrid] — parallel attention + Mamba heads, ssm_state=16,
+sliding-window attention [arXiv:2411.13676; hf]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b", family="hybrid",
+        layers=32, d_model=1600, heads=25, kv_heads=5, head_dim=64,
+        d_ff=5504, vocab=32001,
+        norm="rms", act="silu", glu=True,
+        attention_pattern=("sliding",), window=1024,
+        ssm_state=16, ssm_expand=2, ssm_conv=4,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-smoke", family="hybrid",
+        layers=2, d_model=64, heads=5, kv_heads=5, head_dim=12,
+        d_ff=128, vocab=512,
+        norm="rms", act="silu", glu=True,
+        attention_pattern=("sliding",), window=16,
+        ssm_state=8, ssm_expand=2, ssm_conv=4,
+    )

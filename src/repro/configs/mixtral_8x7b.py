@@ -1,0 +1,26 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention
+[arXiv:2401.04088; hf]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b", family="moe",
+        layers=32, d_model=4096, heads=32, kv_heads=8, head_dim=128,
+        d_ff=14336, vocab=32000,
+        norm="rms", act="silu", glu=True,
+        attention_pattern=("sliding",), window=4096,
+        n_experts=8, experts_per_token=2, moe_d_ff=14336,
+        rope_theta=1_000_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-smoke", family="moe",
+        layers=2, d_model=64, heads=4, kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512,
+        norm="rms", act="silu", glu=True,
+        attention_pattern=("sliding",), window=16,
+        n_experts=4, experts_per_token=2, moe_d_ff=64,
+    )

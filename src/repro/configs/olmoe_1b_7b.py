@@ -1,0 +1,22 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8 [arXiv:2409.02060; hf]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b", family="moe",
+        layers=16, d_model=2048, heads=16, kv_heads=16, head_dim=128,
+        d_ff=1024, vocab=50304,
+        norm="rms", act="silu", glu=True, qk_norm=True,
+        n_experts=64, experts_per_token=8, moe_d_ff=1024,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-smoke", family="moe",
+        layers=2, d_model=64, heads=4, kv_heads=4, head_dim=16,
+        d_ff=128, vocab=512,
+        norm="rms", act="silu", glu=True, qk_norm=True,
+        n_experts=8, experts_per_token=2, moe_d_ff=32,
+    )

@@ -1,0 +1,24 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic-resolution frontend (stubbed to
+precomputed patch embeddings per the brief) [arXiv:2409.12191; hf]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b", family="vlm",
+        layers=28, d_model=3584, heads=28, kv_heads=4, head_dim=128,
+        d_ff=18944, vocab=152064,
+        norm="rms", act="silu", glu=True,
+        pos_kind="mrope", mrope_sections=(16, 24, 24),
+        rope_theta=1_000_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke", family="vlm",
+        layers=2, d_model=64, heads=4, kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512,
+        norm="rms", act="silu", glu=True,
+        pos_kind="mrope", mrope_sections=(2, 3, 3),
+    )

@@ -1,0 +1,21 @@
+"""rwkv6-7b [ssm] — Finch: attention-free, data-dependent decay
+[arXiv:2404.05892; hf]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b", family="ssm",
+        layers=32, d_model=4096, heads=64, kv_heads=64, head_dim=64,
+        d_ff=14336, vocab=65536,
+        norm="ln", pos_kind="none",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke", family="ssm",
+        layers=2, d_model=64, heads=2, kv_heads=2, head_dim=32,
+        d_ff=128, vocab=512,
+        norm="ln", pos_kind="none",
+    )

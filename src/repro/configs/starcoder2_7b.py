@@ -1,0 +1,22 @@
+"""starcoder2-7b [dense] — GQA, RoPE, LayerNorm + plain-GELU MLP
+[arXiv:2402.19173; hf]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b", family="dense",
+        layers=32, d_model=4608, heads=36, kv_heads=4, head_dim=128,
+        d_ff=18432, vocab=49152,
+        norm="ln", act="gelu", glu=False,
+        rope_theta=100_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-smoke", family="dense",
+        layers=2, d_model=64, heads=4, kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512,
+        norm="ln", act="gelu", glu=False,
+    )

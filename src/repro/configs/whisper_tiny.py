@@ -1,0 +1,25 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend stubbed to precomputed
+mel-frame embeddings [arXiv:2212.04356; unverified]."""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny", family="audio",
+        layers=4, encoder_layers=4, d_model=384, heads=6, kv_heads=6, head_dim=64,
+        d_ff=1536, vocab=51865,
+        norm="ln", act="gelu", glu=False,
+        pos_kind="learned", max_positions=448, encoder_frames=1500,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="audio",
+        layers=2, encoder_layers=2, d_model=64, heads=4, kv_heads=4, head_dim=16,
+        d_ff=128, vocab=512,
+        norm="ln", act="gelu", glu=False,
+        pos_kind="learned", max_positions=64, encoder_frames=16,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution: DynaTran dynamic sparsity, the
+binary-mask datapath, tiled dataflows, and the AccelTran cycle-level
+simulator."""
+from .dynatran import (  # noqa: F401
+    SparsityConfig,
+    ThresholdCalculator,
+    TransferCurve,
+    block_mask,
+    block_sparsity,
+    density,
+    profile_curve,
+    prune,
+    prune_,
+    site_prune,
+    sparsity,
+    weight_prune,
+)
+from .topk import topk_attention_probs, topk_prune  # noqa: F401
+from .scheduler import EncoderSpec, Op, build_encoder_ops  # noqa: F401
+from .simulator import SimResult, Simulator  # noqa: F401
+from . import dataflow, energy, masks  # noqa: F401

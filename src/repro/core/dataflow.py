@@ -1,0 +1,161 @@
+"""Tiled matrix-multiplication dataflows and the data-reuse / energy model
+(paper §III-B1, Fig. 3, Fig. 15).
+
+A (batched) matmul  W[b, i, k] x A[b, k, j] -> O[b, i, j]  is tiled into a
+grid of (tb, ti, tk) x (tb, tk, tj) tile pairs.  The four loops (b, i, j, k)
+can be unrolled in any of 4P4 = 24 orders — each order is a *dataflow* with
+different reuse of the W-tile / A-tile registers held by a MAC lane.
+
+The model below replays the loop nest over the tile grid, assigns tile-ops to
+``lanes`` MAC lanes round-robin (as the paper's example does), and counts:
+
+  * weight-tile loads, activation-tile loads, partial-sum (output) traffic,
+  * *reuse instances* — a tile already resident in the lane's register
+    (the dashed lines of Fig. 15),
+  * dynamic energy = loads x buffer-read energy + MACs x MAC energy +
+    output writes x buffer-write energy.
+
+It reproduces the paper's ranking: [b,i,j,k] and [k,i,j,b] minimise dynamic
+energy and maximise reuse instances (they keep W resident while sweeping j).
+The TPU analogue — Pallas grid order deciding which operand's VMEM block is
+revisited across grid steps — is exercised in kernels/tiled_matmul.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+from . import energy as E
+
+LOOPS = ("b", "i", "j", "k")
+ALL_DATAFLOWS: tuple[tuple[str, ...], ...] = tuple(itertools.permutations(LOOPS))
+
+
+def dataflow_name(order: Sequence[str]) -> str:
+    return "[" + ",".join(order) + "]"
+
+
+@dataclasses.dataclass
+class DataflowStats:
+    order: tuple[str, ...]
+    w_loads: int
+    a_loads: int
+    o_writes: int
+    reuse_instances: int
+    macs: int
+    dynamic_energy_nj: float
+
+    @property
+    def name(self) -> str:
+        return dataflow_name(self.order)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def analyze_dataflow(
+    order: Sequence[str],
+    w_shape: tuple[int, int, int],
+    a_shape: tuple[int, int, int],
+    tile: tuple[int, int, int] = (1, 16, 16),
+    lanes: int = 4,
+    energy_model: E.EnergyModel | None = None,
+) -> DataflowStats:
+    """Replay one loop order over the tile grid and account reuse/energy.
+
+    w_shape = (B, I, K), a_shape = (B, K, J); tile = (tb, ti, tj) with tk
+    taken equal to ti (square compute tiles, paper Table II uses 1x16x16).
+    """
+    em = energy_model or E.EnergyModel.edge()
+    B, I, K = w_shape
+    B2, K2, J = a_shape
+    if (B, K) != (B2, K2):
+        raise ValueError(f"incompatible shapes {w_shape} x {a_shape}")
+    tb, ti, tj = tile
+    tk = ti
+    nb, ni, nj, nk = _ceil_div(B, tb), _ceil_div(I, ti), _ceil_div(J, tj), _ceil_div(K, tk)
+    extents = {"b": nb, "i": ni, "j": nj, "k": nk}
+
+    # Registers per lane: one W tile id, one A tile id (paper Fig. 6).
+    w_reg = [None] * lanes
+    a_reg = [None] * lanes
+    w_loads = a_loads = reuse = 0
+    lane = 0
+    n_tileops = 0
+    # Replay the permuted loop nest without materialising Python loops 4-deep
+    # over potentially huge grids: iterate the mixed-radix counter directly.
+    radices = [extents[ax] for ax in order]
+    total = int(np.prod(radices))
+    idx = [0, 0, 0, 0]
+    pos = {ax: p for p, ax in enumerate(order)}
+    for _ in range(total):
+        b, i, j, k = idx[pos["b"]], idx[pos["i"]], idx[pos["j"]], idx[pos["k"]]
+        w_tile = (b, i, k)
+        a_tile = (b, k, j)
+        if w_reg[lane] == w_tile:
+            reuse += 1
+        else:
+            w_loads += 1
+            w_reg[lane] = w_tile
+        if a_reg[lane] == a_tile:
+            reuse += 1
+        else:
+            a_loads += 1
+            a_reg[lane] = a_tile
+        n_tileops += 1
+        lane = (lane + 1) % lanes
+        # mixed-radix increment (innermost = last element of ``order``)
+        for d in range(3, -1, -1):
+            idx[d] += 1
+            if idx[d] < radices[d]:
+                break
+            idx[d] = 0
+
+    macs = B * I * J * K  # scalar MACs (dense)
+    # Partial sums accumulate in the PE's accumulation registers/buffer
+    # (paper Fig. 5/6) and are not charged per-k to the activation buffer:
+    # each output tile is written once.  This matches the paper's observed
+    # b<->k symmetry ([b,i,j,k] and [k,i,j,b] tie for minimum energy).
+    o_traffic_tiles = nb * ni * nj
+
+    w_tile_bytes = tb * ti * tk * em.elem_bytes
+    a_tile_bytes = tb * tk * tj * em.elem_bytes
+    o_tile_bytes = tb * ti * tj * em.acc_bytes
+    dyn = (
+        w_loads * w_tile_bytes * em.buffer_read_pj_per_byte
+        + a_loads * a_tile_bytes * em.buffer_read_pj_per_byte
+        + o_traffic_tiles * o_tile_bytes * em.buffer_write_pj_per_byte
+        + macs * em.mac_pj
+    ) * 1e-3  # pJ -> nJ
+    return DataflowStats(
+        order=tuple(order),
+        w_loads=w_loads,
+        a_loads=a_loads,
+        o_writes=o_traffic_tiles,
+        reuse_instances=reuse,
+        macs=macs,
+        dynamic_energy_nj=float(dyn),
+    )
+
+
+def compare_dataflows(
+    w_shape: tuple[int, int, int],
+    a_shape: tuple[int, int, int],
+    tile: tuple[int, int, int] = (1, 16, 16),
+    lanes: int = 4,
+    energy_model: E.EnergyModel | None = None,
+) -> list[DataflowStats]:
+    """Fig. 15: all 24 dataflows for one W x A scenario, sorted by energy."""
+    stats = [
+        analyze_dataflow(o, w_shape, a_shape, tile=tile, lanes=lanes, energy_model=energy_model)
+        for o in ALL_DATAFLOWS
+    ]
+    return sorted(stats, key=lambda s: s.dynamic_energy_nj)
+
+
+def best_dataflow(*args, **kwargs) -> DataflowStats:
+    return compare_dataflows(*args, **kwargs)[0]

@@ -1,0 +1,269 @@
+"""DynaTran: low-overhead dynamic (runtime) magnitude pruning of transformer
+activations and weights.
+
+This is the paper's primary algorithmic contribution (AccelTran, §III-A).
+For an input matrix M, DynaTran produces
+
+    M'[ij] = M[ij]   if |M[ij]| >= tau
+             0       otherwise
+
+together with a binary mask recording which entries were pruned.  The
+threshold ``tau`` is *not* chosen per call: it is resolved at runtime from a
+pre-profiled sparsity<->threshold *transfer curve* (the contents of the
+DynaTran module's "internal register" in the ASIC) so the runtime cost is a
+single parallel compare — one clock cycle in the ASIC, a fused VPU
+elementwise op on TPU (see ``repro.kernels.dynatran_prune``).
+
+Mask convention
+---------------
+The paper uses two conventions in different sections (§III-B6 says mask bit 1
+= *ineffectual*; the pre-compute sparsity module of Fig. 8 computes common
+*nonzero* indices with an AND).  We standardise on ``nz_mask``: **1 = kept
+(nonzero / effectual)**, which makes the Fig. 8 algebra (`AND` for common
+support, `XOR` for filter masks) read exactly as written.  Helpers to flip to
+the §III-B6 "1 = pruned" convention are provided for the simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Core pruning primitive
+# ---------------------------------------------------------------------------
+
+
+def prune(x: Array, tau: Array | float) -> tuple[Array, Array]:
+    """Magnitude-threshold prune. Returns (pruned, nz_mask).
+
+    ``nz_mask`` is boolean with True where the element was kept.  The compare
+    runs elementwise and in parallel — the TPU analogue of the paper's
+    single-cycle comparator bank (Fig. 7).
+    """
+    nz_mask = jnp.abs(x) >= tau
+    return jnp.where(nz_mask, x, jnp.zeros_like(x)), nz_mask
+
+
+def prune_(x: Array, tau: Array | float) -> Array:
+    """Prune without materialising the mask (for fused activation sites)."""
+    return jnp.where(jnp.abs(x) >= tau, x, jnp.zeros_like(x))
+
+
+def sparsity(x: Array) -> Array:
+    """rho(M) = fraction of exactly-zero entries (paper Eq. 2)."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def density(x: Array) -> Array:
+    return 1.0 - sparsity(x)
+
+
+def block_mask(nz_mask: Array, block: int | tuple[int, int] = 128) -> Array:
+    """Reduce an element nz_mask to a tile mask: a tile is *live* iff any
+    element in it is nonzero.
+
+    This is the TPU adaptation (DESIGN.md §3): the MXU cannot skip individual
+    zeros, so the unit of skipping is a (bm, bn) tile.  The last two dims of
+    ``nz_mask`` are tiled; leading dims are preserved.  Shapes must divide.
+    """
+    bm, bn = (block, block) if isinstance(block, int) else block
+    *lead, m, n = nz_mask.shape
+    if m % bm or n % bn:
+        raise ValueError(f"mask shape {(m, n)} not divisible by block {(bm, bn)}")
+    r = nz_mask.reshape(*lead, m // bm, bm, n // bn, bn)
+    return jnp.any(r, axis=(-3, -1))
+
+
+def block_sparsity(nz_mask: Array, block: int | tuple[int, int] = 128) -> Array:
+    """Fraction of fully-dead tiles — the sparsity the TPU kernel can exploit."""
+    bmask = block_mask(nz_mask, block)
+    return jnp.mean((~bmask).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Transfer curves ("internal register" contents) + threshold calculator
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TransferCurve:
+    """Monotone rho(tau) curve for one tensor class (site) of one model/task.
+
+    The ASIC stores these in the DynaTran module's internal register and the
+    *threshold calculator* resolves tau for a desired rho with a lookup
+    (paper §III-B5).  We store (taus, rhos) with rhos nondecreasing in tau and
+    interpolate piecewise-linearly in both directions.
+    """
+
+    taus: Array  # [K] nondecreasing, taus[0] == 0.0
+    rhos: Array  # [K] nondecreasing in [0, 1]
+
+    def tau_for_rho(self, target_rho: Array | float) -> Array:
+        """The runtime lookup: desired sparsity -> pruning threshold."""
+        return jnp.interp(target_rho, self.rhos, self.taus)
+
+    def rho_for_tau(self, tau: Array | float) -> Array:
+        return jnp.interp(tau, self.taus, self.rhos)
+
+    def tree_flatten(self):
+        return (self.taus, self.rhos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def identity(max_tau: float = 0.1, points: int = 33) -> "TransferCurve":
+        """A flat placeholder curve (rho == 0) used before profiling."""
+        taus = jnp.linspace(0.0, max_tau, points)
+        return TransferCurve(taus=taus, rhos=jnp.zeros_like(taus))
+
+
+def profile_curve(samples: Sequence[Array], taus: Array | None = None) -> TransferCurve:
+    """Profile rho(tau) from representative tensors of one site.
+
+    ``samples`` are activation tensors captured on calibration batches;
+    the resulting geometric-mean-style averaged curve is what the paper stores
+    in memory (§III-A, §V-A).  Pure numpy (offline path).
+    """
+    if taus is None:
+        # grid reaching tau=4: rho(4) ~ 1.0 even for unit-scale activations,
+        # so any target sparsity in [0, 1) resolves by interpolation
+        taus = np.concatenate([[0.0], np.geomspace(1e-4, 4.0, 64)])
+    taus = np.asarray(taus, dtype=np.float64)
+    rhos = np.zeros_like(taus)
+    total = 0
+    for s in samples:
+        s = np.abs(np.asarray(s, dtype=np.float64)).ravel()
+        total += s.size
+        # rho(tau) = P(|x| < tau); vectorised via sorted search.
+        s.sort()
+        rhos += np.searchsorted(s, taus, side="left")
+    rhos = rhos / max(total, 1)
+    # enforce monotonicity for interp safety
+    rhos = np.maximum.accumulate(rhos)
+    return TransferCurve(taus=jnp.asarray(taus, jnp.float32), rhos=jnp.asarray(rhos, jnp.float32))
+
+
+# Tensor classes ("sites") that DynaTran prunes — mirrors Table I operands.
+SITES = ("ffn_act", "attn_probs", "attn_out", "block_out", "weights")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """First-class framework knob: how dynamic sparsity runs for a model.
+
+    mode:
+      - "none":     dense baseline
+      - "dynatran": the paper's scheme (threshold from transfer curves)
+      - "topk":     SpAtten-style top-k on attention scores (baseline A/B)
+    target_rho: desired activation sparsity in [0, 1).
+    sites: which tensor classes are pruned at runtime.
+    block: tile size used for TPU block-sparsity skipping.
+    topk_k: k for the top-k baseline (elements kept per attention row).
+    """
+
+    mode: str = "none"
+    target_rho: float = 0.5
+    sites: tuple[str, ...] = ("ffn_act", "attn_probs", "attn_out")
+    block: int = 128
+    topk_k: int = 64
+
+    def __post_init__(self):
+        if self.mode not in ("none", "dynatran", "topk"):
+            raise ValueError(f"unknown sparsity mode {self.mode!r}")
+        unknown = set(self.sites) - set(SITES)
+        if unknown:
+            raise ValueError(f"unknown sparsity sites {unknown}")
+
+
+class ThresholdCalculator:
+    """Runtime tau resolution from per-site transfer curves.
+
+    This is the software twin of the paper's threshold-calculator block: given
+    user constraints (target rho, or accuracy via an accuracy<->rho curve) it
+    returns tau per site with a lookup, cheap enough to run every step.
+    Curves are a pytree -> they live in the train/serve state and are
+    checkpointed with it.
+    """
+
+    def __init__(self, curves: Mapping[str, TransferCurve]):
+        self.curves = dict(curves)
+
+    @classmethod
+    def default(cls, sites: Sequence[str] = SITES) -> "ThresholdCalculator":
+        return cls({s: TransferCurve.identity() for s in sites})
+
+    def tau(self, site: str, target_rho: Array | float) -> Array:
+        return self.curves[site].tau_for_rho(target_rho)
+
+    def taus(self, cfg: SparsityConfig) -> dict[str, Array]:
+        return {s: self.tau(s, cfg.target_rho) for s in cfg.sites}
+
+
+def site_prune(x: Array, site: str, cfg: SparsityConfig, taus: Mapping[str, Any] | None) -> Array:
+    """Apply DynaTran at a named site if enabled — the hook model code calls.
+
+    Keeps model code free of sparsity-mode conditionals; with mode == "none"
+    (or site not selected) this is the identity and JAX traces no extra ops.
+    """
+    if cfg.mode != "dynatran" or site not in cfg.sites or taus is None:
+        return x
+    return prune_(x, taus[site])
+
+
+# ---------------------------------------------------------------------------
+# Static weight pruning (the paper's "WP" variant, §V-A2)
+# ---------------------------------------------------------------------------
+
+
+def weight_prune(params: Any, tau: float) -> tuple[Any, dict[str, float]]:
+    """One-shot magnitude WP over a parameter pytree (no retraining).
+
+    The paper finds WP costs accuracy for marginal net-sparsity gain and
+    prefers movement-pruned checkpoints; we implement it for the Fig. 14
+    reproduction and as the entry point for *any* pre-pruned checkpoint
+    (AccelTran's pipeline is agnostic to the weight pruning strategy).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    pruned, kept, total = [], 0, 0
+    for leaf in leaves:
+        if jnp.issubdtype(leaf.dtype, jnp.floating) and leaf.ndim >= 2:
+            p, m = prune(leaf, tau)
+            pruned.append(p)
+            kept += int(jnp.sum(m))
+            total += leaf.size
+        else:
+            pruned.append(leaf)
+    stats = {"weight_sparsity": 1.0 - kept / max(total, 1)}
+    return jax.tree_util.tree_unflatten(treedef, pruned), stats
+
+
+def movement_pruning_mask_update(score: Array, weight_grad: Array, weight: Array, lr: float) -> Array:
+    """Movement-pruning importance-score update (Sanh et al., used by the
+    paper as its preferred static WP).  S <- S - lr * dL/dW * W ; weights with
+    the lowest scores get masked.  Provided so the training loop can produce
+    movement-pruned checkpoints end-to-end (no external artifacts)."""
+    return score - lr * weight_grad * weight
+
+
+def movement_prune(params: Any, scores: Any, keep_fraction: float) -> Any:
+    """Apply movement-pruning masks: keep the top ``keep_fraction`` of each
+    weight matrix by score."""
+
+    def _apply(w, s):
+        if w.ndim < 2:
+            return w
+        k = max(1, int(round(keep_fraction * w.size)))
+        thresh = jnp.sort(s.ravel())[-k]
+        return jnp.where(s >= thresh, w, jnp.zeros_like(w))
+
+    return jax.tree_util.tree_map(_apply, params, scores)

@@ -1,0 +1,152 @@
+"""Binary-mask sparse format and the pre-/post-compute sparsity module
+algebra (paper §III-B6, Fig. 8; inherited from SPRING).
+
+Data is stored *zero-free* alongside a binary mask of the original shape.
+Before a MAC operation over paired vectors (an activation stream and a weight
+stream sharing the contraction index), the pre-compute sparsity module:
+
+  1. computes the common support:      common = nz_A AND nz_W
+  2. computes per-operand filter masks: filt_A = nz_A XOR common
+                                        filt_W = nz_W XOR common
+  3. drops filtered entries from each zero-free stream (the "filter"), and
+  4. zero-collapses so the MAC lanes see only mutually-effectual pairs.
+
+The post-compute module re-expands outputs to dense positions.
+
+On TPU this element-granular machinery does not map onto the MXU — the
+*block*-granular version lives in ``repro.kernels.block_sparse_matmul``
+(see DESIGN.md §3).  This module is the bit-exact software model of the ASIC
+datapath: the cycle-accurate simulator uses it for its skip accounting, and
+the property tests prove the format is lossless and the masked MAC equals the
+dense result.
+
+Convention: ``nz_mask`` bits are 1 = nonzero/effectual (Fig. 8 algebra).  Use
+``to_paper_mask`` for the §III-B6 "1 = pruned" storage convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "CompressedTensor",
+    "compress",
+    "decompress",
+    "to_paper_mask",
+    "from_paper_mask",
+    "align_pair",
+    "sparse_dot",
+    "sparse_matmul",
+    "mask_buffer_bytes",
+]
+
+
+def to_paper_mask(nz_mask: np.ndarray) -> np.ndarray:
+    """Flip to the paper's storage convention (1 = ineffectual/pruned)."""
+    return ~nz_mask
+
+
+def from_paper_mask(paper_mask: np.ndarray) -> np.ndarray:
+    return ~paper_mask
+
+
+@dataclasses.dataclass
+class CompressedTensor:
+    """Zero-free values + binary mask, the on-buffer format of AccelTran."""
+
+    values: np.ndarray  # 1-D zero-free stream, row-major over original shape
+    nz_mask: np.ndarray  # bool, original shape
+    shape: tuple[int, ...]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.size)
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.nnz / max(int(np.prod(self.shape)), 1)
+
+    def storage_bytes(self, elem_bytes: float = 2.5) -> float:
+        """Buffer footprint: zero-free data at (IL+FL)=20 bits plus 1
+        mask bit per original element (paper stores masks in a dedicated
+        mask buffer)."""
+        return self.nnz * elem_bytes + int(np.prod(self.shape)) / 8.0
+
+
+def compress(x: np.ndarray) -> CompressedTensor:
+    x = np.asarray(x)
+    nz = x != 0
+    return CompressedTensor(values=x[nz].ravel(), nz_mask=nz, shape=x.shape)
+
+
+def decompress(c: CompressedTensor) -> np.ndarray:
+    out = np.zeros(int(np.prod(c.shape)), dtype=c.values.dtype if c.values.size else np.float32)
+    out[c.nz_mask.ravel()] = c.values
+    return out.reshape(c.shape)
+
+
+def align_pair(a: CompressedTensor, w: CompressedTensor) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The pre-compute sparsity module (Fig. 8) for two streams sharing an
+    index space.  Returns (a_eff, w_eff, common_mask): zero-free, mutually
+    effectual value streams ready for the MAC lanes.
+    """
+    if a.shape != w.shape:
+        raise ValueError(f"pre-compute sparsity needs matched shapes, got {a.shape} vs {w.shape}")
+    common = a.nz_mask & w.nz_mask                     # AND gate
+    filt_a = a.nz_mask ^ common                        # XOR gate -> drop these from A's stream
+    filt_w = w.nz_mask ^ common
+    a_eff = a.values[~filt_a[a.nz_mask]]               # filter + zero-collapsing shifter
+    w_eff = w.values[~filt_w[w.nz_mask]]
+    return a_eff, w_eff, common
+
+
+def sparse_dot(a: CompressedTensor, w: CompressedTensor) -> tuple[float, int]:
+    """Dot product over the compressed pair.  Returns (value, effectual_macs).
+
+    effectual_macs is what the MAC lanes actually execute — the quantity the
+    simulator uses to credit cycle savings.
+    """
+    a_eff, w_eff, common = align_pair(a, w)
+    return float(np.dot(a_eff, w_eff)), int(common.sum())
+
+
+def sparse_matmul(a: np.ndarray, w: np.ndarray) -> tuple[np.ndarray, int, int]:
+    """Dense-shaped matmul executed through the compressed-pair datapath.
+
+    a: [m, k], w: [k, n].  Returns (a @ w, effectual_macs, total_macs).
+    Row/column streams are compressed independently, mirroring how tiles
+    stream through a PE.  Used by tests (result must equal np.matmul exactly
+    in f64) and by the simulator's MAC accounting.
+    """
+    a = np.asarray(a)
+    w = np.asarray(w)
+    m, k = a.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError("shape mismatch")
+    out = np.zeros((m, n), dtype=np.result_type(a, w))
+    eff = 0
+    rows = [compress(a[i]) for i in range(m)]
+    cols = [compress(w[:, j]) for j in range(n)]
+    for i in range(m):
+        for j in range(n):
+            v, e = sparse_dot(rows[i], cols[j])
+            out[i, j] = v
+            eff += e
+    return out, eff, m * n * k
+
+
+def effectual_macs(a: np.ndarray, w: np.ndarray) -> tuple[int, int]:
+    """Vectorised count of mutually-effectual MACs for a @ w (no values).
+
+    eff = sum_{i,j,k} [a[i,k] != 0][w[k,j] != 0] = (nzA @ nzW).sum()
+    """
+    nza = (np.asarray(a) != 0).astype(np.int64)
+    nzw = (np.asarray(w) != 0).astype(np.int64)
+    return int((nza @ nzw).sum()), int(nza.shape[0] * nza.shape[1] * nzw.shape[1])
+
+
+def mask_buffer_bytes(*shapes: tuple[int, ...]) -> int:
+    """Mask-buffer footprint for a set of tensors (1 bit / element)."""
+    return int(sum(int(np.prod(s)) for s in shapes) // 8)

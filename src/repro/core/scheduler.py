@@ -1,0 +1,348 @@
+"""Transformer -> tiled-operation graph, and the control block's scheduling
+policy (paper §III-B8, Fig. 9/10).
+
+The control block maps the transformer computational graph (Table I) to
+hardware-implementable *tiled* operations, each assigned to a module class
+(MAC lanes / softmax / layer-norm), and schedules them by priority.  The key
+policy is **staggered head priority**: instead of giving all attention heads
+equal priority (which serialises module classes — all heads hit softmax at
+once while MAC lanes idle), heads are prioritised so head 0 reaches its
+softmax while MAC lanes start head 1, overlapping module classes (Fig. 10).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+from . import energy as E
+
+# module classes
+MAC, SOFTMAX, LAYERNORM = "mac", "softmax", "layernorm"
+
+
+@dataclasses.dataclass
+class Op:
+    """One tiled hardware operation (a whole Table-I op, carrying its tile
+    count; the simulator spreads tiles over module instances)."""
+
+    uid: int
+    name: str
+    kind: str  # mac | softmax | layernorm
+    layer: int
+    head: int  # -1 for per-layer ops
+    tiles: int
+    cycles_per_tile: float
+    macs: int  # dense scalar MACs (0 for softmax/LN)
+    elems: int  # elements processed (softmax/LN energy)
+    weight_bytes: float  # weights to load from main memory before start
+    act_in_bytes: float  # activation buffer reads
+    act_out_bytes: float  # activation buffer writes (output residency)
+    deps: tuple[int, ...] = ()
+    stage: int = 0  # position within the head's op sequence (q/k/v=0, qk=1, smx=2, sv=3, o=4)
+    density: float = 1.0  # fraction of mutually-effectual MACs (energy; AND of masks)
+    # Fraction of MAC-lane cycles actually spent (Table IV calibration: the
+    # zero-free *activation* stream sets the MAC schedule; compressed weights
+    # save memory traffic + energy but not issue slots).
+    cycle_density: float = 1.0
+
+    @property
+    def skipped_macs(self) -> int:
+        return int(self.macs * (1.0 - self.density))
+
+
+def _mac_op_cycles_per_tile() -> float:
+    # One tile pair is (1 x 16 x 16) x (1 x 16 x 16): n_o = 1*16*16*16 MACs,
+    # M = 16 multipliers per lane -> n_o / M = 256 cycles (paper §III-B4),
+    # pipelined with the adder tree (depth log2 16 = 4) amortised.
+    n_o = E.TILE_B * E.TILE_X * E.TILE_Y * E.TILE_Y
+    return n_o / E.MULTIPLIERS_PER_LANE
+
+
+def _tiles_matmul(b: int, i: int, j: int, k: int) -> int:
+    tb = math.ceil(b / E.TILE_B)
+    ti = math.ceil(i / E.TILE_X)
+    tj = math.ceil(j / E.TILE_Y)
+    tk = math.ceil(k / E.TILE_X)
+    return tb * ti * tj * tk
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderSpec:
+    """Encoder-only transformer (the paper's model family)."""
+
+    name: str
+    layers: int
+    hidden: int
+    heads: int
+    ffn: int
+    seq_len: int
+    vocab: int
+
+    @staticmethod
+    def bert_tiny() -> "EncoderSpec":
+        return EncoderSpec("bert-tiny", layers=2, hidden=128, heads=2, ffn=512, seq_len=128, vocab=30522)
+
+    @staticmethod
+    def bert_mini() -> "EncoderSpec":
+        return EncoderSpec("bert-mini", layers=4, hidden=256, heads=4, ffn=1024, seq_len=128, vocab=30522)
+
+    @staticmethod
+    def bert_base() -> "EncoderSpec":
+        return EncoderSpec("bert-base", layers=12, hidden=768, heads=12, ffn=3072, seq_len=128, vocab=30522)
+
+
+def build_encoder_ops(
+    spec: EncoderSpec,
+    batch: int,
+    *,
+    weight_density: float = 1.0,
+    act_density: float = 1.0,
+    embedding_resident: bool = False,
+) -> list[Op]:
+    """Emit the Table-I operation list for ``spec``, tiled and with
+    dependencies.  Densities scale effectual MACs (the sparsity-aware modules
+    skip the rest): a MAC is effectual only if *both* operands are nonzero,
+    so weight x activation density compounds (independence approximation).
+    """
+    eb = E.ELEM_BITS / 8.0
+    ops: list[Op] = []
+    uid = 0
+
+    def add(**kw) -> int:
+        nonlocal uid
+        ops.append(Op(uid=uid, **kw))
+        uid += 1
+        return uid - 1
+
+    b, s, h, n, f = batch, spec.seq_len, spec.hidden, spec.heads, spec.ffn
+    hd = h // n
+    mm_density = act_density * weight_density
+    aa_density = act_density * act_density  # activation x activation matmuls
+    mm_cyc = act_density
+    aa_cyc = act_density
+
+    # M-OP-0: embeddings + position encodings.  With ``embedding_resident``
+    # they were loaded once by a previous batch and stay in the weight buffer
+    # (Fig. 17: ~60% of the Edge weight buffer, loaded in the first 51K
+    # cycles only).  Otherwise the table streams from main memory — random
+    # row gathers run at table-scan cost on DRAM (row-activation bound),
+    # which is what makes the w/o-RRAM ablation memory-bound (Table IV).
+    emb_bytes = 0.0 if embedding_resident else spec.vocab * h * eb * weight_density
+    cpt = _mac_op_cycles_per_tile()
+    embed = add(
+        name="embed",
+        kind=MAC,
+        layer=-1,
+        head=-1,
+        tiles=_tiles_matmul(b, s, h, 1),
+        cycles_per_tile=cpt / E.TILE_X,  # lookup+add, not a full k-depth matmul
+        macs=b * s * h,
+        elems=b * s * h,
+        weight_bytes=emb_bytes,
+        act_in_bytes=b * s * eb,
+        act_out_bytes=b * s * h * eb,
+        deps=(),
+        density=act_density,
+        cycle_density=1.0,
+    )
+
+    prev_out = embed
+    for layer in range(spec.layers):
+        head_proj_outs = []
+        head_outs = []
+        for head in range(n):
+            # C-OP-1..3: Q, K, V projections (H @ W), one per head
+            qkv = []
+            for wname in ("q", "k", "v"):
+                o = add(
+                    name=f"L{layer}.h{head}.{wname}_proj",
+                    kind=MAC,
+                    layer=layer,
+                    head=head,
+                    tiles=_tiles_matmul(b, s, hd, h),
+                    cycles_per_tile=cpt,
+                    macs=b * s * hd * h,
+                    elems=b * s * hd,
+                    weight_bytes=h * hd * eb * weight_density,
+                    act_in_bytes=b * s * h * eb,
+                    act_out_bytes=b * s * hd * eb,
+                    deps=(prev_out,),
+                    stage=0,
+                    density=mm_density,
+                    cycle_density=mm_cyc,
+                )
+                qkv.append(o)
+            # C-OP-4: A = Q K^T
+            a_op = add(
+                name=f"L{layer}.h{head}.qk",
+                kind=MAC,
+                layer=layer,
+                head=head,
+                tiles=_tiles_matmul(b, s, s, hd),
+                cycles_per_tile=cpt,
+                macs=b * s * s * hd,
+                elems=b * s * s,
+                weight_bytes=0.0,
+                act_in_bytes=2 * b * s * hd * eb,
+                act_out_bytes=b * s * s * eb,
+                deps=(qkv[0], qkv[1]),
+                stage=1,
+                density=aa_density,
+                cycle_density=aa_cyc,
+            )
+            # C-OP-5: softmax
+            sm = add(
+                name=f"L{layer}.h{head}.softmax",
+                kind=SOFTMAX,
+                layer=layer,
+                head=head,
+                tiles=math.ceil(b * s * s / (E.TILE_X * E.TILE_Y)),
+                cycles_per_tile=E.TILE_X,  # exp+sum over tile, parallel units
+                macs=0,
+                elems=b * s * s,
+                weight_bytes=0.0,
+                act_in_bytes=b * s * s * eb,
+                act_out_bytes=b * s * s * eb,
+                deps=(a_op,),
+                stage=2,
+            )
+            # C-OP-6: P = S V
+            sv = add(
+                name=f"L{layer}.h{head}.sv",
+                kind=MAC,
+                layer=layer,
+                head=head,
+                tiles=_tiles_matmul(b, s, hd, s),
+                cycles_per_tile=cpt,
+                macs=b * s * hd * s,
+                elems=b * s * hd,
+                weight_bytes=0.0,
+                act_in_bytes=(b * s * s + b * s * hd) * eb,
+                act_out_bytes=b * s * hd * eb,
+                deps=(sm, qkv[2]),
+                stage=3,
+                density=aa_density,
+                cycle_density=aa_cyc,
+            )
+            # C-OP-7: out proj (W_i^O in R^{h/n x h/n}; concat handled as layout)
+            o_op = add(
+                name=f"L{layer}.h{head}.o_proj",
+                kind=MAC,
+                layer=layer,
+                head=head,
+                tiles=_tiles_matmul(b, s, hd, hd),
+                cycles_per_tile=cpt,
+                macs=b * s * hd * hd,
+                elems=b * s * hd,
+                weight_bytes=hd * hd * eb * weight_density,
+                act_in_bytes=b * s * hd * eb,
+                act_out_bytes=b * s * hd * eb,
+                deps=(sv,),
+                stage=4,
+                density=mm_density,
+                cycle_density=mm_cyc,
+            )
+            head_proj_outs.append(qkv)
+            head_outs.append(o_op)
+        # C-OP-8: add & layer-norm over concat of heads + residual
+        ln1 = add(
+            name=f"L{layer}.ln1",
+            kind=LAYERNORM,
+            layer=layer,
+            head=-1,
+            tiles=math.ceil(b * s * h / (E.TILE_X * E.TILE_Y)),
+            cycles_per_tile=E.TILE_X,
+            macs=0,
+            elems=b * s * h,
+            weight_bytes=2 * h * eb,
+            act_in_bytes=2 * b * s * h * eb,
+            act_out_bytes=b * s * h * eb,
+            deps=tuple(head_outs) + (prev_out,),
+            stage=5,
+        )
+        # C-OP-9/10: FFN (GeLU fused into MAC lane output, paper Fig. 6)
+        f1 = add(
+            name=f"L{layer}.ffn1",
+            kind=MAC,
+            layer=layer,
+            head=-1,
+            tiles=_tiles_matmul(b, s, f, h),
+            cycles_per_tile=cpt,
+            macs=b * s * f * h,
+            elems=b * s * f,
+            weight_bytes=h * f * eb * weight_density,
+            act_in_bytes=b * s * h * eb,
+            act_out_bytes=b * s * f * eb,
+            deps=(ln1,),
+            stage=6,
+            density=mm_density,
+            cycle_density=mm_cyc,
+        )
+        f2 = add(
+            name=f"L{layer}.ffn2",
+            kind=MAC,
+            layer=layer,
+            head=-1,
+            tiles=_tiles_matmul(b, s, h, f),
+            cycles_per_tile=cpt,
+            macs=b * s * h * f,
+            elems=b * s * h,
+            weight_bytes=f * h * eb * weight_density,
+            act_in_bytes=b * s * f * eb,
+            act_out_bytes=b * s * h * eb,
+            deps=(f1,),
+            stage=7,
+            density=mm_density,
+            cycle_density=mm_cyc,
+        )
+        # C-OP-11: final layer-norm
+        ln2 = add(
+            name=f"L{layer}.ln2",
+            kind=LAYERNORM,
+            layer=layer,
+            head=-1,
+            tiles=math.ceil(b * s * h / (E.TILE_X * E.TILE_Y)),
+            cycles_per_tile=E.TILE_X,
+            macs=0,
+            elems=b * s * h,
+            weight_bytes=2 * h * eb,
+            act_in_bytes=(b * s * h + b * s * h) * eb,
+            act_out_bytes=b * s * h * eb,
+            deps=(f2, ln1),
+            stage=8,
+        )
+        prev_out = ln2
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Scheduling policy
+# ---------------------------------------------------------------------------
+
+
+def priority_key(op: Op, policy: str = "staggered"):
+    """Smaller = scheduled first among ready ops.
+
+    * "equal":      all heads advance in lockstep (paper Fig. 10(a)): every
+                    head runs stage s before any head starts stage s+1, so
+                    softmax units and MAC lanes alternate being idle.
+    * "staggered":  heads are strictly prioritised (head 0 first) so head 0
+                    reaches softmax while MAC lanes pick up head 1
+                    (paper Fig. 10(b)) — module classes overlap.
+    """
+    h = op.head if op.head >= 0 else 1_000_000
+    if policy == "staggered":
+        return (op.layer, h, op.stage, op.uid)
+    elif policy == "equal":
+        return (op.layer, op.stage, h, op.uid)
+    raise ValueError(f"unknown scheduling policy {policy!r}")
+
+
+def topo_check(ops: Iterable[Op]) -> None:
+    seen = set()
+    for op in ops:
+        for d in op.deps:
+            if d not in seen:
+                raise ValueError(f"op {op.name} depends on later/unknown op {d}")
+        seen.add(op.uid)

@@ -1,0 +1,49 @@
+"""SpAtten-style top-k pruning — the state-of-the-art baseline AccelTran
+compares DynaTran against (paper §II-B, §V-A).
+
+Given an attention score matrix S (rows = queries), keep the k largest
+elements per row and zero the rest.  The paper's complexity argument: a
+hardware top-k engine is O(N^3)-ish over the full attention tensor and takes
+many cycles, whereas DynaTran's compare is one cycle.  We reproduce both the
+accuracy/sparsity trade-off (bench_accuracy_sparsity) and the wall-clock
+overhead gap (bench_prune_throughput).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def topk_prune(x: Array, k: int, axis: int = -1, *, by_magnitude: bool = True) -> tuple[Array, Array]:
+    """Keep the k largest entries along ``axis``; zero the rest.
+
+    ``by_magnitude=True`` ranks by |x| (the generic pruning primitive);
+    ``False`` ranks by value (attention scores: post-softmax importance is
+    monotone in the raw score, so SpAtten keeps the k *largest* scores).
+    Returns (pruned, nz_mask).  Ties are resolved by keeping everything >= the
+    k-th rank value (matches hardware comparator semantics; may keep > k on
+    exact ties, which only ever *reduces* sparsity).
+    """
+    if k <= 0:
+        raise ValueError("k must be positive")
+    mag = jnp.abs(x) if by_magnitude else x
+    k = min(k, x.shape[axis])
+    if axis != -1 and axis != x.ndim - 1:
+        mag_m = jnp.moveaxis(mag, axis, -1)
+    else:
+        mag_m = mag
+    kth = jax.lax.top_k(mag_m, k)[0][..., -1:]
+    if axis != -1 and axis != x.ndim - 1:
+        kth = jnp.moveaxis(kth, -1, axis)
+    nz_mask = mag >= kth
+    return jnp.where(nz_mask, x, jnp.zeros_like(x)), nz_mask
+
+
+def topk_attention_probs(scores: Array, k: int) -> Array:
+    """The SpAtten operating point: top-k applied to attention *scores* before
+    softmax re-normalisation (keep-k per query row, renormalise survivors)."""
+    pruned, mask = topk_prune(scores, k, axis=-1, by_magnitude=False)
+    neg = jnp.finfo(scores.dtype).min
+    return jnp.where(mask, pruned, jnp.full_like(scores, neg))

@@ -1,0 +1,1 @@
+from .pipeline import ClassificationBatches, ClsDataConfig, LMBatches, LMDataConfig  # noqa: F401

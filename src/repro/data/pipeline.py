@@ -1,0 +1,87 @@
+"""Deterministic synthetic data pipelines.
+
+Everything is a pure function of (seed, step) so the iterator state is a
+single integer — it checkpoints with the train state and resumes exactly
+(fault tolerance requirement).  No filesystem, no external datasets.
+
+* `lm_batches`: token streams from a fixed random bigram chain — learnable
+  structure, so small-model training shows a real loss decrease.
+* `classification_batches`: a sentiment-like task (two class-conditional
+  token distributions) for the DynaTran-vs-top-k accuracy benches (the
+  offline stand-in for SST-2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LMDataConfig:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    branching: int = 8  # bigram successors per token (lower = easier)
+
+
+def _bigram_table(vocab: int, branching: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=(vocab, branching), dtype=np.int32)
+
+
+class LMBatches:
+    """Stateless-resumable LM batch source: batch(step) is deterministic."""
+
+    def __init__(self, cfg: LMDataConfig):
+        self.cfg = cfg
+        self.table = _bigram_table(cfg.vocab, cfg.branching, cfg.seed)
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        toks = np.empty((cfg.batch, cfg.seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, cfg.vocab, cfg.batch)
+        choices = rng.integers(0, cfg.branching, size=(cfg.batch, cfg.seq_len))
+        for t in range(cfg.seq_len):
+            toks[:, t + 1] = self.table[toks[:, t], choices[:, t]]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+@dataclasses.dataclass
+class ClsDataConfig:
+    vocab: int = 30522
+    seq_len: int = 64
+    batch: int = 32
+    n_classes: int = 2
+    seed: int = 0
+    signal: float = 3.0  # class-distribution separation (logit scale)
+
+
+class ClassificationBatches:
+    """Two-class token-distribution task ("synthetic SST-2")."""
+
+    def __init__(self, cfg: ClsDataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        logits = rng.normal(size=(cfg.n_classes, cfg.vocab)) * cfg.signal / np.sqrt(cfg.vocab)
+        self.probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed + 1, step))
+        labels = rng.integers(0, cfg.n_classes, cfg.batch)
+        toks = np.stack(
+            [rng.choice(cfg.vocab, size=cfg.seq_len, p=self.probs[y]) for y in labels]
+        ).astype(np.int32)
+        return {"tokens": toks, "labels": labels.astype(np.int32)}
+
+    def eval_set(self, n_batches: int = 8, offset: int = 10_000):
+        return [self.batch(offset + i) for i in range(n_batches)]

@@ -1,0 +1,4 @@
+"""repro.kernels — Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM
+tiling) for the paper's compute hot-spots, each with a jnp oracle in ref.py
+and interpret-mode validation in tests/test_kernels.py."""
+from . import ops  # noqa: F401

@@ -1,0 +1,58 @@
+"""Jitted public wrappers over the Pallas kernels with automatic fallback.
+
+`use_pallas()` decides per-call-site: on TPU backends the compiled kernels
+run natively; on CPU (this container) `interpret=True` executes the kernel
+bodies in Python for correctness validation, and the pure-jnp reference
+path is used inside large jitted graphs where interpret-mode would be
+pathologically slow.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .block_sparse_matmul import block_sparse_matmul
+from .dynatran_prune import dynatran_prune
+from .flash_attention import flash_attention
+from .rwkv6_scan import wkv6_chunked
+
+__all__ = [
+    "dynatran_prune",
+    "block_sparse_matmul",
+    "flash_attention",
+    "wkv6_chunked",
+    "ref",
+    "on_tpu",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def prune(x, tau, **kw):
+    """DynaTran prune via the kernel on TPU, reference otherwise."""
+    if on_tpu():
+        return dynatran_prune(x, tau, interpret=False, **kw)
+    return ref.dynatran_prune_ref(x, tau)
+
+
+def sparse_matmul(x, w, xm=None, wm=None, **kw):
+    if on_tpu():
+        return block_sparse_matmul(x, w, xm, wm, interpret=False, **kw)
+    return ref.block_sparse_matmul_ref(x, w, xm, wm)
+
+
+def attention(q, k, v, *, sparsity=None, taus=None, **kw):
+    if on_tpu():
+        tau = 0.0
+        if sparsity is not None and getattr(sparsity, "mode", "none") == "dynatran" and taus and "attn_probs" in getattr(sparsity, "sites", ()):
+            tau = taus["attn_probs"]  # fused DynaTran site, runtime input
+        return flash_attention(q, k, v, prune_tau=tau, interpret=False, **kw)
+    return ref.flash_attention_ref(q, k, v, sparsity=sparsity, taus=taus, **kw)
+
+
+def wkv6(r, k, v, w, u, **kw):
+    if on_tpu():
+        return wkv6_chunked(r, k, v, w, u, interpret=False, **kw)
+    return ref.wkv6_ref(r, k, v, w, u)

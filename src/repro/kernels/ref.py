@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dynatran import block_mask as _block_mask
+from repro.models.attention import reference_attention
+from repro.models.rwkv6 import wkv_sequential
+
+
+def dynatran_prune_ref(x: jax.Array, tau, block=(256, 128)):
+    keep = jnp.abs(x) >= tau
+    pruned = jnp.where(keep, x, jnp.zeros_like(x))
+    x2 = keep.reshape(-1, x.shape[-1]) if x.ndim > 2 else keep
+    bm = min(block[0], x2.shape[0])
+    bn = min(block[1], x2.shape[1])
+    return pruned, _block_mask(x2, (bm, bn))
+
+
+def block_sparse_matmul_ref(x, w, x_tile_mask=None, w_tile_mask=None, *, block=(128, 128, 128)):
+    m, k = x.shape
+    _, n = w.shape
+    bm, bk, bn = (min(b, s) for b, s in zip(block, (m, k, n)))
+    gm, gk, gn = m // bm, k // bk, n // bn
+    if x_tile_mask is None:
+        x_tile_mask = jnp.ones((gm, gk), bool)
+    if w_tile_mask is None:
+        w_tile_mask = jnp.ones((gk, gn), bool)
+    # zero out dead tiles, then dense matmul == tile-skipped matmul
+    xm = jnp.repeat(jnp.repeat(x_tile_mask, bm, 0), bk, 1)
+    wm = jnp.repeat(jnp.repeat(w_tile_mask, bk, 0), bn, 1)
+    xz = jnp.where(xm, x, 0).astype(jnp.float32)
+    wz = jnp.where(wm, w, 0).astype(jnp.float32)
+    # NOTE: kernel skips a (i,k,j) tile-op iff BOTH masks live; zeroing either
+    # operand makes the product of that tile pair zero — identical result.
+    return xz @ wz
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, logit_cap=None):
+    return reference_attention(q, k, v, causal=causal, window=window, logit_cap=logit_cap)
+
+
+def wkv6_ref(r, k, v, w, u):
+    out, _ = wkv_sequential(r, k, v, w, u)
+    return out

@@ -1,0 +1,193 @@
+import os
+
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input shape x
+mesh) cell on 512 placeholder host devices, print memory/cost analysis, and
+persist the roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Output: experiments/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.optim import OptimizerConfig  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, cfg_override=None, strategy: str | None = None, kv_cache: str | None = None):
+    """Lower + compile one cell.  Returns a result dict (raises on failure)."""
+    cfg = cfg_override or configs.get_config(arch)
+    if kv_cache:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_cache)
+    shape = SHAPES[shape_name]
+    ok, why = configs.cell_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": "multi" if multi_pod else "single", "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args = steps.make_step(cfg, mesh, shape, OptimizerConfig(), strategy)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+
+    # trip-count correction: scan bodies are visited once by cost analysis
+    n_cycles = cfg.n_cycles if cfg.family != "audio" else cfg.layers
+    trip_map = {"while": max(n_cycles, 1)}
+    colls = rl.parse_collectives(txt, loop_trip_counts=trip_map)
+
+    flops_raw = float(ca.get("flops", 0.0))
+    bytes_raw = float(ca.get("bytes accessed", 0.0))
+    # correct flops/bytes for the under-counted scan body: lower a 1-cycle
+    # model with identical settings and subtract.
+    corr = _scan_correction(cfg, shape, mesh, flops_raw, bytes_raw)
+    flops = corr["flops"]
+    hbytes = corr["bytes"]
+
+    chips = int(len(mesh.devices.reshape(-1)))
+    per_dev_bytes = float(mem.argument_size_in_bytes + mem.temp_size_in_bytes + mem.output_size_in_bytes)
+    # Pallas-kernel credit: the dry-run lowers the pure-jnp scan attention
+    # (this container cannot compile Pallas-for-TPU), whose score/prob/acc
+    # HBM round-trips the validated flash/wkv kernels keep in VMEM.  Report
+    # BOTH paths; the kernel path is the system's TPU design point.
+    credit = min(rl.kernel_credit_bytes(cfg, shape, chips), 0.98 * hbytes)
+    roof = rl.Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh="multi" if multi_pod else "single",
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=hbytes - credit,
+        collective_bytes=colls.per_chip_wire_bytes,
+        model_flops=rl.model_flops_for(cfg, shape),
+        per_device_hbm_bytes=per_dev_bytes,
+        model_min_bytes=rl.model_min_bytes_for(cfg, shape, chips),
+    )
+    from repro.launch import sharding as _sh
+    result = {
+        "strategy": strategy or _sh.default_strategy_name(cfg, shape),
+        **roof.as_dict(),
+        "hlo_bytes_scan_path": hbytes,
+        "kernel_credit_bytes": credit,
+        "t_memory_scan_path_s": hbytes / rl.TPU_V5E["hbm_bandwidth"],
+        "raw_flops_per_dev": flops_raw,
+        "raw_bytes_per_dev": bytes_raw,
+        "collective_op_counts": colls.op_counts,
+        "memory_analysis": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "fits_16gb": per_dev_bytes - int(mem.alias_size_in_bytes) < 16 * 2**30,
+        },
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "params_b": cfg.param_count() / 1e9,
+    }
+    return result
+
+
+def _scan_correction(cfg, shape, mesh, flops_raw, bytes_raw):
+    """Empirical trip-count correction (see roofline.py docstring).
+
+    F(L-scan) = F_outside + F_body  (body visited once regardless of L)
+    F(1-cycle) = F_outside + F_body
+    => F_true = F(1) + (trips - 1) * F_body, with F_body = F(1) - F_outside.
+    We approximate F_outside by lowering a 0-ish model: instead we lower a
+    2-cycle model: F(2) == F(1) numerically confirms body-once counting, and
+    F_body is obtained from a single-block compile.  To avoid a third
+    compile per cell we estimate F_body = F(1) - F_head where F_head is the
+    embedding+head+loss cost computed analytically (exact for matmul-dominant
+    graphs)."""
+    trips = cfg.n_cycles if cfg.family != "audio" else cfg.layers
+    if trips <= 1:
+        return {"flops": flops_raw, "bytes": bytes_raw}
+    chips = int(len(mesh.devices.reshape(-1)))
+    tokens = shape.tokens_per_step
+    mult = {"train": 6, "prefill": 2, "decode": 2}[shape.kind]
+    head_flops = mult * cfg.d_model * cfg.vocab * tokens / chips
+    body_flops = max(flops_raw - head_flops, 0.0)
+    body_bytes_frac = body_flops / max(flops_raw, 1.0)
+    body_bytes = bytes_raw * body_bytes_frac
+    return {
+        "flops": flops_raw + (trips - 1) * body_flops,
+        "bytes": bytes_raw + (trips - 1) * body_bytes,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str = OUT_DIR, strategy: str | None = None, kv_cache: str | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    try:
+        res = lower_cell(arch, shape_name, mesh_kind == "multi", strategy=strategy, kv_cache=kv_cache)
+    except Exception as e:  # a failure here is a bug in the system
+        res = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "error": f"{type(e).__name__}: {e}", "traceback": traceback.format_exc()[-2000:],
+        }
+    tag = f"__{strategy}" if strategy else ""
+    fname = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}{tag}.json")
+    with open(fname, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--strategy", default=None, help="override sharding strategy (fsdp|tp_sp|ep|ep_tp)")
+    ap.add_argument("--kv-cache", default=None, choices=[None, "bfloat16", "int8"], help="KV cache dtype override")
+    args = ap.parse_args()
+
+    archs = configs.list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                t0 = time.time()
+                res = run_cell(arch, shape, mesh_kind, args.out, args.strategy, args.kv_cache)
+                dt = time.time() - t0
+                if "error" in res:
+                    n_fail += 1
+                    print(f"FAIL  {arch:15s} {shape:12s} {mesh_kind:6s} {dt:6.1f}s  {res['error'][:100]}")
+                elif "skipped" in res:
+                    print(f"SKIP  {arch:15s} {shape:12s} {mesh_kind:6s} {res['skipped'][:60]}")
+                else:
+                    print(
+                        f"OK    {arch:15s} {shape:12s} {mesh_kind:6s} {dt:6.1f}s  "
+                        f"bottleneck={res['bottleneck']:10s} roofline={res['roofline_fraction']:.3f} "
+                        f"perdev={res['per_device_hbm_bytes']/2**30:.2f}GiB"
+                    )
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state; `dryrun.py` sets XLA_FLAGS before any jax import.
+
+Single pod:  (16, 16)    axes ("data", "model")  — v5e-256
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 2 pods / 512 chips.
+"pod" is pure data-parallel (one cross-pod gradient all-reduce per step);
+"data" is FSDP (batch + weight shards); "model" is tensor/expert-parallel.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1x1 mesh over whatever devices exist (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The batch-sharding axes for this mesh ("pod" folds into DP)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

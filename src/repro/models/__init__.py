@@ -1,0 +1,2 @@
+"""repro.models — the architecture zoo (pure JAX, init/apply functional)."""
+from . import attention, bert, kvcache, layers, moe, rwkv6, ssm, transformer, whisper, zoo  # noqa: F401

@@ -1,0 +1,261 @@
+"""Attention variants: flash-style chunked full attention, block-banded
+sliding-window attention, decode attention over a KV cache, and the exact
+(materialised) reference used by small models and the DynaTran accuracy
+benches.
+
+All functions take q/k/v of shape [B, S, H, D] / [B, Skv, Hkv, D] with
+GQA (H a multiple of Hkv) handled by logical head grouping — no materialised
+K/V repetition, the einsum carries the group axis, which is also what the
+TPU wants (smaller KV tiles, fewer HBM bytes).
+
+DynaTran hooks: ``sparsity`` + ``taus`` thread through so attention
+probabilities (site "attn_probs") can be threshold-pruned — exactly on the
+reference path; on the chunked path pruning is applied to chunk-local
+normalised probabilities (documented approximation; conservative for the
+running-max chunks).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dynatran import SparsityConfig, site_prune
+from repro.core.topk import topk_attention_probs
+from .layers import softcap as _softcap
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _group_heads(q: Array, n_kv: int) -> Array:
+    """[B,S,H,D] -> [B,S,Hkv,G,D] with G = H // n_kv."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+# ---------------------------------------------------------------------------
+# Exact reference attention (materialises probabilities) — BERT family +
+# oracle for kernels/tests.  Supports DynaTran and top-k on probabilities.
+# ---------------------------------------------------------------------------
+
+
+def reference_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    scale: float | None = None,
+    bias: Array | None = None,
+    sparsity: SparsityConfig | None = None,
+    taus=None,
+) -> Array:
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    qg = _group_heads(q, hkv)
+    scale = scale if scale is not None else d**-0.5
+    scores = jnp.einsum("bsngd,btnd->bngst", qg.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    scores = _softcap(scores, logit_cap)
+    if bias is not None:
+        scores = scores + bias
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos + (skv - sq)
+    if window is not None and window > 0:
+        mask &= kpos > qpos + (skv - sq) - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    if sparsity is not None and sparsity.mode == "topk":
+        scores = topk_attention_probs(scores, sparsity.topk_k)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if sparsity is not None and sparsity.mode == "dynatran" and taus is not None and "attn_probs" in sparsity.sites:
+        probs = site_prune(probs, "attn_probs", sparsity, taus)
+        probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)  # renormalise survivors
+    out = jnp.einsum("bngst,btnd->bsngd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (scan over KV chunks, online softmax).
+# Peak memory O(S * chunk) instead of O(S^2) — this is what lets the
+# prefill_32k cells lower without a 32k x 32k score tensor per head.
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    scale: float | None = None,
+    chunk_q: int = 512,
+    chunk_k: int = 512,
+    sparsity: SparsityConfig | None = None,
+    taus=None,
+) -> Array:
+    """Double-scan flash attention: outer scan over q chunks, inner scan over
+    kv chunks with online softmax; both bodies checkpointed so backward
+    recomputes chunk-locally (peak memory O(chunk^2), not O(S^2) or
+    O(S x chunk x layers)).  Supports causal + sliding-window masking."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    scale = scale if scale is not None else d**-0.5
+    cq, ck = min(chunk_q, sq), min(chunk_k, skv)
+    nq, nk = -(-sq // cq), -(-skv // ck)
+    qpad, kpad = nq * cq - sq, nk * ck - skv
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    qg = _group_heads(q, hkv).astype(jnp.float32) * scale  # [B, nq*cq, Hkv, G, D]
+    qc = qg.reshape(b, nq, cq, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, ck, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, ck, hkv, d).transpose(1, 0, 2, 3, 4)
+    offset = skv - sq  # query absolute position offset
+
+    def kv_body(carry, xs, qblk, qi):
+        m, l, acc = carry  # [B,Hkv,G,cq], [B,Hkv,G,cq], [B,cq,Hkv,G,D]
+        ki, kblk, vblk = xs
+        s = jnp.einsum("bsngd,btnd->bngst", qblk, kblk.astype(jnp.float32))  # [B,Hkv,G,cq,ck]
+        if logit_cap is not None and logit_cap > 0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        qpos = offset + qi * cq + jnp.arange(cq)
+        kpos = ki * ck + jnp.arange(ck)
+        valid = kpos[None, :] < skv
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        if window is not None and window > 0:
+            valid = valid & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        if sparsity is not None and sparsity.mode == "dynatran" and taus is not None and "attn_probs" in sparsity.sites:
+            p_norm = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-9)
+            p = jnp.where(jnp.abs(p_norm) >= taus["attn_probs"], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+            "bngst,btnd->bsngd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l, acc), ()
+
+    def q_body(_, xs):
+        qi, qblk = xs
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, cq, hkv, g, d), jnp.float32)
+        inner = jax.checkpoint(
+            lambda c, xs_: kv_body(c, xs_, qblk, qi),
+            policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=True,
+        )
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-9).transpose(0, 3, 1, 2)[..., None]
+        return (), out  # [B,cq,Hkv,G,D]
+
+    qb = jax.checkpoint(q_body, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=True)
+    _, outs = jax.lax.scan(qb, (), (jnp.arange(nq), qc))  # [nq,B,cq,Hkv,G,D]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * cq, h, d)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-banded sliding-window attention: cost O(S * W) not O(S^2).
+# Queries are blocked by W; each block attends to (previous, current) key
+# blocks with an in-band mask — the standard banded decomposition.
+# ---------------------------------------------------------------------------
+
+
+def sliding_window_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    window: int,
+    logit_cap: float | None = None,
+    scale: float | None = None,
+    sparsity: SparsityConfig | None = None,
+    taus=None,
+) -> Array:
+    b, s, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if s != skv:
+        raise ValueError("sliding_window_attention is the self-attention prefill path (s == skv)")
+    g = h // hkv
+    scale = scale if scale is not None else d**-0.5
+    w = window
+    nb = -(-s // w)
+    pad = nb * w - s
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = _group_heads(qp, hkv).reshape(b, nb, w, hkv, g, d).astype(jnp.float32) * scale
+    kb = kp.reshape(b, nb, w, hkv, d)
+    vb = vp.reshape(b, nb, w, hkv, d)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # [B,nb,2w,Hkv,D]
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    scores = jnp.einsum("bcsngd,bctnd->bcngst", qb, k2.astype(jnp.float32))  # [B,nb,Hkv,G,w,2w]
+    scores = _softcap(scores, logit_cap)
+    qpos = jnp.arange(w)[:, None]  # position within block
+    kpos = jnp.arange(2 * w)[None, :] - w  # relative to block start
+    inband = (kpos <= qpos) & (kpos > qpos - w)
+    # first block has no previous keys
+    first = (jnp.arange(nb) == 0)[:, None, None]
+    valid_prev = ~((kpos[None] < 0) & first)
+    mask = inband[None] & valid_prev  # [nb, w, 2w]
+    scores = jnp.where(mask[None, :, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if sparsity is not None and sparsity.mode == "dynatran" and taus is not None and "attn_probs" in sparsity.sites:
+        probs = site_prune(probs, "attn_probs", sparsity, taus)
+        probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    out = jnp.einsum("bcngst,bctnd->bcsngd", probs, v2.astype(jnp.float32))
+    out = out.reshape(b, nb * w, h, d)[:, :s]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention: one new query per sequence against the KV cache.
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: Array,  # [B, 1, H, D]
+    k_cache: Array,  # [B, T, Hkv, D]
+    v_cache: Array,
+    cache_len: Array | int,  # valid prefix length (or per-batch [B])
+    *,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    scale: float | None = None,
+) -> Array:
+    b, _, h, d = q.shape
+    _, t, hkv, _ = k_cache.shape
+    g = h // hkv
+    scale = scale if scale is not None else d**-0.5
+    qg = _group_heads(q, hkv).astype(jnp.float32) * scale  # [B,1,Hkv,G,D]
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k_cache.astype(jnp.float32))  # [B,Hkv,G,1,T]
+    scores = _softcap(scores, logit_cap)
+    pos = jnp.arange(t)
+    if isinstance(cache_len, int):
+        cache_len = jnp.full((b,), cache_len)
+    valid = pos[None, :] < cache_len[:, None]  # [B,T]
+    if window is not None and window > 0:
+        valid &= pos[None, :] >= (cache_len[:, None] - window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

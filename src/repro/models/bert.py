@@ -1,0 +1,116 @@
+"""BERT-family encoder — the paper's own model class (BERT-Tiny/Mini/Base).
+
+Uses the *exact* (materialised-probability) attention path so DynaTran and
+top-k pruning apply with the paper's precise semantics; used by the accuracy
+vs. sparsity benchmarks (Figs. 11/12/14) and by the simulator op graphs.
+Includes a classification head (SST-2-like tasks) and an MLM head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dynatran import SparsityConfig, site_prune
+from .attention import reference_attention
+from .layers import dense_init, embed_init, gelu, layer_norm, layer_norm_init
+
+Array = jax.Array
+
+
+def bert_config(name: str) -> ModelConfig:
+    dims = {
+        "bert-tiny": (2, 128, 2, 512),
+        "bert-mini": (4, 256, 4, 1024),
+        "bert-base": (12, 768, 12, 3072),
+    }[name]
+    L, D, H, F = dims
+    return ModelConfig(
+        name=name, family="encoder", layers=L, d_model=D, heads=H, kv_heads=H, d_ff=F,
+        vocab=30522, norm="ln", act="gelu", glu=False, pos_kind="learned",
+        max_positions=512, tie_embeddings=True,
+    )
+
+
+def init_params(key: Array, cfg: ModelConfig, n_classes: int = 2) -> dict:
+    D, F, H, hd = cfg.d_model, cfg.d_ff, cfg.heads, cfg.hd
+    ks = iter(jax.random.split(key, 6 + 6 * cfg.layers))
+
+    def block(k):
+        k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
+        return {
+            "wq": dense_init(k1, (D, H, hd)),
+            "wk": dense_init(k2, (D, H, hd)),
+            "wv": dense_init(k3, (D, H, hd)),
+            "wo": dense_init(k4, (H, hd, D)),
+            "ln1": layer_norm_init(D),
+            "mlp": {"w_up": dense_init(k5, (D, F)), "w_down": dense_init(k6, (F, D))},
+            "ln2": layer_norm_init(D),
+        }
+
+    blocks = [block(jax.random.fold_in(key, i)) for i in range(cfg.layers)]
+    return {
+        "embed": embed_init(next(ks), cfg.vocab, D),
+        "pos_embed": embed_init(next(ks), cfg.max_positions, D),
+        "ln_embed": layer_norm_init(D),
+        "blocks": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks),
+        "cls_head": dense_init(next(ks), (D, n_classes)),
+    }
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    taus=None,
+    sparsity: SparsityConfig | None = None,
+) -> Array:
+    """Returns pooled classification logits [B, n_classes]."""
+    sp = sparsity if sparsity is not None else cfg.sparsity
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["pos_embed"][jnp.arange(S)]
+    h = layer_norm(params["ln_embed"], h)
+
+    def body(h, p):
+        x = h
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        ao = reference_attention(q, k, v, causal=False, sparsity=sp, taus=taus)
+        ao = site_prune(ao, "attn_out", sp, taus)
+        h = layer_norm(p["ln1"], h + jnp.einsum("bshk,hkd->bsd", ao, p["wo"]))
+        mid = gelu(h @ p["mlp"]["w_up"])
+        mid = site_prune(mid, "ffn_act", sp, taus)
+        h = layer_norm(p["ln2"], h + mid @ p["mlp"]["w_down"])
+        return h, ()
+
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    pooled = h[:, 0]  # [CLS]
+    return pooled @ params["cls_head"]
+
+
+def capture_activations(params: dict, cfg: ModelConfig, tokens: Array) -> dict[str, list]:
+    """Run dense and collect per-site activation samples for transfer-curve
+    profiling (the offline step of DynaTran)."""
+    sites: dict[str, list] = {"ffn_act": [], "attn_probs": [], "attn_out": []}
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["pos_embed"][jnp.arange(S)]
+    h = layer_norm(params["ln_embed"], h)
+    L = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+    for i in range(L):
+        p = jax.tree_util.tree_map(lambda x: x[i], params["blocks"])
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+        hd = q.shape[-1]
+        scores = jnp.einsum("bshk,bthk->bhst", q * hd**-0.5, k)
+        probs = jax.nn.softmax(scores, -1)
+        sites["attn_probs"].append(probs)
+        ao = jnp.einsum("bhst,bthk->bshk", probs, v)
+        sites["attn_out"].append(ao)
+        h = layer_norm(p["ln1"], h + jnp.einsum("bshk,hkd->bsd", ao, p["wo"]))
+        mid = gelu(h @ p["mlp"]["w_up"])
+        sites["ffn_act"].append(mid)
+        h = layer_norm(p["ln2"], h + mid @ p["mlp"]["w_down"])
+    return sites

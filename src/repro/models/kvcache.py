@@ -1,0 +1,59 @@
+"""KV / SSM state caches for serving.
+
+Layout: stacked over layers (leading L axis) so the decode step scans layers
+exactly like training does.  Attention caches are [L, B, T, Hkv, D]; for
+all-sliding-window models T is the window size (ring buffer); SSM/hybrid
+models additionally carry recurrent state.
+
+Sharding: T (sequence) shards over "data" when batch is too small to fill it
+(the long_500k decode cells), Hkv over "model" — see launch/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DecodeState:
+    """Everything the serve step carries between tokens."""
+
+    k: Array | None  # [L, B, T, Hkv, D] (None for attention-free models)
+    v: Array | None
+    ssm: Any  # model-specific recurrent state pytree (or None)
+    length: Array  # [B] int32: tokens currently in the cache
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.ssm, self.length), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_attention_cache(
+    layers: int, batch: int, max_len: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16
+) -> tuple[Array, Array]:
+    shape = (layers, batch, max_len, n_kv, head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def update_layer_cache(k_cache: Array, v_cache: Array, k_new: Array, v_new: Array, length: Array, *, ring: bool) -> tuple[Array, Array]:
+    """Insert one step's K/V ([B, 1, Hkv, D]) at position ``length`` (per
+    batch row).  ``ring=True`` wraps modulo T (sliding-window models)."""
+    b, t = k_cache.shape[0], k_cache.shape[1]
+    pos = length % t if ring else length
+    rows = jnp.arange(b)
+    k_cache = k_cache.at[rows, pos].set(k_new[:, 0])
+    v_cache = v_cache.at[rows, pos].set(v_new[:, 0])
+    return k_cache, v_cache
+
+
+def cache_bytes(layers: int, batch: int, max_len: int, n_kv: int, head_dim: int, elem_bytes: int = 2) -> int:
+    return 2 * layers * batch * max_len * n_kv * head_dim * elem_bytes

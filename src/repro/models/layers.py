@@ -1,0 +1,148 @@
+"""Common transformer layers — pure JAX, functional, init/apply split.
+
+Parameters are plain dict pytrees so layers can be stacked (leading layer
+axis) and scanned with ``jax.lax.scan`` — the production pattern that keeps
+HLO size and compile time independent of depth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, shape: tuple[int, ...], scale: float | None = None, dtype=jnp.float32) -> Array:
+    """Truncated-normal fan-in init (shape[0] or product of input dims)."""
+    fan_in = shape[0] if len(shape) == 2 else math.prod(shape[:-1])
+    if len(shape) == 3:  # [d_model, heads, head_dim] style
+        fan_in = shape[0]
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, dim: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * (1.0 / math.sqrt(dim))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_init(dim: int) -> PyTree:
+    return {"scale": jnp.zeros((dim,), jnp.float32)}  # gemma-style (1 + scale)
+
+
+def rms_norm(params: PyTree, x: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"])).astype(dtype)
+
+
+def layer_norm_init(dim: int) -> PyTree:
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layer_norm(params: PyTree, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rms":
+        return rms_norm_init, rms_norm
+    if kind == "ln":
+        return layer_norm_init, layer_norm
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# activations / miscellany
+# ---------------------------------------------------------------------------
+
+
+def gelu(x: Array) -> Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x: Array) -> Array:
+    return jax.nn.silu(x)
+
+
+ACTIVATIONS = {"gelu": gelu, "silu": silu, "relu": jax.nn.relu}
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None or cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    sin = jnp.sin(angles)[..., None, :]  # [..., S, 1, D/2]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions_3d: Array, sections: tuple[int, int, int], theta: float = 1_000_000.0) -> Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions_3d: [..., 3, S] (temporal, height, width position ids — for pure
+    text all three are equal).  ``sections`` partitions the D/2 frequency
+    slots among (t, h, w); each frequency slot rotates by the position id of
+    its section.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to head_dim/2 = {half}")
+    freqs = rope_freqs(D, theta)  # [half]
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)  # [half]
+    # [..., S, half]: pos_for_slot[..., s, f] = positions_3d[..., sec_ids[f], s]
+    p = jnp.moveaxis(positions_3d.astype(jnp.float32), -2, -1)  # [..., S, 3]
+    pos_slot = jnp.take(p, sec_ids, axis=-1)  # [..., S, half]
+    angles = pos_slot * freqs  # [..., S, half]
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> Array:
+    """Whisper-style sinusoidal embeddings [length, dim]."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim * math.log(10000.0))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,316 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent per-channel decay
+(arXiv:2404.05892).
+
+Time-mix: per head h with head dim N, state S ∈ R^{N×N}:
+
+    out_t = r_t · (S_{t-1} + (u ⊙ k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+with w_t = exp(-exp(w0 + lora_w(x_w,t))) data-dependent (the Finch novelty),
+and data-dependent token-shift (ddlerp) producing the r/k/v/w/g inputs.
+Channel-mix is the squared-ReLU FFN with token shift.
+
+The sequential `lax.scan` over tokens is the correctness oracle; a chunked
+(block-parallel) formulation — the TPU performance path — lives in
+`repro.kernels.rwkv6_scan` and is validated against this module.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dynatran import site_prune
+from repro.launch.sharding import constrain
+from .layers import dense_init, embed_init, layer_norm, layer_norm_init
+
+Array = jax.Array
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def _block_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = cfg.heads, cfg.hd
+    ks = iter(jax.random.split(key, 16))
+    return {
+        "ln1": layer_norm_init(D),
+        "ln2": layer_norm_init(D),
+        "tm": {
+            "mu_x": jnp.zeros((D,), jnp.float32) + 0.5,
+            "mu": jnp.zeros((5, D), jnp.float32) + 0.5,  # r,k,v,w,g ddlerp bases
+            "mix_w1": dense_init(next(ks), (D, 5 * LORA_MIX), dtype=dtype),
+            "mix_w2": dense_init(next(ks), (5, LORA_MIX, D), scale=0.01, dtype=dtype),
+            "w0": jnp.full((D,), -2.0, jnp.float32),  # decay base (pre-double-exp)
+            "w_lora1": dense_init(next(ks), (D, LORA_DECAY), dtype=dtype),
+            "w_lora2": dense_init(next(ks), (LORA_DECAY, D), scale=0.01, dtype=dtype),
+            "u": jnp.full((H, hd), 0.5, jnp.float32),  # bonus
+            "wr": dense_init(next(ks), (D, D), dtype=dtype),
+            "wk": dense_init(next(ks), (D, D), dtype=dtype),
+            "wv": dense_init(next(ks), (D, D), dtype=dtype),
+            "wg": dense_init(next(ks), (D, D), dtype=dtype),
+            "wo": dense_init(next(ks), (D, D), dtype=dtype),
+            "gn": {"scale": jnp.ones((D,), jnp.float32), "bias": jnp.zeros((D,), jnp.float32)},
+        },
+        "cm": {
+            "mu_k": jnp.zeros((D,), jnp.float32) + 0.5,
+            "mu_r": jnp.zeros((D,), jnp.float32) + 0.5,
+            "wk": dense_init(next(ks), (D, F), dtype=dtype),
+            "wv": dense_init(next(ks), (F, D), dtype=dtype),
+            "wr": dense_init(next(ks), (D, D), dtype=dtype),
+        },
+    }
+
+
+def init_params(key: Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kemb, khead, kblocks = jax.random.split(key, 3)
+    blocks = [_block_init(k, cfg, dtype) for k in jax.random.split(kblocks, cfg.layers)]
+    return {
+        "embed": embed_init(kemb, cfg.vocab_padded, cfg.d_model, dtype=dtype),
+        "ln_in": layer_norm_init(cfg.d_model),
+        "final_norm": layer_norm_init(cfg.d_model),
+        "lm_head": dense_init(khead, (cfg.d_model, cfg.vocab_padded), dtype=dtype),
+        "blocks": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks),
+    }
+
+
+def _shift(x: Array, prev: Array | None = None) -> Array:
+    """Token shift: x_{t-1} (zeros / `prev` at t=0).  x: [B,S,D]."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None] if prev.ndim == 2 else prev
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(tm: dict, x: Array, xprev: Array):
+    """Data-dependent lerp -> the five mixed inputs (r,k,v,w,g)."""
+    xx = xprev - x
+    xxx = (x + xx * tm["mu_x"]).astype(x.dtype)
+    m = jnp.tanh(xxx @ tm["mix_w1"].astype(x.dtype))  # [B,S,5*LM]
+    B, S, _ = m.shape
+    m = m.reshape(B, S, 5, LORA_MIX)
+    lora = jnp.einsum("bsfl,fld->bsfd", m, tm["mix_w2"].astype(x.dtype)).astype(x.dtype)
+    # stay in the activation dtype: the f32 [B,S,5,D] intermediate and its
+    # cotangent cost ~0.3 GiB x 90 instances on rwkv6-7b
+    mixed = x[:, :, None] + xx[:, :, None] * (tm["mu"].astype(x.dtype) + lora)
+    return [mixed[:, :, i].astype(x.dtype) for i in range(5)]
+
+
+def wkv_sequential(r: Array, k: Array, v: Array, w: Array, u: Array, s0: Array | None = None):
+    """Reference WKV-6 recurrence.
+
+    r,k,v,w: [B,S,H,N]; u: [H,N]; s0: [B,H,N,N] (key-major: S[i,j] pairs k_i
+    with v_j).  Returns (out [B,S,H,N], s_final).
+    """
+    B, S, H, N = r.shape
+    s = s0 if s0 is not None else jnp.zeros((B, H, N, N), jnp.float32)
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(s, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], wf[:, t]  # [B,H,N]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,N,N]
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    s, outs = jax.lax.scan(step, s, jnp.arange(S))
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), s
+
+
+def wkv_chunked(
+    r: Array, k: Array, v: Array, w: Array, u: Array, s0: Array | None = None, chunk: int = 64
+) -> tuple[Array, Array]:
+    """Block-parallel WKV-6 (same math as kernels/rwkv6_scan, pure jnp).
+
+    The per-token scan moves the [B,H,N,N] f32 state through HBM once per
+    token (measured 225 s memory-roofline on rwkv6-7b train_4k); chunking
+    moves it once per C tokens and turns the inner work into dense [C,N] and
+    [C,C] matmuls (MXU-shaped).  Within-chunk exponentials are normalised by
+    the chunk-final decay so both matmul factors stay bounded (the kernel's
+    stabilisation).
+    """
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        r, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    T = S + pad
+    nC = T // C
+    # keep the scanned operands in their storage dtype; upcast per chunk in
+    # the body (an f32 stack of r/k/v/w costs 4 x 1 GiB/dev on rwkv6-7b)
+    resh = lambda a: a.reshape(B, nC, C, H, N).transpose(1, 0, 3, 2, 4)  # [nC,B,H,C,N]
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+    uf = u.astype(jnp.float32)  # [H, N]
+    eye = jnp.eye(C, dtype=jnp.float32)
+    s_init = (s0 if s0 is not None else jnp.zeros((B, H, N, N), jnp.float32)).astype(jnp.float32)
+
+    def intra_a(rb, kb, c_inc, c_exc):
+        """Strict-lower-triangular A[t,s] = sum_n r_t k_s exp(c_exc[t]-c_inc[s])
+        by recursive boundary splitting: across a split at b, the exponent
+        factors as (c_exc[t]-c_inc[b-1]) + (c_inc[b-1]-c_inc[s]), BOTH <= 0 —
+        no overflow regardless of decay strength.  Base case uses the
+        chunk-final factoring (bounded by the base width's total decay)."""
+        Cb = rb.shape[2]
+        if Cb <= 16:
+            c_fin = c_inc[:, :, -1:, :]
+            a = jnp.einsum(
+                "bhtn,bhsn->bhts",
+                rb * jnp.exp(c_exc - c_fin),
+                kb * jnp.exp(c_fin - c_inc),
+            )
+            tri_b = jnp.tril(jnp.ones((Cb, Cb), jnp.float32), k=-1)
+            return a * tri_b
+        h = Cb // 2
+        a_ll = intra_a(rb[:, :, :h], kb[:, :, :h], c_inc[:, :, :h], c_exc[:, :, :h])
+        # right half: re-zero the decay accumulators at the boundary
+        c_bd = c_inc[:, :, h - 1 : h, :]
+        a_rr = intra_a(rb[:, :, h:], kb[:, :, h:], c_inc[:, :, h:] - c_bd, c_exc[:, :, h:] - c_bd)
+        # cross block (t in right, s in left): both factors <= 1
+        a_rl = jnp.einsum(
+            "bhtn,bhsn->bhts",
+            rb[:, :, h:] * jnp.exp(c_exc[:, :, h:] - c_bd),
+            kb[:, :, :h] * jnp.exp(c_bd - c_inc[:, :, :h]),
+        )
+        top = jnp.concatenate([a_ll, jnp.zeros_like(a_rl.swapaxes(-1, -2))], axis=-1)
+        bot = jnp.concatenate([a_rl, a_rr], axis=-1)
+        return jnp.concatenate([top, bot], axis=-2)
+
+    def chunk_step(s, xs):
+        rb, kb, vb, wb = (a.astype(jnp.float32) for a in xs)  # [B,H,C,N]
+        lw = jnp.log(jnp.maximum(wb, 1e-38))  # <= 0
+        c_inc = jnp.cumsum(lw, axis=2)
+        c_exc = c_inc - lw
+        c_fin = c_inc[:, :, -1:, :]
+        r_dec = rb * jnp.exp(c_exc)
+        # inter-chunk: query the carried state
+        out = jnp.einsum("bhtn,bhnm->bhtm", r_dec, s)
+        # intra-chunk "attention" (overflow-safe boundary-split recursion)
+        a = intra_a(rb, kb, c_inc, c_exc)
+        bonus = jnp.sum(rb * uf[None, :, None, :] * kb, axis=-1)  # [B,H,C]
+        a = a + bonus[..., None] * eye
+        out = out + jnp.einsum("bhts,bhsm->bhtm", a, vb)
+        # state update: S' = diag(pw_C) S + sum_s diag(pw_C / pw_s) k_s v_s^T
+        pw_c = jnp.exp(c_fin[:, :, 0, :])  # [B,H,N]
+        k_scaled = kb * jnp.exp(c_fin - c_inc)
+        s = pw_c[..., :, None] * s + jnp.einsum("bhsn,bhsm->bhnm", k_scaled, vb)
+        return s, out
+
+    # chunk-local remat: without it the inner scan stacks every chunk's f32
+    # intermediates for backward (measured 117 x 1 GiB buffers)
+    chunk_step = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=True
+    )
+    s_fin, outs = jax.lax.scan(chunk_step, s_init, (rc, kc, vc, wc))  # [nC,B,H,C,N]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, N)[:, :S]
+    return out.astype(r.dtype), s_fin
+
+
+def time_mix(tm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None):
+    B, S, D = x.shape
+    H, N = cfg.heads, cfg.hd
+    xprev = _shift(x, None if state is None else state["x_tm"])
+    xr, xk, xv, xw, xg = _ddlerp(tm, x, xprev)
+    r = (xr @ tm["wr"].astype(x.dtype)).reshape(B, S, H, N)
+    k = (xk @ tm["wk"].astype(x.dtype)).reshape(B, S, H, N)
+    v = (xv @ tm["wv"].astype(x.dtype)).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ tm["wg"].astype(x.dtype))
+    dec = tm["w0"] + jnp.tanh(xw @ tm["w_lora1"].astype(x.dtype)).astype(jnp.float32) @ tm[
+        "w_lora2"
+    ].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, H, N)  # in (0,1), data-dependent
+    s0 = None if state is None else state["s"]
+    if S > 1:
+        out, s_new = wkv_chunked(r, k, v, w, tm["u"], s0)
+    else:
+        out, s_new = wkv_sequential(r, k, v, w, tm["u"], s0)
+    out = out.reshape(B, S, D)
+    # per-head group norm
+    mu = out.reshape(B, S, H, N).astype(jnp.float32)
+    mu = (mu - mu.mean(-1, keepdims=True)) * jax.lax.rsqrt(mu.var(-1, keepdims=True) + 1e-5)
+    out = (mu.reshape(B, S, D) * tm["gn"]["scale"] + tm["gn"]["bias"]).astype(x.dtype)
+    out = out * g
+    out = site_prune(out, "attn_out", cfg.sparsity, taus)
+    new_state = {"x_tm": x[:, -1], "s": s_new}
+    return out @ tm["wo"].astype(x.dtype), new_state
+
+
+def channel_mix(cm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None):
+    xprev = _shift(x, None if state is None else state["x_cm"])
+    xx = xprev - x
+    xk = (x + xx * cm["mu_k"]).astype(x.dtype)
+    xr = (x + xx * cm["mu_r"]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ cm["wk"].astype(x.dtype)))
+    k = site_prune(k, "ffn_act", cfg.sparsity, taus)
+    out = jax.nn.sigmoid(xr @ cm["wr"].astype(x.dtype)) * (k @ cm["wv"].astype(x.dtype))
+    return out, {"x_cm": x[:, -1]}
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array, *, taus=None, last_only: bool = False, **_unused) -> tuple[Array, dict]:
+    h = constrain(layer_norm(params["ln_in"], params["embed"][tokens]), "residual")
+
+    def body(h, p):
+        a, _ = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), None, taus)
+        h = h + a
+        c, _ = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), None, taus)
+        h = h + c
+        return constrain(h, "residual"), ()
+
+    if cfg.remat != "none":
+        # "full" saves only the carry per layer (the dots-saveable policy
+        # stacked 40+ [L,B,S,D] f32 dot outputs: 32 GiB each on rwkv6-7b)
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat == "save_dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(body, policy=policy, prevent_cse=True)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    if last_only:
+        h = h[:, -1:]
+    h = layer_norm(params["final_norm"], h)
+    logits = (h @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    return logits, {}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    from .kvcache import DecodeState
+
+    L, D, H, N = cfg.layers, cfg.d_model, cfg.heads, cfg.hd
+    ssm = {
+        "x_tm": jnp.zeros((L, batch, D), dtype),
+        "x_cm": jnp.zeros((L, batch, D), dtype),
+        "s": jnp.zeros((L, batch, H, N, N), jnp.float32),
+    }
+    return DecodeState(k=None, v=None, ssm=ssm, length=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ModelConfig, state, tokens: Array, *, taus=None, **_unused):
+    from .kvcache import DecodeState
+
+    h = layer_norm(params["ln_in"], params["embed"][tokens])  # [B,1,D]
+
+    def body(h, xs):
+        p, x_tm, x_cm, s = xs
+        a, st_tm = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, taus)
+        h = h + a
+        c, st_cm = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, taus)
+        h = h + c
+        return h, (st_tm["x_tm"], st_cm["x_cm"], st_tm["s"])
+
+    xs = (params["blocks"], state.ssm["x_tm"], state.ssm["x_cm"], state.ssm["s"])
+    h, (x_tm, x_cm, s) = jax.lax.scan(body, h, xs)
+    h = layer_norm(params["final_norm"], h)
+    logits = (h @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    new_state = DecodeState(k=None, v=None, ssm={"x_tm": x_tm, "x_cm": x_cm, "s": s}, length=state.length + 1)
+    return logits[:, 0], new_state

@@ -1,0 +1,120 @@
+"""Selective SSM (Mamba-style) mixer — the SSM half of Hymba's parallel
+attention+SSM heads (ssm_state N=16).
+
+Prefill/train runs a `lax.scan` over the sequence with state
+[B, d_inner, N]; decode advances one step from cached (conv window, ssm
+state).  A chunked/associative-scan formulation is the TPU performance
+upgrade and is tracked as a §Perf candidate (EXPERIMENTS.md); the sequential
+form is the correctness oracle and compiles compactly under the layer scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from .layers import dense_init
+
+Array = jax.Array
+
+
+def ssm_init(key: Array, d_model: int, d_inner: int, n_state: int, conv: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype=dtype),
+        "conv_w": dense_init(ks[1], (conv, d_inner), scale=0.5, dtype=dtype),  # depthwise
+        "x_proj": dense_init(ks[2], (d_inner, 2 * n_state + 1), dtype=dtype),  # -> dt, B, C
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "dt_proj": dense_init(ks[3], (1, d_inner), dtype=dtype),  # broadcast dt scalar -> channels
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n_state + 1, dtype=jnp.float32), (d_inner, 1))),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _causal_depthwise_conv(x: Array, w: Array, init_window: Array | None = None) -> Array:
+    """x: [B, S, C]; w: [K, C] causal depthwise conv.  ``init_window`` is the
+    [B, K-1, C] left context (decode cache), zeros otherwise."""
+    K = w.shape[0]
+    if init_window is None:
+        init_window = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_window, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4); unrolled taps
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    return out
+
+
+def ssm_mix(params: dict, x: Array, state: dict | None = None) -> tuple[Array, dict]:
+    """x: [B, S, D] -> (y [B, S, D], new_state).
+
+    state = {"h": [B, d_inner, N], "conv": [B, K-1, d_inner]} for decode
+    continuation; pass None for a fresh prefill.
+    """
+    B, S, D = x.shape
+    di = params["out_proj"].shape[0]
+    N = (params["x_proj"].shape[1] - 1) // 2
+    K = params["conv_w"].shape[0]
+    dt_f32 = x.dtype
+
+    xz = x @ params["in_proj"].astype(x.dtype)  # [B,S,2di]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, z = constrain(xs, "ssm_inner"), constrain(z, "ssm_inner")
+    conv_ctx = None if state is None else state["conv"]
+    xs = jax.nn.silu(_causal_depthwise_conv(xs, params["conv_w"].astype(x.dtype), conv_ctx))
+    new_conv = jnp.concatenate(
+        [conv_ctx if conv_ctx is not None else jnp.zeros((B, K - 1, di), x.dtype), xs], axis=1
+    )[:, -(K - 1) :]
+
+    dbc = xs @ params["x_proj"].astype(x.dtype)  # [B,S,2N+1]
+    dt_raw, Bc, Cc = jnp.split(dbc.astype(jnp.float32), [1, 1 + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ params["dt_proj"].astype(jnp.float32) + params["dt_bias"])  # [B,S,di]
+    A = -jnp.exp(params["a_log"])  # [di, N]
+    da = constrain(jnp.exp(dt[..., None] * A), "ssm_inner")  # [B,S,di,N]
+    dbx = constrain(
+        dt[..., None] * Bc[:, :, None, :] * xs.astype(jnp.float32)[..., None], "ssm_inner"
+    )  # [B,S,di,N]
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, di, N), jnp.float32)
+    h0 = constrain(h0, "ssm_state")
+
+    if S == 1:
+        h_final = da[:, 0] * h0 + dbx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h_final, Cc[:, 0])[:, None]
+    else:
+        # chunked scan: carry the state across C-token chunks and remat the
+        # per-token inner scan chunk-locally — the naked scan stacks every
+        # h_t [B,di,N] f32 for backward (13.4 GiB/layer on hymba-1.5b)
+        CH = 64
+        pad = (-S) % CH
+        dap = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        dbxp = jnp.pad(dbx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ccp = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        nC = (S + pad) // CH
+        swap = lambda a: jnp.moveaxis(a.reshape(B, nC, CH, *a.shape[2:]), 1, 0)
+        dac, dbxc, ccc = swap(dap), swap(dbxp), swap(Ccp)
+
+        def chunk(h, xs_):
+            dab, dbxb, ccb = xs_  # [B,CH,...]
+
+            def step(hh, t):
+                hh = dab[:, t] * hh + dbxb[:, t]
+                return hh, jnp.einsum("bdn,bn->bd", hh, ccb[:, t])
+
+            h, ys = jax.lax.scan(step, h, jnp.arange(CH))
+            return h, jnp.moveaxis(ys, 0, 1)  # [B,CH,di]
+
+        chunk = jax.checkpoint(chunk, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=True)
+        h_final, ys = jax.lax.scan(chunk, h0, (dac, dbxc, ccc))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S + pad, di)[:, :S]
+    y = y + xs.astype(jnp.float32) * params["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ params["out_proj"].astype(x.dtype)
+    return out, {"h": h_final, "conv": new_conv}
+
+
+def ssm_state_init(batch: int, d_inner: int, n_state: int, conv: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_inner, n_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv - 1, d_inner), dtype),
+    }

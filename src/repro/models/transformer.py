@@ -1,0 +1,366 @@
+"""Generic decoder-only transformer LM covering the dense / MoE / VLM /
+hybrid (attention ⊕ SSM) families of the assigned pool.
+
+Key structural choices (production patterns):
+
+* **Pattern-cycle layer scan.** Layer parameters are stacked with leading
+  axis ``n_cycles = layers / len(attention_pattern)`` and scanned with
+  ``lax.scan``; the scan body statically applies one block per pattern entry.
+  This keeps HLO size depth-independent *and* supports heterogeneous layer
+  stacks (gemma-2's local/global alternation) with static attention code per
+  position — the banded sliding-window path keeps its O(S·W) cost.
+* **GQA without KV repetition**, chunked flash attention for "full" layers,
+  block-banded attention for "sliding" layers.
+* **DynaTran sites** threaded through every block (ffn_act, attn_probs,
+  attn_out, block_out) — identity when mode=="none".
+* Remat policy on the scan body (``cfg.remat``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dynatran import SparsityConfig, site_prune
+from repro.launch.sharding import constrain
+from . import attention as attn
+from .kvcache import DecodeState
+from .layers import ACTIVATIONS, apply_mrope, apply_rope, dense_init, embed_init, make_norm, rms_norm, softcap
+from .moe import moe_ffn, moe_init
+from .ssm import ssm_init, ssm_mix, ssm_state_init
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key: Array, cfg: ModelConfig, pattern: str, dtype) -> dict:
+    D, F, H, Hkv, hd = cfg.d_model, cfg.d_ff, cfg.heads, cfg.kv_heads, cfg.hd
+    norm_init, _ = make_norm(cfg.norm)
+    ks = iter(jax.random.split(key, 12))
+    p: dict[str, Any] = {
+        "ln1": norm_init(D),
+        "wq": dense_init(next(ks), (D, H, hd), dtype=dtype),
+        "wk": dense_init(next(ks), (D, Hkv, hd), dtype=dtype),
+        "wv": dense_init(next(ks), (D, Hkv, hd), dtype=dtype),
+        "wo": dense_init(next(ks), (H, hd, D), dtype=dtype),
+        "ln2": norm_init(D),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((hd,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.zeros((hd,), jnp.float32)}
+    if cfg.post_norms:
+        p["post_attn_norm"] = norm_init(D)
+        p["post_mlp_norm"] = norm_init(D)
+    if cfg.n_experts:
+        p["moe"] = moe_init(next(ks), D, cfg.n_experts, cfg.moe_d_ff or F, cfg.glu, dtype=dtype)
+    else:
+        p["mlp"] = {
+            "w_up": dense_init(next(ks), (D, F), dtype=dtype),
+            "w_down": dense_init(next(ks), (F, D), dtype=dtype),
+        }
+        if cfg.glu:
+            p["mlp"]["w_gate"] = dense_init(next(ks), (D, F), dtype=dtype)
+    if cfg.ssm_state:
+        p["ssm"] = ssm_init(next(ks), D, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_conv, dtype=dtype)
+        p["ssm_ln"] = norm_init(D)
+    return p
+
+
+def init_params(key: Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kemb, khead, kblocks = jax.random.split(key, 3)
+    params: dict[str, Any] = {"embed": embed_init(kemb, cfg.vocab_padded, cfg.d_model, dtype=dtype)}
+    norm_init, _ = make_norm(cfg.norm)
+    params["final_norm"] = norm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(khead, (cfg.d_model, cfg.vocab_padded), dtype=dtype)
+    if cfg.pos_kind == "learned":
+        params["pos_embed"] = embed_init(khead, cfg.max_positions, cfg.d_model, dtype=dtype)
+
+    def one_cycle(ck):
+        cks = jax.random.split(ck, cfg.pattern_len)
+        return {str(i): _block_init(cks[i], cfg, pat, dtype) for i, pat in enumerate(cfg.attention_pattern)}
+
+    cycle_keys = jax.random.split(kblocks, cfg.n_cycles)
+    # stack cycles: leading axis n_cycles on every block leaf
+    cycles = [one_cycle(ck) for ck in cycle_keys]
+    params["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cycles)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """Parameter pytree of ShapeDtypeStructs (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p: dict, cfg: ModelConfig, h: Array, positions: Array, positions_3d: Array | None):
+    _, norm = make_norm(cfg.norm)
+    x = norm(p["ln1"], h)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos_kind == "mrope":
+        assert positions_3d is not None
+        q = apply_mrope(q, positions_3d, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions_3d, cfg.mrope_sections, cfg.rope_theta)
+    return x, q, k, v
+
+
+def _mlp(p: dict, cfg: ModelConfig, x: Array, sparsity: SparsityConfig, taus) -> tuple[Array, dict]:
+    if cfg.n_experts:
+        return moe_ffn(
+            p["moe"],
+            x,
+            n_experts=cfg.n_experts,
+            top_k=cfg.experts_per_token,
+            act=cfg.act,
+            glu=cfg.glu,
+            capacity_factor=cfg.capacity_factor,
+            sparsity=sparsity,
+            taus=taus,
+        )
+    act = ACTIVATIONS[cfg.act]
+    up = x @ p["mlp"]["w_up"].astype(x.dtype)
+    hmid = act(x @ p["mlp"]["w_gate"].astype(x.dtype)) * up if cfg.glu else act(up)
+    hmid = site_prune(hmid, "ffn_act", sparsity, taus)
+    return hmid @ p["mlp"]["w_down"].astype(x.dtype), {}
+
+
+def block_apply(
+    p: dict,
+    cfg: ModelConfig,
+    pattern: str,
+    h: Array,
+    positions: Array,
+    positions_3d: Array | None,
+    sparsity: SparsityConfig,
+    taus,
+) -> tuple[Array, dict]:
+    """One transformer block, prefill/train mode."""
+    _, norm = make_norm(cfg.norm)
+    x, q, k, v = _qkv(p, cfg, h, positions, positions_3d)
+    q, k, v = (constrain(t, "attn_qkv") for t in (q, k, v))
+    win = cfg.window if (pattern == "sliding" and cfg.window) else None
+    ao = attn.chunked_attention(
+        q, k, v, causal=True, window=win, logit_cap=cfg.attn_logit_cap,
+        chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k, sparsity=sparsity, taus=taus
+    )
+    ao = site_prune(ao, "attn_out", sparsity, taus)
+    attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
+    if cfg.ssm_state:  # hymba: SSM path in parallel with attention
+        ssm_out, _ = ssm_mix(p["ssm"], norm(p["ssm_ln"], h))
+        attn_out = (attn_out + ssm_out) * 0.5
+    if cfg.post_norms:
+        attn_out = norm(p["post_attn_norm"], attn_out)
+    h = h + attn_out
+    mlp_out, metrics = _mlp(p, cfg, norm(p["ln2"], h), sparsity, taus)
+    if cfg.post_norms:
+        mlp_out = norm(p["post_mlp_norm"], mlp_out)
+    h = h + mlp_out
+    h = site_prune(h, "block_out", sparsity, taus)
+    return h, metrics
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,  # [B, S]
+    *,
+    embeds: Array | None = None,  # [vlm]: precomputed patch/text embeddings
+    positions_3d: Array | None = None,
+    taus=None,
+    last_only: bool = False,
+) -> tuple[Array, dict]:
+    """Returns (logits [B,S,V], metrics).  ``last_only`` slices the final
+    hidden state to the last position BEFORE the LM head — serving prefill
+    only needs next-token logits, and the full-sequence head matmul is the
+    single largest FLOP term of the prefill step (2*B*S*D*V)."""
+    sparsity = cfg.sparsity
+    B, S = tokens.shape
+    h = params["embed"][tokens] if embeds is None else embeds.astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        h = h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype)
+    if cfg.pos_kind == "learned":
+        h = h + params["pos_embed"][jnp.arange(S) % params["pos_embed"].shape[0]]
+    positions = jnp.arange(S)
+
+    aux = {"moe_aux_loss": jnp.zeros((), jnp.float32)}
+
+    h = constrain(h, "residual")
+
+    def cycle_body(carry, cycle_params):
+        hh, aux_acc = carry
+        for i, pat in enumerate(cfg.attention_pattern):
+            hh, m = block_apply(cycle_params[str(i)], cfg, pat, hh, positions, positions_3d, sparsity, taus)
+            hh = constrain(hh, "residual")
+            if "moe_aux_loss" in m:
+                aux_acc = {"moe_aux_loss": aux_acc["moe_aux_loss"] + m["moe_aux_loss"]}
+        return (hh, aux_acc), ()
+
+    body = cycle_body
+    if cfg.remat != "none":
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat == "save_dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(cycle_body, policy=policy, prevent_cse=True)
+
+    (h, aux), _ = jax.lax.scan(body, (h, aux), params["blocks"])
+    _, norm = make_norm(cfg.norm)
+    if last_only:
+        h = h[:, -1:]
+    h = norm(params["final_norm"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    logits = constrain(softcap(logits.astype(jnp.float32), cfg.final_logit_cap), "logits")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): one token against the cache
+# ---------------------------------------------------------------------------
+
+
+def _quant_update(cache: dict, new: Array, rows: Array, pos: Array) -> dict:
+    """Insert one step's [B, Hkv, hd] vectors with per-(row, head) absmax
+    int8 quantisation."""
+    scale = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1) / 127.0  # [B, Hkv]
+    q = jnp.round(new.astype(jnp.float32) / jnp.maximum(scale, 1e-8)[..., None]).astype(jnp.int8)
+    return {
+        "q": cache["q"].at[rows, pos].set(q),
+        "scale": cache["scale"].at[rows, pos].set(scale.astype(jnp.bfloat16)),
+    }
+
+
+def _dequant(cache: dict) -> Array:
+    return cache["q"].astype(jnp.bfloat16) * cache["scale"][..., None]
+
+
+def _cache_len_for(cfg: ModelConfig, pattern: str, max_len: int) -> int:
+    if pattern == "sliding" and cfg.window:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> DecodeState:
+    k = {}
+    v = {}
+    quant = cfg.kv_cache_dtype == "int8"
+    for i, pat in enumerate(cfg.attention_pattern):
+        T = _cache_len_for(cfg, pat, max_len)
+        shape = (cfg.n_cycles, batch, T, cfg.kv_heads, cfg.hd)
+        if quant:
+            # int8 cache + per-(position, head) absmax scale: halves the
+            # decode step's dominant HBM term (the cache read)
+            k[str(i)] = {"q": jnp.zeros(shape, jnp.int8), "scale": jnp.zeros(shape[:-1], jnp.bfloat16)}
+            v[str(i)] = {"q": jnp.zeros(shape, jnp.int8), "scale": jnp.zeros(shape[:-1], jnp.bfloat16)}
+        else:
+            k[str(i)] = jnp.zeros(shape, dtype)
+            v[str(i)] = jnp.zeros(shape, dtype)
+    ssm = None
+    if cfg.ssm_state:
+        ssm = {
+            str(i): jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_cycles,) + x.shape),
+                ssm_state_init(batch, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_conv, dtype),
+            )
+            for i in range(cfg.pattern_len)
+        }
+    return DecodeState(k=k, v=v, ssm=ssm, length=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    state: DecodeState,
+    tokens: Array,  # [B, 1]
+    *,
+    positions_3d: Array | None = None,
+    taus=None,
+) -> tuple[Array, DecodeState]:
+    """One serve step: logits for the next token + updated caches."""
+    sparsity = cfg.sparsity
+    B = tokens.shape[0]
+    h = params["embed"][tokens]
+    if cfg.embed_scale:
+        h = h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype)
+    length = state.length  # [B]
+    if cfg.pos_kind == "learned":
+        h = h + params["pos_embed"][length[:, None] % params["pos_embed"].shape[0]]
+    positions = length[:, None]  # [B,1]
+    _, norm = make_norm(cfg.norm)
+
+    def cycle_body(carry, xs):
+        hh = carry
+        cycle_params, kc, vc, ssmc = xs
+        new_k, new_v, new_ssm = {}, {}, {}
+        for i, pat in enumerate(cfg.attention_pattern):
+            p = cycle_params[str(i)]
+            x, q, k1, v1 = _qkv(p, cfg, hh, positions, positions_3d)
+            quant = isinstance(kc[str(i)], dict)
+            T = (kc[str(i)]["q"] if quant else kc[str(i)]).shape[1]
+            ring = pat == "sliding" and cfg.window and T == cfg.window
+            pos = length % T if ring else jnp.minimum(length, T - 1)
+            rows = jnp.arange(B)
+            if quant:
+                kcache = _quant_update(kc[str(i)], k1[:, 0], rows, pos)
+                vcache = _quant_update(vc[str(i)], v1[:, 0], rows, pos)
+                k_read = _dequant(kcache)
+                v_read = _dequant(vcache)
+            else:
+                kcache = kc[str(i)].at[rows, pos].set(k1[:, 0].astype(kc[str(i)].dtype))
+                vcache = vc[str(i)].at[rows, pos].set(v1[:, 0].astype(vc[str(i)].dtype))
+                k_read, v_read = kcache, vcache
+            eff_len = jnp.minimum(length + 1, T)
+            ao = attn.decode_attention(
+                q, k_read, v_read, eff_len, window=None, logit_cap=cfg.attn_logit_cap
+            )
+            ao = site_prune(ao, "attn_out", sparsity, taus)
+            attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
+            if cfg.ssm_state:
+                ssm_out, s_new = ssm_mix(p["ssm"], norm(p["ssm_ln"], hh), state=ssmc[str(i)])
+                attn_out = (attn_out + ssm_out) * 0.5
+                new_ssm[str(i)] = s_new
+            if cfg.post_norms:
+                attn_out = norm(p["post_attn_norm"], attn_out)
+            hh = hh + attn_out
+            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), sparsity, taus)
+            if cfg.post_norms:
+                mlp_out = norm(p["post_mlp_norm"], mlp_out)
+            hh = hh + mlp_out
+            new_k[str(i)], new_v[str(i)] = kcache, vcache
+        return hh, (new_k, new_v, new_ssm if cfg.ssm_state else None)
+
+    xs = (params["blocks"], state.k, state.v, state.ssm if cfg.ssm_state else jnp.zeros((cfg.n_cycles,)))
+    h, (ks, vs, ssms) = jax.lax.scan(cycle_body, h, xs)
+    h = norm(params["final_norm"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_cap)
+    logits = constrain(logits[:, 0], "logits_2d")
+    new_state = DecodeState(k=ks, v=vs, ssm=ssms if cfg.ssm_state else None, length=length + 1)
+    return logits, new_state

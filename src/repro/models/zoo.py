@@ -1,0 +1,81 @@
+"""Family dispatch: one uniform API over every architecture in the pool.
+
+    init_params(key, cfg)                      -> params pytree
+    forward(params, cfg, tokens, **inputs)     -> (logits, metrics)
+    init_decode_state(cfg, batch, max_len)     -> DecodeState
+    decode_step(params, cfg, state, tokens)    -> (logits [B,V], DecodeState)
+    loss_fn(params, cfg, batch, taus)          -> (loss, metrics)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import rwkv6, transformer, whisper
+
+Array = jax.Array
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": transformer,
+    "ssm": rwkv6,
+    "audio": whisper,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def init_params(key: Array, cfg: ModelConfig):
+    return module_for(cfg).init_params(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def forward(params, cfg: ModelConfig, tokens: Array, **inputs):
+    return module_for(cfg).forward(params, cfg, tokens, **inputs)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return module_for(cfg).init_decode_state(cfg, batch, max_len, dtype)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, max_len, dtype))
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens: Array, **inputs):
+    return module_for(cfg).decode_step(params, cfg, state, tokens, **inputs)
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean next-token CE.  logits [B,S,V] f32 (possibly vocab-sharded),
+    labels [B,S] int32; label -100 = masked."""
+    valid = labels != -100
+    labels_safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - picked) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict[str, Array], taus=None) -> tuple[Array, dict]:
+    kwargs: dict[str, Any] = {"taus": taus}
+    for k in ("embeds", "positions_3d", "frames"):
+        if k in batch:
+            kwargs[k] = batch[k]
+    logits, metrics = forward(params, cfg, batch["tokens"], **kwargs)
+    loss = cross_entropy(logits, batch["labels"])
+    if "moe_aux_loss" in metrics:
+        loss = loss + 0.01 * metrics["moe_aux_loss"]
+    metrics = dict(metrics)
+    metrics["ce_loss"] = loss
+    return loss, metrics

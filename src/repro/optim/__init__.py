@@ -1,0 +1,2 @@
+from . import adamw  # noqa: F401
+from .adamw import OptimizerConfig  # noqa: F401

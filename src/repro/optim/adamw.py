@@ -1,0 +1,114 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping and optional
+gradient compression — pure JAX, optimizer state shards like the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # distributed-optimization tricks
+    grad_compression: str = "none"  # none | bf16 | int8_ef (error feedback)
+
+
+def schedule(cfg: OptimizerConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_state(params: Any, cfg: OptimizerConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.grad_compression == "int8_ef":
+        state["ef"] = jax.tree_util.tree_map(zeros, params)  # error-feedback residual
+    return state
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)))
+
+
+def compress_decompress(g: Array, mode: str, ef: Array | None = None):
+    """Simulate on-the-wire gradient compression (the all-reduce runs on the
+    compressed representation; numerics here reproduce the round-trip)."""
+    if mode == "bf16":
+        return g.astype(jnp.bfloat16).astype(jnp.float32), None
+    if mode == "int8_ef":
+        gq_in = g + (ef if ef is not None else 0.0)
+        scale = jnp.maximum(jnp.max(jnp.abs(gq_in)), 1e-12) / 127.0
+        q = jnp.round(gq_in / scale).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, gq_in - deq  # new error-feedback residual
+    return g, None
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: OptimizerConfig) -> tuple[Any, dict, dict]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_compression != "none":
+        efs = state.get("ef")
+        if cfg.grad_compression == "int8_ef":
+            pairs = jax.tree_util.tree_map(
+                lambda g, e: compress_decompress(g, cfg.grad_compression, e), grads, efs
+            )
+            grads = jax.tree_util.tree_map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            new_ef = jax.tree_util.tree_map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            grads = jax.tree_util.tree_map(lambda g: compress_decompress(g, cfg.grad_compression)[0], grads)
+            new_ef = None
+    else:
+        new_ef = None
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) if cfg.clip_norm > 0 else 1.0
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        step = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/bias
+        new_p = p.astype(jnp.float32) - lr * (step + decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mu, nu
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["mu"], state["nu"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is3)
+    new_state = {
+        "mu": jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is3),
+        "nu": jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is3),
+        "count": count,
+    }
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    elif "ef" in state:
+        new_state["ef"] = state["ef"]
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,1 @@
+from .loop import TrainState, Watchdog, make_train_step, train  # noqa: F401

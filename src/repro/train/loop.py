@@ -1,0 +1,132 @@
+"""Training loop: jitted train_step with DynaTran integration, fault
+tolerance (checkpoint/restart, straggler watchdog) and metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dynatran import SparsityConfig, ThresholdCalculator
+from repro.models import zoo
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: int  # python int (host); device step lives in opt["count"]
+
+    def as_pytree(self):
+        return {"params": self.params, "opt": self.opt}
+
+
+def make_train_step(cfg: ModelConfig, ocfg: adamw.OptimizerConfig) -> Callable:
+    """Builds the (donated) jittable train step: grads -> clip -> AdamW.
+
+    DynaTran taus are step inputs (resolved from transfer curves on host or
+    on device via ThresholdCalculator) so sparsity targets can change at
+    runtime without recompilation — the paper's runtime knob (Fig. 19).
+    """
+
+    def step_fn(params, opt, batch, taus):
+        (loss, metrics), grads = jax.value_and_grad(zoo.loss_fn, has_aux=True)(params, cfg, batch, taus)
+        params, opt, opt_metrics = adamw.apply_updates(params, grads, opt, ocfg)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt, metrics
+
+    return step_fn
+
+
+class Watchdog:
+    """Step-time EMA straggler/hang detector (cheap, portable mitigation).
+
+    On a real cluster a stalled collective shows up as a step-time blowout on
+    every healthy host; the runbook response is checkpoint + abort so the
+    scheduler can restart minus the bad node.  `check()` returns False when
+    the last step exceeded `factor` x EMA (caller then checkpoints/aborts).
+    """
+
+    def __init__(self, factor: float = 5.0, min_steps: int = 5):
+        self.factor = factor
+        self.min_steps = min_steps
+        self.ema: Optional[float] = None
+        self.n = 0
+        self.trips = 0
+
+    def record(self, dt: float) -> bool:
+        self.n += 1
+        if self.ema is None:
+            self.ema = dt
+            return True
+        healthy = self.n < self.min_steps or dt <= self.factor * self.ema
+        if not healthy:
+            self.trips += 1
+        self.ema = 0.9 * self.ema + 0.1 * dt
+        return healthy
+
+
+def train(
+    cfg: ModelConfig,
+    ocfg: adamw.OptimizerConfig,
+    batches,  # LMBatches-like: .batch(step) -> dict of np arrays
+    *,
+    steps: int,
+    seed: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    calculator: Optional[ThresholdCalculator] = None,
+    log_every: int = 10,
+    log: Callable[[str], None] = print,
+) -> tuple[TrainState, list[dict]]:
+    """Single-host training driver with checkpoint/resume.
+
+    (The multi-pod driver in launch/train.py wraps the same step with pjit
+    shardings; this loop is the substrate + the CPU example path.)
+    """
+    from repro.checkpoint import store
+
+    params = zoo.init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw.init_state(params, ocfg)
+    start_step = 0
+    if checkpoint_dir and store.latest_step(checkpoint_dir) is not None:
+        tree, manifest = store.restore(checkpoint_dir, {"params": params, "opt": opt})
+        params, opt = tree["params"], tree["opt"]
+        start_step = manifest["step"]
+        log(f"[train] resumed from step {start_step}")
+
+    sp: SparsityConfig = cfg.sparsity
+    calculator = calculator or ThresholdCalculator.default()
+    taus = calculator.taus(sp) if sp.mode == "dynatran" else None
+
+    step_fn = jax.jit(make_train_step(cfg, ocfg), donate_argnums=(0, 1))
+    ckpt = store.AsyncCheckpointer(checkpoint_dir) if checkpoint_dir else None
+    watchdog = Watchdog()
+    history: list[dict] = []
+
+    for step in range(start_step, steps):
+        t0 = time.perf_counter()
+        batch = {k: jnp.asarray(v) for k, v in batches.batch(step).items()}
+        params, opt, metrics = step_fn(params, opt, batch, taus)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        healthy = watchdog.record(dt)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items() if jnp.ndim(v) == 0}
+            m.update(step=step, step_time_s=dt)
+            history.append(m)
+            log(f"[train] step {step}: loss={m['loss']:.4f} gnorm={m.get('grad_norm', 0):.3f} {dt*1e3:.0f}ms")
+        if not healthy and ckpt:
+            log(f"[train] watchdog tripped at step {step} (dt={dt:.2f}s); checkpointing")
+            ckpt.save_async(step + 1, {"params": params, "opt": opt}, extra={"watchdog_trip": True})
+        if ckpt and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            ckpt.save_async(step + 1, {"params": params, "opt": opt})
+    if ckpt:
+        ckpt.save_async(steps, {"params": params, "opt": opt})
+        ckpt.wait()
+    return TrainState(params=params, opt=opt, step=steps), history

@@ -1,0 +1,16 @@
+import jax
+import numpy as np
+import pytest
+
+# Tests run on the single CPU device (the dry-run sets its own XLA_FLAGS in
+# a separate process; never here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def keys(n: int, seed: int = 0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)

@@ -1,0 +1,126 @@
+"""Attention variants agree with the exact reference: chunked (flash-style),
+block-banded sliding window, decode-over-cache, GQA handling, DynaTran/top-k
+hooks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dynatran import SparsityConfig
+from repro.models import attention as attn
+
+
+def qkv(b=2, sq=128, skv=None, h=4, hkv=None, d=32, seed=0, dtype=jnp.float32):
+    skv = skv or sq
+    hkv = hkv or h
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), dtype)
+    return q, k, v
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("s,cq,ck", [(128, 64, 64), (128, 32, 128), (96, 64, 64)])
+    def test_matches_reference_causal(self, s, cq, ck):
+        q, k, v = qkv(sq=s)
+        got = attn.chunked_attention(q, k, v, causal=True, chunk_q=cq, chunk_k=ck)
+        want = attn.reference_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_gqa(self):
+        q, k, v = qkv(h=8, hkv=2)
+        got = attn.chunked_attention(q, k, v, causal=True, chunk_q=64, chunk_k=64)
+        want = attn.reference_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_window(self):
+        q, k, v = qkv(sq=128)
+        got = attn.chunked_attention(q, k, v, causal=True, window=48, chunk_q=32, chunk_k=32)
+        want = attn.reference_attention(q, k, v, causal=True, window=48)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_logit_cap(self):
+        q, k, v = qkv(seed=3)
+        got = attn.chunked_attention(q, k, v, causal=True, logit_cap=20.0, chunk_q=64, chunk_k=64)
+        want = attn.reference_attention(q, k, v, causal=True, logit_cap=20.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_grad_flows(self):
+        q, k, v = qkv(b=1, sq=64, h=2, d=16)
+
+        def loss(q):
+            return attn.chunked_attention(q, k, v, causal=True, chunk_q=32, chunk_k=32).sum()
+
+        g = jax.grad(loss)(q)
+        assert bool(jnp.isfinite(g).all()) and float(jnp.abs(g).max()) > 0
+
+
+class TestSlidingWindowAttention:
+    @pytest.mark.parametrize("s,w", [(128, 32), (128, 64), (96, 32)])
+    def test_matches_reference(self, s, w):
+        q, k, v = qkv(sq=s, seed=1)
+        got = attn.sliding_window_attention(q, k, v, window=w)
+        want = attn.reference_attention(q, k, v, causal=True, window=w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_gqa(self):
+        q, k, v = qkv(sq=64, h=4, hkv=2, seed=2)
+        got = attn.sliding_window_attention(q, k, v, window=32)
+        want = attn.reference_attention(q, k, v, causal=True, window=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_cross_attention_rejected(self):
+        q, k, v = qkv(sq=64, skv=128)
+        with pytest.raises(ValueError):
+            attn.sliding_window_attention(q, k, v, window=32)
+
+
+class TestDecodeAttention:
+    def test_matches_reference_prefix(self):
+        # decode for the last position == causal attention's last row
+        q, k, v = qkv(b=2, sq=32, h=4, d=16, seed=4)
+        full = attn.reference_attention(q, k, v, causal=True)
+        q_last = q[:, -1:]
+        got = attn.decode_attention(q_last, k, v, cache_len=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, -1:]), rtol=2e-5, atol=2e-5)
+
+    def test_per_row_lengths(self):
+        q, k, v = qkv(b=2, sq=16, h=2, d=16, seed=5)
+        lens = jnp.array([16, 8])
+        got = attn.decode_attention(q[:, -1:], k, v, lens)
+        want0 = attn.decode_attention(q[:1, -1:], k[:1], v[:1], 16)
+        want1 = attn.decode_attention(q[1:, -1:], k[1:, :8], v[1:, :8], 8)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want0[0]), rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want1[0]), rtol=2e-5, atol=2e-5)
+
+    def test_window_limits_context(self):
+        q, k, v = qkv(b=1, sq=32, h=1, d=16, seed=6)
+        got = attn.decode_attention(q[:, -1:], k, v, 32, window=8)
+        want = attn.decode_attention(q[:, -1:], k[:, -8:], v[:, -8:], 8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+class TestSparsityHooks:
+    def test_dynatran_prunes_probs(self):
+        q, k, v = qkv(b=1, sq=32, h=2, d=16, seed=7)
+        sp = SparsityConfig(mode="dynatran", sites=("attn_probs",))
+        taus = {"attn_probs": 0.9}  # prune almost everything but the max
+        out = attn.reference_attention(q, k, v, causal=True, sparsity=sp, taus=taus)
+        assert bool(jnp.isfinite(out).all())
+        # with tau ~= 1, output approaches the argmax value row
+        dense = attn.reference_attention(q, k, v, causal=True)
+        assert float(jnp.abs(out - dense).max()) > 1e-4  # it did something
+
+    def test_topk_mode(self):
+        q, k, v = qkv(b=1, sq=32, h=2, d=16, seed=8)
+        sp = SparsityConfig(mode="topk", topk_k=4)
+        out = attn.reference_attention(q, k, v, causal=True, sparsity=sp)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_tau_zero_is_dense(self):
+        q, k, v = qkv(b=1, sq=32, h=2, d=16, seed=9)
+        sp = SparsityConfig(mode="dynatran", sites=("attn_probs",))
+        out = attn.reference_attention(q, k, v, causal=True, sparsity=sp, taus={"attn_probs": 0.0})
+        dense = attn.reference_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(dense), rtol=1e-5, atol=1e-7)

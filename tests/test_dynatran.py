@@ -1,0 +1,170 @@
+"""DynaTran core: prune semantics, transfer curves, threshold calculator,
+weight pruning — unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dynatran as dt
+
+
+class TestPrune:
+    def test_semantics(self):
+        x = jnp.array([[0.05, -0.5], [0.2, -0.01]])
+        pruned, mask = dt.prune(x, 0.1)
+        np.testing.assert_allclose(pruned, [[0.0, -0.5], [0.2, 0.0]])
+        assert mask.tolist() == [[False, True], [True, False]]
+
+    def test_boundary_kept(self):
+        # |x| == tau is KEPT (paper: prune strictly-below threshold)
+        x = jnp.array([0.1, -0.1, 0.0999])
+        pruned, mask = dt.prune(x, 0.1)
+        assert mask.tolist() == [True, True, False]
+
+    def test_zero_tau_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+        pruned, mask = dt.prune(x, 0.0)
+        np.testing.assert_array_equal(pruned, x)
+        assert bool(mask.all())
+
+    @given(tau=st.floats(0.0, 2.0), seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_idempotent(self, tau, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (32, 16))
+        once = dt.prune_(x, tau)
+        twice = dt.prune_(once, tau)
+        np.testing.assert_array_equal(once, twice)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_sparsity_monotone_in_tau(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64, 64))
+        rhos = [float(dt.sparsity(dt.prune_(x, t))) for t in (0.0, 0.1, 0.5, 1.0, 3.0)]
+        assert rhos == sorted(rhos)
+        assert rhos[0] == 0.0
+
+    def test_prune_matches_prune_(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (33, 17))
+        p1, _ = dt.prune(x, 0.3)
+        np.testing.assert_array_equal(p1, dt.prune_(x, 0.3))
+
+
+class TestBlockMask:
+    def test_live_tile_detection(self):
+        m = np.zeros((256, 256), bool)
+        m[13, 200] = True  # one nonzero -> its (0,1) tile is live
+        bm = dt.block_mask(jnp.asarray(m), 128)
+        assert bm.shape == (2, 2)
+        assert bm.tolist() == [[False, True], [False, False]]
+
+    def test_rectangular_blocks(self):
+        m = np.ones((64, 256), bool)
+        bm = dt.block_mask(jnp.asarray(m), (64, 128))
+        assert bm.shape == (1, 2) and bool(bm.all())
+
+    def test_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            dt.block_mask(jnp.ones((100, 128), bool), 128)
+
+    def test_block_sparsity_bounds(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+        _, nz = dt.prune(x, 3.5)  # heavy pruning -> some dead tiles possible
+        bs = float(dt.block_sparsity(nz, 64))
+        es = float(dt.sparsity(jnp.where(nz, x, 0)))
+        assert 0.0 <= bs <= es  # block sparsity can never exceed element sparsity
+
+
+class TestTransferCurve:
+    def _curve(self):
+        samples = [np.random.default_rng(i).normal(size=(512, 64)) for i in range(4)]
+        return dt.profile_curve(samples)
+
+    def test_profile_monotone(self):
+        c = self._curve()
+        assert np.all(np.diff(np.asarray(c.rhos)) >= 0)
+        assert float(c.rhos[0]) == 0.0
+
+    def test_lookup_roundtrip(self):
+        c = self._curve()
+        for target in (0.1, 0.3, 0.5, 0.7):
+            tau = c.tau_for_rho(target)
+            rho = c.rho_for_tau(tau)
+            assert abs(float(rho) - target) < 0.05
+
+    def test_profiled_curve_predicts_sparsity(self):
+        # the whole point: lookup tau for a target rho, prune, get ~rho
+        rng = np.random.default_rng(7)
+        samples = [rng.normal(size=(256, 128)) for _ in range(4)]
+        c = dt.profile_curve(samples)
+        fresh = jnp.asarray(rng.normal(size=(256, 128)))
+        for target in (0.25, 0.5, 0.75):
+            tau = c.tau_for_rho(target)
+            got = float(dt.sparsity(dt.prune_(fresh, tau)))
+            assert abs(got - target) < 0.05, (target, got)
+
+    def test_pytree_roundtrip(self):
+        c = self._curve()
+        leaves, treedef = jax.tree_util.tree_flatten(c)
+        c2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        np.testing.assert_array_equal(c.taus, c2.taus)
+
+    def test_identity_curve(self):
+        c = dt.TransferCurve.identity()
+        assert float(c.rho_for_tau(0.05)) == 0.0
+
+
+class TestThresholdCalculator:
+    def test_taus_for_config(self):
+        calc = dt.ThresholdCalculator.default()
+        cfg = dt.SparsityConfig(mode="dynatran", target_rho=0.5)
+        taus = calc.taus(cfg)
+        assert set(taus) == set(cfg.sites)
+
+    def test_site_prune_identity_when_disabled(self):
+        x = jnp.ones((4, 4))
+        out = dt.site_prune(x, "ffn_act", dt.SparsityConfig(mode="none"), {"ffn_act": 5.0})
+        np.testing.assert_array_equal(out, x)
+        out = dt.site_prune(x, "ffn_act", dt.SparsityConfig(mode="dynatran"), None)
+        np.testing.assert_array_equal(out, x)
+
+    def test_site_prune_applies(self):
+        x = jnp.array([0.1, 2.0])
+        cfg = dt.SparsityConfig(mode="dynatran", sites=("ffn_act",))
+        out = dt.site_prune(x, "ffn_act", cfg, {"ffn_act": 1.0})
+        np.testing.assert_array_equal(out, jnp.array([0.0, 2.0]))
+
+
+class TestSparsityConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            dt.SparsityConfig(mode="bogus")
+        with pytest.raises(ValueError):
+            dt.SparsityConfig(sites=("nonsense",))
+
+    def test_defaults_off(self):
+        assert dt.SparsityConfig().mode == "none"
+
+
+class TestWeightPruning:
+    def test_weight_prune_stats(self):
+        params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64))),
+                  "b": jnp.zeros((64,))}  # 1-D left alone
+        pruned, stats = dt.weight_prune(params, 0.5)
+        assert 0.2 < stats["weight_sparsity"] < 0.6
+        np.testing.assert_array_equal(pruned["b"], params["b"])
+        assert float(dt.sparsity(pruned["w"])) > 0.2
+
+    def test_movement_prune_keep_fraction(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(32, 32)))
+        s = jnp.asarray(rng.normal(size=(32, 32)))
+        out = dt.movement_prune({"w": w}, {"w": s}, keep_fraction=0.25)
+        got = 1.0 - float(dt.sparsity(out["w"]))
+        assert abs(got - 0.25) < 0.02
+
+    def test_movement_score_update_direction(self):
+        # score decreases when grad and weight have the same sign (weight
+        # moving toward zero) — the movement-pruning rule
+        s = dt.movement_pruning_mask_update(jnp.zeros(()), jnp.ones(()), jnp.ones(()), lr=0.1)
+        assert float(s) < 0

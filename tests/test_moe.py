@@ -1,0 +1,145 @@
+"""Grouped einsum MoE dispatch vs a naive per-token reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import moe_ffn, moe_init
+
+
+def naive_moe(params, x, n_experts, top_k, act, glu, capacity_per_group, group_size):
+    """Per-token loop reference with identical capacity/dropping semantics
+    (positions assigned token-major within each group, choice-major across
+    the K loop)."""
+    B, S, D = x.shape
+    xf = np.asarray(x, np.float32).reshape(-1, D)
+    T = xf.shape[0]
+    logits = xf @ np.asarray(params["router"], np.float32)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    order = np.argsort(-probs, axis=-1, kind="stable")[:, :top_k]
+    gates = np.take_along_axis(probs, order, axis=-1)
+    gates /= np.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    out = np.zeros_like(xf)
+    n_groups = T // group_size
+    for gidx in range(n_groups):
+        counts = np.zeros(n_experts, np.int64)
+        sl = slice(gidx * group_size, (gidx + 1) * group_size)
+        toks = range(gidx * group_size, (gidx + 1) * group_size)
+        # choice-major like the implementation: j outer, tokens inner
+        keep = {}
+        for j in range(top_k):
+            for t in toks:
+                e = order[t, j]
+                if counts[e] < capacity_per_group:
+                    keep[(t, j)] = e
+                counts[e] += 1
+        for (t, j), e in keep.items():
+            xe = xf[t]
+            w_up = np.asarray(params["w_up"][e], np.float32)
+            up = xe @ w_up
+            if glu:
+                gate = xe @ np.asarray(params["w_gate"][e], np.float32)
+                h = (gate / (1 + np.exp(-gate))) * up  # silu
+            else:
+                h = up / (1 + np.exp(-up))
+            y = h @ np.asarray(params["w_down"][e], np.float32)
+            out[t] += gates[t, j] * y
+    return out.reshape(B, S, D)
+
+
+class TestMoeDispatch:
+    @pytest.mark.parametrize("E,K", [(4, 1), (4, 2), (8, 2)])
+    def test_matches_naive_reference(self, E, K):
+        D, F = 16, 32
+        B, S = 2, 16
+        params = moe_init(jax.random.PRNGKey(0), D, E, F, glu=True)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D))
+        cap_factor = float(E)  # lossless: no dropping -> exact equality
+        got, metrics = moe_ffn(
+            params, x, n_experts=E, top_k=K, act="silu", glu=True,
+            capacity_factor=cap_factor, group_size=16,
+        )
+        capacity = max(1, int(cap_factor * 16 * K / E))
+        want = naive_moe(params, x, E, K, "silu", True, capacity, 16)
+        np.testing.assert_allclose(np.asarray(got, np.float32), want, rtol=2e-4, atol=2e-4)
+        assert float(metrics["moe_drop_fraction"]) < 1e-6
+
+    def test_capacity_dropping_bounded(self):
+        D, F, E, K = 8, 16, 4, 2
+        params = moe_init(jax.random.PRNGKey(0), D, E, F, glu=False)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, D))
+        got, metrics = moe_ffn(
+            params, x, n_experts=E, top_k=K, act="silu", glu=False,
+            capacity_factor=0.5, group_size=32,
+        )
+        drop = float(metrics["moe_drop_fraction"])
+        assert 0.0 < drop < 0.8
+        assert bool(jnp.isfinite(got).all())
+
+    def test_aux_loss_balanced_routing(self):
+        # uniform router -> aux loss ~= 1 (the Switch normalisation)
+        D, F, E, K = 8, 16, 4, 1
+        params = moe_init(jax.random.PRNGKey(0), D, E, F, glu=False)
+        params = dict(params, router=jnp.zeros((D, E)))
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, D))
+        _, metrics = moe_ffn(params, x, n_experts=E, top_k=K, act="silu", glu=False)
+        assert 0.9 < float(metrics["moe_aux_loss"]) < 1.1
+
+    def test_grad_flows_through_dispatch(self):
+        D, F, E, K = 8, 16, 4, 2
+        params = moe_init(jax.random.PRNGKey(0), D, E, F, glu=True)
+        x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, D))
+
+        def loss(params):
+            y, m = moe_ffn(params, x, n_experts=E, top_k=K, act="silu", glu=True)
+            return jnp.sum(y**2) + m["moe_aux_loss"]
+
+        g = jax.grad(loss)(params)
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert bool(jnp.isfinite(leaf).all())
+        assert float(jnp.abs(g["w_up"]).max()) > 0
+
+    def test_group_size_invariance_when_lossless(self):
+        D, F, E, K = 8, 16, 4, 2
+        params = moe_init(jax.random.PRNGKey(0), D, E, F, glu=True)
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 32, D))
+        outs = []
+        for gs in (16, 32, 64):
+            y, _ = moe_ffn(params, x, n_experts=E, top_k=K, act="silu", glu=True,
+                           capacity_factor=float(E), group_size=gs)
+            outs.append(np.asarray(y, np.float32))
+        np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(outs[1], outs[2], rtol=2e-4, atol=2e-4)
+
+
+class TestInt8KvCache:
+    def test_decode_close_to_bf16(self):
+        import dataclasses
+
+        from repro.configs import get_smoke
+        from repro.models import zoo
+
+        cfg = get_smoke("qwen3-4b")
+        params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+        st = zoo.init_decode_state(cfg, 2, 32)
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        st8 = zoo.init_decode_state(cfg8, 2, 32)
+        for t in range(10):
+            l_bf, st = zoo.decode_step(params, cfg, st, toks[:, t : t + 1])
+            l_i8, st8 = zoo.decode_step(params, cfg8, st8, toks[:, t : t + 1])
+        rel = float(jnp.max(jnp.abs(l_bf - l_i8))) / float(jnp.max(jnp.abs(l_bf)))
+        assert rel < 0.05, rel
+
+    def test_cache_is_int8(self):
+        import dataclasses
+
+        from repro.configs import get_smoke
+        from repro.models import zoo
+
+        cfg = dataclasses.replace(get_smoke("qwen3-4b"), kv_cache_dtype="int8")
+        st = zoo.init_decode_state(cfg, 2, 16)
+        assert st.k["0"]["q"].dtype == jnp.int8
+        assert st.k["0"]["scale"].dtype == jnp.bfloat16

@@ -1,0 +1,42 @@
+"""GPipe pipeline parallelism: exact equivalence with the plain forward.
+
+Runs in a subprocess because it needs >1 XLA host device (the main pytest
+process is pinned to 1)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke
+from repro.models import zoo
+from repro.launch.pipeline import make_pipeline_forward, pipeline_param_shardings
+
+cfg = dataclasses.replace(get_smoke("qwen3-4b"), remat="none")
+mesh = jax.make_mesh((2,), ("pod",))
+params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+ref_logits, _ = zoo.forward(params, cfg, tokens)
+fwd = make_pipeline_forward(cfg, mesh, n_micro=2)
+pshard = pipeline_param_shardings(cfg, jax.eval_shape(lambda: params), mesh)
+params_s = jax.device_put(params, pshard)
+got = jax.jit(fwd)(params_s, tokens)
+err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - ref_logits.astype(jnp.float32))))
+assert err < 1e-3, err
+print("PIPELINE_OK", err)
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_forward():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=600,
+    )
+    assert "PIPELINE_OK" in out.stdout, out.stdout + out.stderr

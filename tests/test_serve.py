@@ -1,0 +1,69 @@
+"""Serving engine: greedy generation, determinism, DynaTran runtime knob."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.dynatran import SparsityConfig
+from repro.models import zoo
+from repro.serve.engine import ServeConfig, ServeEngine
+
+
+def tiny_cfg(**kw):
+    return ModelConfig(
+        name="tiny-serve", family="dense", layers=2, d_model=64, heads=2, kv_heads=2,
+        d_ff=128, vocab=128, remat="none", **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = tiny_cfg()
+    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(cfg, params, ServeConfig(slots=4, max_len=64))
+
+
+class TestServeEngine:
+    def test_generate_shapes(self, engine):
+        outs = engine.generate([[1, 2, 3], [4, 5]], max_new_tokens=8)
+        assert len(outs) == 2
+        assert all(len(o) == 8 for o in outs)
+        assert all(0 <= t < 128 for o in outs for t in o)
+
+    def test_deterministic(self, engine):
+        a = engine.generate([[7, 8, 9]], max_new_tokens=6)
+        b = engine.generate([[7, 8, 9]], max_new_tokens=6)
+        assert a == b
+
+    def test_eos_truncation(self, engine):
+        outs = engine.generate([[1, 2]], max_new_tokens=8)
+        eos = outs[0][2]
+        trunc = engine.generate([[1, 2]], max_new_tokens=8, eos_id=eos)
+        assert trunc[0][-1] == eos and len(trunc[0]) <= 8
+
+    def test_greedy_matches_forward_argmax(self):
+        # first generated token == argmax of forward() next-token logits
+        cfg = tiny_cfg()
+        params = zoo.init_params(jax.random.PRNGKey(1), cfg)
+        eng = ServeEngine(cfg, params, ServeConfig(slots=2, max_len=32))
+        prompt = [3, 1, 4, 1, 5]
+        out = eng.generate([prompt], max_new_tokens=1)
+        logits, _ = zoo.forward(params, cfg, jnp.asarray([prompt], jnp.int32))
+        want = int(jnp.argmax(logits[0, -1, : cfg.vocab]))
+        got = out[0][0]
+        assert got == want
+
+    def test_dynatran_runtime_knob(self):
+        cfg = tiny_cfg(sparsity=SparsityConfig(mode="dynatran", target_rho=0.3))
+        params = zoo.init_params(jax.random.PRNGKey(2), cfg)
+        eng = ServeEngine(cfg, params, ServeConfig(slots=2, max_len=32, target_rho=0.6))
+        assert eng.taus is not None
+        outs = eng.generate([[1, 2, 3]], max_new_tokens=4)
+        assert len(outs[0]) == 4
+
+    def test_too_many_prompts_rejected(self, engine):
+        with pytest.raises(AssertionError):
+            engine.generate([[1]] * 10, max_new_tokens=1)

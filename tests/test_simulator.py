@@ -1,0 +1,224 @@
+"""Cycle-level simulator: calibration against the paper's Table III/IV,
+staggered-vs-equal scheduling (Fig. 10), sparsity benefits (Fig. 19/Table IV),
+stall trends (Fig. 16), and the dataflow energy ranking (Fig. 15)."""
+import math
+
+import pytest
+
+from repro.core import energy as E
+from repro.core.dataflow import ALL_DATAFLOWS, analyze_dataflow, compare_dataflows, dataflow_name
+from repro.core.scheduler import EncoderSpec, build_encoder_ops, priority_key, topo_check
+from repro.core.simulator import Simulator
+
+
+def run_edge(**kw):
+    sim = Simulator(E.ACCELTRAN_EDGE)
+    return sim.run_encoder(EncoderSpec.bert_tiny(), batch=4, **kw)
+
+
+class TestCalibration:
+    def test_server_bert_tiny_table_iv(self):
+        """Paper Table IV row 1: 172,180 seq/s, 0.1396 mJ/seq, 24.04 W."""
+        sim = Simulator(E.ACCELTRAN_SERVER)
+        res = sim.run_encoder(EncoderSpec.bert_tiny(), batch=32, weight_density=0.5, act_density=0.5)
+        assert abs(res.throughput_seq_s - 172_180) / 172_180 < 0.05
+        assert abs(res.energy_per_seq_j * 1e3 - 0.1396) / 0.1396 < 0.08
+        assert abs(res.avg_power_w - 24.04) / 24.04 < 0.08
+
+    def test_edge_power_envelope(self):
+        """Fig. 17 / Table III: AccelTran-Edge ~6.8 W total."""
+        res = run_edge(weight_density=0.5, act_density=0.5)
+        assert 4.0 < res.avg_power_w < 9.0
+
+    def test_ablation_no_dynatran_slower(self):
+        """Table IV: w/o DynaTran 93,333 seq/s (vs 172,180) — dense activations."""
+        sim = Simulator(E.ACCELTRAN_SERVER)
+        dense = sim.run_encoder(EncoderSpec.bert_tiny(), batch=32, weight_density=0.5, act_density=1.0)
+        sparse = sim.run_encoder(EncoderSpec.bert_tiny(), batch=32, weight_density=0.5, act_density=0.5)
+        ratio = sparse.throughput_seq_s / dense.throughput_seq_s
+        assert 1.5 < ratio < 2.2  # paper: 172180/93333 = 1.84
+
+    def test_ablation_no_sparsity_modules(self):
+        """Table IV: w/o sparsity-aware modules throughput drops ~1.9x and
+        energy roughly doubles."""
+        base = Simulator(E.ACCELTRAN_SERVER)
+        off = Simulator(E.ACCELTRAN_SERVER, sparsity_modules=False)
+        r1 = base.run_encoder(EncoderSpec.bert_tiny(), batch=32, weight_density=0.5, act_density=0.5)
+        r2 = off.run_encoder(EncoderSpec.bert_tiny(), batch=32, weight_density=0.5, act_density=0.5)
+        assert r1.throughput_seq_s > 1.4 * r2.throughput_seq_s
+        assert r2.energy_per_seq_j > 1.4 * r1.energy_per_seq_j
+
+    def test_lp_mode_power_reduction(self):
+        """Table III: LP mode ~39% lower power at ~39% lower throughput."""
+        full = Simulator(E.ACCELTRAN_EDGE).run_encoder(EncoderSpec.bert_tiny(), batch=4, weight_density=0.5, act_density=0.5)
+        lp = Simulator(E.edge_lp_mode()).run_encoder(EncoderSpec.bert_tiny(), batch=4, weight_density=0.5, act_density=0.5)
+        assert lp.avg_power_w < full.avg_power_w
+        assert lp.throughput_seq_s < full.throughput_seq_s
+
+    def test_rram_vs_dram(self):
+        """Table IV: server on LP-DDR3 instead of mono-3D RRAM is 1.94x
+        slower (172,180 vs 88,736 seq/s) — with embedding streaming, which is
+        what makes the DRAM configuration memory-bound."""
+        import dataclasses
+
+        dram_cfg = dataclasses.replace(
+            E.ACCELTRAN_SERVER, name="server-dram", mem_bandwidth_gbps=25.6, mem_kind="lpddr3"
+        )
+        rram = Simulator(E.ACCELTRAN_SERVER).run_encoder(
+            EncoderSpec.bert_tiny(), batch=32, weight_density=0.5, act_density=0.5, embedding_resident=False
+        )
+        dram = Simulator(dram_cfg).run_encoder(
+            EncoderSpec.bert_tiny(), batch=32, weight_density=0.5, act_density=0.5, embedding_resident=False
+        )
+        ratio = rram.throughput_seq_s / dram.throughput_seq_s
+        assert 1.5 < ratio < 2.5  # paper: 1.94
+
+
+class TestScheduling:
+    def test_staggered_close_to_or_better_than_equal(self):
+        """Fig. 10: staggered head scheduling overlaps MAC + softmax.  Under
+        the tile-bundle dispatch model both policies keep the pools busy and
+        land within 1% of each other (equal's lane-sharing approximates the
+        same overlap); staggered must never lose by more than that, on both
+        a resource-constrained variant and the stock config."""
+        import dataclasses
+
+        constrained = dataclasses.replace(E.ACCELTRAN_EDGE, pes=4)
+        stag_c = Simulator(constrained, policy="staggered").run_encoder(
+            EncoderSpec.bert_tiny(), batch=4, weight_density=0.5, act_density=0.5
+        )
+        eq_c = Simulator(constrained, policy="equal").run_encoder(
+            EncoderSpec.bert_tiny(), batch=4, weight_density=0.5, act_density=0.5
+        )
+        assert stag_c.cycles <= eq_c.cycles * 1.01
+        stag = Simulator(E.ACCELTRAN_EDGE, policy="staggered").run_encoder(
+            EncoderSpec.bert_tiny(), batch=4, weight_density=0.5, act_density=0.5
+        )
+        eq = Simulator(E.ACCELTRAN_EDGE, policy="equal").run_encoder(
+            EncoderSpec.bert_tiny(), batch=4, weight_density=0.5, act_density=0.5
+        )
+        assert stag.cycles <= eq.cycles * 1.01
+
+    def test_staggered_overlaps_mac_and_softmax(self):
+        """Fig. 10(b): the staggered schedule has instants where MAC lanes
+        and softmax modules are busy simultaneously."""
+        res = Simulator(E.ACCELTRAN_EDGE, policy="staggered").run_encoder(
+            EncoderSpec.bert_tiny(), batch=4, weight_density=0.5, act_density=0.5
+        )
+        assert any(m > 0 and s > 0 for _, m, s, _, _ in res.util_trace)
+
+    def test_priority_key_orders(self):
+        ops = build_encoder_ops(EncoderSpec.bert_tiny(), 4)
+        topo_check(ops)
+        h0 = [o for o in ops if o.layer == 0 and o.head == 0]
+        h1 = [o for o in ops if o.layer == 0 and o.head == 1]
+        assert priority_key(h0[0], "staggered") < priority_key(h1[0], "staggered")
+        # equal policy: same stage across heads sorts adjacent
+        assert priority_key(h0[0], "equal")[:2] == priority_key(h1[0], "equal")[:2]
+
+    def test_bad_policy_raises(self):
+        ops = build_encoder_ops(EncoderSpec.bert_tiny(), 1)
+        with pytest.raises(ValueError):
+            priority_key(ops[0], "bogus")
+
+
+class TestSparsityEffects:
+    def test_throughput_monotone_in_sparsity(self):
+        """Fig. 19: higher activation sparsity -> higher throughput, lower energy."""
+        results = [run_edge(weight_density=0.5, act_density=d) for d in (1.0, 0.7, 0.5, 0.3)]
+        thr = [r.throughput_seq_s for r in results]
+        en = [r.energy_per_seq_j for r in results]
+        assert thr == sorted(thr)
+        assert en == sorted(en, reverse=True)
+
+    def test_mac_skip_accounting(self):
+        res = run_edge(weight_density=0.5, act_density=0.5)
+        assert 0.5 < res.mac_skip_fraction < 0.9  # ~1 - 0.25 compounded
+
+    def test_utilization_trace_nonempty(self):
+        res = run_edge()
+        assert len(res.util_trace) > 10
+        t, mac, smx, ln, buf = zip(*res.util_trace)
+        assert list(t) == sorted(t)
+        assert max(mac) > 0 and max(smx) > 0
+
+
+class TestStalls:
+    def test_fewer_pes_more_compute_stalls(self):
+        """Fig. 16 trend: fewer PEs -> more compute stalls."""
+        import dataclasses
+
+        small = dataclasses.replace(E.ACCELTRAN_EDGE, pes=16)
+        big = dataclasses.replace(E.ACCELTRAN_EDGE, pes=128)
+        r_small = Simulator(small).run_encoder(EncoderSpec.bert_tiny(), batch=4)
+        r_big = Simulator(big).run_encoder(EncoderSpec.bert_tiny(), batch=4)
+        assert r_small.compute_stalls >= r_big.compute_stalls
+
+    def test_smaller_buffers_more_memory_pressure(self):
+        import dataclasses
+
+        tiny_buf = dataclasses.replace(
+            E.ACCELTRAN_EDGE, act_buffer_mb=0.5, weight_buffer_mb=1.0, mask_buffer_mb=0.125
+        )
+        r_tiny = Simulator(tiny_buf).run_encoder(EncoderSpec.bert_base(), batch=1)
+        r_big = Simulator(E.ACCELTRAN_EDGE).run_encoder(EncoderSpec.bert_base(), batch=1)
+        assert r_tiny.memory_stalls >= r_big.memory_stalls
+
+
+class TestDataflows:
+    """Fig. 15 reproduction."""
+
+    W = (4, 64, 64)
+    A = (4, 64, 64)
+
+    def test_paper_winners(self):
+        ranked = compare_dataflows(self.W, self.A, lanes=4)
+        best_names = {s.name for s in ranked if s.dynamic_energy_nj <= ranked[0].dynamic_energy_nj * (1 + 1e-9)}
+        assert "[b,i,j,k]" in best_names and "[k,i,j,b]" in best_names
+
+    def test_all_24_dataflows(self):
+        assert len(ALL_DATAFLOWS) == 24
+        stats = [analyze_dataflow(o, self.W, self.A) for o in ALL_DATAFLOWS]
+        assert len({s.name for s in stats}) == 24
+        # same MACs regardless of order
+        assert len({s.macs for s in stats}) == 1
+
+    def test_reuse_energy_anticorrelated(self):
+        ranked = compare_dataflows(self.W, self.A, lanes=4)
+        assert ranked[0].reuse_instances >= ranked[-1].reuse_instances
+
+    def test_name_format(self):
+        assert dataflow_name(("b", "i", "j", "k")) == "[b,i,j,k]"
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            analyze_dataflow(("b", "i", "j", "k"), (4, 64, 64), (2, 64, 64))
+
+
+class TestOpGraph:
+    def test_table_i_ops_present(self):
+        spec = EncoderSpec.bert_tiny()
+        ops = build_encoder_ops(spec, 1)
+        names = {o.name for o in ops}
+        # per layer/head: q/k/v/qk/softmax/sv/o; per layer: ln1, ffn1, ffn2, ln2
+        assert "L0.h0.q_proj" in names and "L1.h1.softmax" in names
+        assert "L0.ffn1" in names and "L1.ln2" in names
+        n_mac = sum(1 for o in ops if o.kind == "mac")
+        n_smx = sum(1 for o in ops if o.kind == "softmax")
+        assert n_smx == spec.layers * spec.heads
+        assert n_mac == 1 + spec.layers * (6 * spec.heads + 2)
+
+    def test_macs_match_analytic(self):
+        spec = EncoderSpec.bert_tiny()
+        b, s, h, n, f = 4, spec.seq_len, spec.hidden, spec.heads, spec.ffn
+        ops = build_encoder_ops(spec, b)
+        total = sum(o.macs for o in ops)
+        hd = h // n
+        per_layer = n * (3 * b * s * hd * h + 2 * b * s * s * hd + b * s * hd * hd)
+        per_layer += 2 * b * s * h * f
+        analytic = spec.layers * per_layer + b * s * h  # + embed add
+        assert total == analytic
+
+    def test_deps_are_topological(self):
+        ops = build_encoder_ops(EncoderSpec.bert_mini(), 2)
+        topo_check(ops)  # raises on violation

@@ -1,0 +1,52 @@
+"""SpAtten top-k baseline semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topk import topk_attention_probs, topk_prune
+
+
+class TestTopkPrune:
+    def test_keeps_k_largest(self):
+        x = jnp.array([[1.0, -3.0, 0.5, 2.0]])
+        pruned, mask = topk_prune(x, 2)
+        np.testing.assert_array_equal(mask, [[False, True, False, True]])
+        np.testing.assert_array_equal(pruned, [[0.0, -3.0, 0.0, 2.0]])
+
+    def test_k_geq_n_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+        pruned, mask = topk_prune(x, 100)
+        np.testing.assert_array_equal(pruned, x)
+        assert bool(mask.all())
+
+    def test_k_positive(self):
+        with pytest.raises(ValueError):
+            topk_prune(jnp.ones((2, 2)), 0)
+
+    def test_axis_argument(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(6, 4)))
+        _, m0 = topk_prune(x, 2, axis=0)
+        assert m0.sum(axis=0).min() >= 2  # >= due to tie semantics
+        _, m1 = topk_prune(x, 2, axis=-1)
+        assert m1.sum(axis=-1).min() >= 2
+
+    def test_tie_handling_reduces_sparsity_only(self):
+        x = jnp.ones((1, 5))
+        _, mask = topk_prune(x, 2)
+        assert int(mask.sum()) == 5  # all tie at the kth magnitude -> all kept
+
+
+class TestTopkAttention:
+    def test_probs_renormalised(self):
+        scores = jnp.asarray(np.random.default_rng(0).normal(size=(2, 2, 8, 8)))
+        out = topk_attention_probs(scores, 3)
+        probs = jax.nn.softmax(out, -1)
+        np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+        # at most k + ties survive with non-negligible mass
+        assert int((probs > 1e-6).sum(-1).max()) <= 4
+
+    def test_top1_is_argmax(self):
+        scores = jnp.asarray(np.random.default_rng(1).normal(size=(4, 16)))
+        probs = jax.nn.softmax(topk_attention_probs(scores, 1), -1)
+        np.testing.assert_array_equal(jnp.argmax(probs, -1), jnp.argmax(scores, -1))
