@@ -1,0 +1,160 @@
+"""Continuous batching vs slot-granularity serving at a skewed request mix.
+
+The slot-granularity `ServeEngine` runs every admitted row for the wave's
+longest request, so a few long generations strand short rows as padding.
+The paged-KV `ContinuousServeEngine` frees a row the step its request
+finishes and admits queued work immediately, so useful-token throughput
+tracks occupancy instead of the wave maximum.
+
+Measures tokens/s and p50/p99 request latency for both engines on a
+75%-short / 25%-long mix, and verifies the paged decode path is
+bitwise-identical to the dense-KV baseline at target_rho=0.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import zoo
+from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine
+from repro.serve.scheduler import pct as _pct
+
+from .common import banner, save
+
+
+def _tiny_cfg() -> ModelConfig:
+    # big enough that model compute dominates per-call dispatch overhead:
+    # the claim under test is the serving schedule, not kernel launch cost
+    return ModelConfig(
+        name="bench-serve", family="dense", layers=4, d_model=256, heads=8, kv_heads=4,
+        d_ff=512, vocab=512, remat="none",
+    )
+
+
+def _request_mix(n: int, prompt_len: int, short_new: int, long_new: int, rng) -> list[tuple[list[int], int]]:
+    """75% short / 25% long generations, shuffled so waves mix both."""
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(1, 256, size=prompt_len).tolist()
+        new = long_new if i % 4 == 0 else short_new
+        reqs.append((prompt, new))
+    rng.shuffle(reqs)
+    return reqs
+
+
+def _run_baseline(engine, requests, slots):
+    """Wave-at-a-time serving: every wave decodes to its longest request."""
+    t0 = time.perf_counter()
+    outs, latencies = [], []
+    for w0 in range(0, len(requests), slots):
+        wave = requests[w0 : w0 + slots]
+        wave_new = max(new for _, new in wave)
+        got = engine.generate([p for p, _ in wave], max_new_tokens=wave_new)
+        t_wave = time.perf_counter() - t0
+        for (_, new), row in zip(wave, got):
+            outs.append(row[:new])
+            latencies.append(t_wave)  # all submitted at t0; wave finishes together
+    wall = time.perf_counter() - t0
+    return outs, latencies, wall
+
+
+def _run_continuous(engine, requests):
+    engine.clear_history()
+    t0 = time.perf_counter()
+    reqs = [engine.submit(p, max_new_tokens=new) for p, new in requests]
+    engine.run_until_complete()
+    wall = time.perf_counter() - t0
+    outs = [r.generated for r in reqs]
+    latencies = [r.latency() for r in reqs]
+    return outs, latencies, wall, engine.metrics()
+
+
+def run(quick: bool = False) -> dict:
+    banner("serve: paged-KV continuous batching vs slot-granularity baseline")
+    cfg = _tiny_cfg()
+    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    slots = 4
+    n_req = 8 if quick else 48
+    prompt_len = 8
+    short_new, long_new = (4, 32) if quick else (4, 96)
+    max_len = 128
+    repeats = 1 if quick else 3
+    requests = _request_mix(n_req, prompt_len, short_new, long_new, rng)
+    useful = sum(new for _, new in requests)
+
+    baseline = ServeEngine(cfg, params, ServeConfig(slots=slots, max_len=max_len))
+    baseline.generate([p for p, _ in requests[:slots]], max_new_tokens=2)  # jit warmup
+    continuous = ContinuousServeEngine(
+        cfg, params, ContinuousServeConfig(slots=slots, max_len=max_len, page_size=8, prefill_chunk=8)
+    )
+    continuous.generate([p for p, _ in requests[:slots]], max_new_tokens=2)  # jit warmup
+
+    # best-of-N on shared warmed engines: wall-clock on a busy CPU host is
+    # noisy and the claim under test is structural, not load-dependent
+    b_wall = c_wall = float("inf")
+    for _ in range(repeats):
+        outs, lat, wall = _run_baseline(baseline, requests, slots)
+        if wall < b_wall:
+            b_outs, b_lat, b_wall = outs, lat, wall
+        outs, lat, wall, metrics = _run_continuous(continuous, requests)
+        if wall < c_wall:
+            c_outs, c_lat, c_wall, c_metrics = outs, lat, wall, metrics
+
+    # correctness: same tokens from both engines (greedy; prompts replayed
+    # identically), plus a B=1/chunk=1 run that is bitwise-bound to the
+    # dense-KV reference by construction
+    match_all = b_outs == c_outs
+    ident_reqs = requests[:3]
+    base1 = ServeEngine(cfg, params, ServeConfig(slots=1, max_len=max_len))
+    ref = [base1.generate([p], max_new_tokens=new)[0] for p, new in ident_reqs]
+    eng1 = ContinuousServeEngine(
+        cfg, params, ContinuousServeConfig(slots=1, max_len=max_len, page_size=8, prefill_chunk=1)
+    )
+    got = [eng1.generate([p], max_new_tokens=new)[0] for p, new in ident_reqs]
+    bitwise = ref == got
+
+    speedup = (useful / c_wall) / (useful / b_wall)
+    result = {
+        "requests": n_req,
+        "useful_tokens": useful,
+        "baseline": {
+            "tok_per_s": useful / b_wall,
+            "wall_s": b_wall,
+            "p50_latency_s": _pct(sorted(b_lat), 0.50),
+            "p99_latency_s": _pct(sorted(b_lat), 0.99),
+        },
+        "continuous": {
+            "tok_per_s": useful / c_wall,
+            "wall_s": c_wall,
+            "p50_latency_s": _pct(sorted(c_lat), 0.50),
+            "p99_latency_s": _pct(sorted(c_lat), 0.99),
+            "evictions": c_metrics["evictions"],
+        },
+        "speedup": speedup,
+        "outputs_match_baseline": match_all,
+        "bitwise_identical_rho0": bitwise,
+    }
+    print(
+        f"  baseline   : {result['baseline']['tok_per_s']:7.1f} tok/s  "
+        f"p50 {result['baseline']['p50_latency_s']:.3f}s p99 {result['baseline']['p99_latency_s']:.3f}s"
+    )
+    print(
+        f"  continuous : {result['continuous']['tok_per_s']:7.1f} tok/s  "
+        f"p50 {result['continuous']['p50_latency_s']:.3f}s p99 {result['continuous']['p99_latency_s']:.3f}s"
+    )
+    print(f"  speedup {speedup:.2f}x | outputs match: {match_all} | bitwise @ rho=0: {bitwise}")
+    save("serve_continuous", result)
+    if not bitwise:
+        raise AssertionError("paged decode diverged from dense-KV reference at rho=0")
+    if not quick and speedup < 1.5:
+        raise AssertionError(f"continuous batching speedup {speedup:.2f}x < 1.5x target")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -19,6 +19,7 @@ from . import (
     bench_hardware,
     bench_prune_throughput,
     bench_roofline,
+    bench_serve_continuous,
     bench_sparsity_effect,
     bench_stalls,
     bench_utilization,
@@ -35,6 +36,7 @@ BENCHES = {
     "comparison": bench_comparison.run,  # Fig. 20
     "ablation": bench_ablation.run,  # Table IV
     "roofline": bench_roofline.run,  # §Roofline (from dry-run artifacts)
+    "serve_continuous": bench_serve_continuous.run,  # paged-KV continuous batching
 }
 
 

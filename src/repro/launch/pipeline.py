@@ -18,6 +18,7 @@ lowers and by tests on a host mesh.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any
 
 import jax
@@ -28,6 +29,19 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer, zoo
 
 Array = jax.Array
+
+# jax >= 0.5 promotes shard_map to jax.shard_map and later renames
+# check_rep -> check_vma; probe the signature rather than the version
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
 
 
 def stage_fn(cfg: ModelConfig, blocks: Any, h: Array, positions: Array) -> Array:
@@ -95,11 +109,11 @@ def make_pipeline_forward(cfg: ModelConfig, mesh: Mesh, n_micro: int, axis: str 
             h = h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype)
 
         shard = functools.partial(
-            jax.shard_map,
+            _shard_map,
             mesh=mesh,
             in_specs=(P(axis), P()),
             out_specs=P(),
-            check_vma=False,
+            **_SHARD_MAP_NO_CHECK,
         )
         out = shard(per_stage)(params["blocks"], h)
         _, norm = transformer.make_norm(cfg.norm)

@@ -3,6 +3,10 @@ accuracy/throughput knob.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
         --prompts 4 --max-new 16 [--target-rho 0.5]
+
+    # token-granularity continuous batching over the paged KV cache:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --continuous --prompts 16 --max-new 32 --adaptive-rho
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import zoo
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine
 
 
 def main() -> None:
@@ -26,21 +30,48 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--target-rho", type=float, default=None, help="DynaTran runtime sparsity knob")
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--continuous", action="store_true", help="paged-KV continuous batching engine")
+    ap.add_argument("--slots", type=int, default=8, help="[continuous] decode batch width")
+    ap.add_argument("--page-size", type=int, default=16, help="[continuous] tokens per KV page")
+    ap.add_argument("--prefill-chunk", type=int, default=16, help="[continuous] prompt tokens per prefill call")
+    ap.add_argument("--adaptive-rho", action="store_true", help="[continuous] close the rho loop over queue depth")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     if cfg.family in ("vlm", "audio"):
         raise SystemExit(f"{args.arch}: serve CLI drives the LM path; use examples/ for frontend stubs")
     params = zoo.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(cfg, params, ServeConfig(slots=args.prompts, max_len=args.max_len, target_rho=args.target_rho))
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab, size=args.prompt_len).tolist() for _ in range(args.prompts)]
     t0 = time.perf_counter()
-    outs = engine.generate(prompts, max_new_tokens=args.max_new)
-    dt = time.perf_counter() - t0
-    toks = sum(len(o) for o in outs)
-    print(f"[serve] {args.prompts} prompts x {args.max_new} new tokens in {dt:.2f}s -> {toks/dt:.1f} tok/s")
+    if args.continuous:
+        engine = ContinuousServeEngine(
+            cfg,
+            params,
+            ContinuousServeConfig(
+                slots=min(args.slots, args.prompts),
+                max_len=args.max_len,
+                page_size=args.page_size,
+                prefill_chunk=args.prefill_chunk,
+                target_rho=args.target_rho,
+                adaptive_rho=args.adaptive_rho,
+            ),
+        )
+        outs = engine.generate(prompts, max_new_tokens=args.max_new)
+        dt = time.perf_counter() - t0
+        m = engine.metrics()
+        print(
+            f"[serve] continuous: {m['tokens']} tokens in {dt:.2f}s -> {m['tokens']/dt:.1f} tok/s | "
+            f"p50 {m['p50_latency_s']:.3f}s p99 {m['p99_latency_s']:.3f}s | "
+            f"evictions {m['evictions']} rho {m['rho']:.2f}"
+        )
+    else:
+        engine = ServeEngine(cfg, params, ServeConfig(slots=args.prompts, max_len=args.max_len, target_rho=args.target_rho))
+        outs = engine.generate(prompts, max_new_tokens=args.max_new)
+        dt = time.perf_counter() - t0
+        toks = sum(len(o) for o in outs)
+        print(f"[serve] {args.prompts} prompts x {args.max_new} new tokens in {dt:.2f}s -> {toks/dt:.1f} tok/s")
     for i, o in enumerate(outs[: min(4, len(outs))]):
         print(f"  out[{i}]: {o[:12]}{'...' if len(o) > 12 else ''}")
 

@@ -259,3 +259,30 @@ def decode_attention(
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bngst,btnd->bsngd", probs, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def chunk_decode_attention(
+    q: Array,  # [B, C, H, D] — C new queries at absolute positions start..start+C-1
+    k_cache: Array,  # [B, T, Hkv, D] — already contains the chunk's K/V
+    v_cache: Array,
+    start_len: Array,  # [B] int32: tokens in the cache BEFORE this chunk
+    *,
+    logit_cap: float | None = None,
+    scale: float | None = None,
+) -> Array:
+    """Prefill-chunk attention against a cache: query i of the chunk sees
+    cache positions < start_len + i + 1.  Mirrors ``decode_attention``
+    op-for-op so the C == 1 case is bitwise-identical to it (the continuous
+    serving engine relies on this for its dense-reference equivalence)."""
+    b, c, h, d = q.shape
+    _, t, hkv, _ = k_cache.shape
+    scale = scale if scale is not None else d**-0.5
+    qg = _group_heads(q, hkv).astype(jnp.float32) * scale  # [B,C,Hkv,G,D]
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k_cache.astype(jnp.float32))  # [B,Hkv,G,C,T]
+    scores = _softcap(scores, logit_cap)
+    pos = jnp.arange(t)
+    valid = pos[None, None, :] < (start_len[:, None, None] + jnp.arange(c)[None, :, None] + 1)  # [B,C,T]
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, c, h, d).astype(q.dtype)

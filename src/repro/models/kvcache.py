@@ -57,3 +57,135 @@ def update_layer_cache(k_cache: Array, v_cache: Array, k_new: Array, v_new: Arra
 
 def cache_bytes(layers: int, batch: int, max_len: int, n_kv: int, head_dim: int, elem_bytes: int = 2) -> int:
     return 2 * layers * batch * max_len * n_kv * head_dim * elem_bytes
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: fixed-size pages, free-list allocator, per-sequence page
+# tables.  Sequences share one global pool, so total memory scales with live
+# tokens instead of slots * max_len — the structural requirement for
+# token-granularity continuous batching (vLLM-style paging).
+# ---------------------------------------------------------------------------
+
+TRASH_PAGE = 0  # reserved scratch page: masked-out rows scatter here
+
+
+class PageAllocator:
+    """Host-side free-list allocator over a fixed pool of KV pages.
+
+    Page ``TRASH_PAGE`` (index 0) is reserved as a write sink for inactive
+    batch rows, so a jitted decode step can always run full-width: rows with
+    no live sequence point their whole page table at the trash page and their
+    writes land there harmlessly.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: list[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
+        self._owned: dict[int, list[int]] = {}  # seq id -> pages, in order
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` cache entries."""
+        return -(-tokens // self.page_size)
+
+    def alloc(self, seq_id: int, n: int = 1) -> list[int] | None:
+        """Append ``n`` pages to ``seq_id``'s table; None (no-op) if the pool
+        cannot satisfy the request."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(seq_id, []).extend(pages)
+        return pages
+
+    def owned(self, seq_id: int) -> list[int]:
+        return list(self._owned.get(seq_id, ()))
+
+    def free(self, seq_id: int) -> int:
+        """Release all pages of ``seq_id`` back to the free list."""
+        pages = self._owned.pop(seq_id, [])
+        self._free.extend(reversed(pages))
+        return len(pages)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKV:
+    """Device-side page pools, one pair of arrays per attention-pattern slot.
+
+    k[i] / v[i]: [n_cycles, num_pages, page_size, Hkv, D].  Page tables and
+    lengths are *not* carried here — the scheduler owns them host-side and
+    passes fresh arrays into every jitted step (shapes are static, so there
+    is no retrace).
+    """
+
+    k: dict[str, Array]
+    v: dict[str, Array]
+
+    def tree_flatten(self):
+        keys = sorted(self.k)
+        return tuple(self.k[i] for i in keys) + tuple(self.v[i] for i in keys), tuple(keys)
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        n = len(keys)
+        return cls(k=dict(zip(keys, children[:n])), v=dict(zip(keys, children[n:])))
+
+    @property
+    def num_pages(self) -> int:
+        return next(iter(self.k.values())).shape[1]
+
+    @property
+    def page_size(self) -> int:
+        return next(iter(self.k.values())).shape[2]
+
+
+def init_paged_pools(
+    pattern_len: int, n_cycles: int, num_pages: int, page_size: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16
+) -> PagedKV:
+    shape = (n_cycles, num_pages, page_size, n_kv, head_dim)
+    k = {str(i): jnp.zeros(shape, dtype) for i in range(pattern_len)}
+    v = {str(i): jnp.zeros(shape, dtype) for i in range(pattern_len)}
+    return PagedKV(k=k, v=v)
+
+
+def gather_pages(pool: Array, page_table: Array) -> Array:
+    """jnp gather: pool [num_pages, P, Hkv, D] + table [B, maxp] ->
+    contiguous per-row cache view [B, maxp * P, Hkv, D].
+
+    Rows gathered through trash/stale pages carry garbage values; attention
+    masks them by length, and because masked scores are exactly NEG_INF in
+    both the paged and the dense path, downstream logits stay bitwise equal
+    to the dense reference.
+    """
+    b, maxp = page_table.shape
+    _, p, hkv, d = pool.shape
+    return pool[page_table].reshape(b, maxp * p, hkv, d)
+
+
+def scatter_token(pool: Array, page_table: Array, length: Array, new: Array) -> Array:
+    """Write one step's per-row vectors ``new`` [B, Hkv, D] at each row's
+    current position (page = table[row][length // P], offset = length % P)."""
+    p = pool.shape[1]
+    rows = jnp.arange(page_table.shape[0])
+    page = page_table[rows, length // p]
+    return pool.at[page, length % p].set(new.astype(pool.dtype), mode="drop")
+
+
+def scatter_chunk(pool: Array, page_table_row: Array, start: Array, new: Array, valid: Array) -> Array:
+    """Scatter a prefill chunk ``new`` [C, Hkv, D] for ONE sequence at
+    absolute positions start..start+C-1.  ``valid`` [C] bool masks padding
+    tokens: their writes are routed out of bounds and dropped."""
+    p = pool.shape[1]
+    pos = start + jnp.arange(new.shape[0])
+    page = jnp.where(valid, page_table_row[pos // p], pool.shape[0])  # OOB -> dropped
+    return pool.at[page, pos % p].set(new.astype(pool.dtype), mode="drop")
+
+
+def paged_cache_bytes(layers: int, num_pages: int, page_size: int, n_kv: int, head_dim: int, elem_bytes: int = 2) -> int:
+    return 2 * layers * num_pages * page_size * n_kv * head_dim * elem_bytes

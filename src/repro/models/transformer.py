@@ -27,7 +27,7 @@ from repro.configs.base import ModelConfig
 from repro.core.dynatran import SparsityConfig, site_prune
 from repro.launch.sharding import constrain
 from . import attention as attn
-from .kvcache import DecodeState
+from .kvcache import DecodeState, PagedKV, gather_pages, init_paged_pools, scatter_chunk, scatter_token
 from .layers import ACTIVATIONS, apply_mrope, apply_rope, dense_init, embed_init, make_norm, rms_norm, softcap
 from .moe import moe_ffn, moe_init
 from .ssm import ssm_init, ssm_mix, ssm_state_init
@@ -364,3 +364,147 @@ def decode_step(
     logits = constrain(logits[:, 0], "logits_2d")
     new_state = DecodeState(k=ks, v=vs, ssm=ssms if cfg.ssm_state else None, length=length + 1)
     return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Paged decode/prefill: the continuous-batching serve path.  K/V live in a
+# global page pool shared across sequences; per-row page tables resolve the
+# indirection.  The jnp read path is bitwise-identical to ``decode_step``
+# on a dense cache (masked scores are exactly NEG_INF either way); the
+# Pallas path (``use_pallas=True``) fuses gather + attention and reads only
+# live pages, at online-softmax accuracy.
+# ---------------------------------------------------------------------------
+
+
+def check_paged_support(cfg: ModelConfig) -> None:
+    if cfg.ssm_state:
+        raise NotImplementedError("paged KV: SSM/hybrid recurrent state is not paged yet")
+    if any(p != "full" for p in cfg.attention_pattern):
+        raise NotImplementedError("paged KV: sliding-window (ring) layers are not paged yet")
+    if cfg.kv_cache_dtype == "int8":
+        raise NotImplementedError("paged KV: int8 cache quantisation is not paged yet")
+
+
+def init_paged_state(cfg: ModelConfig, num_pages: int, page_size: int, dtype=jnp.bfloat16) -> PagedKV:
+    check_paged_support(cfg)
+    return init_paged_pools(cfg.pattern_len, cfg.n_cycles, num_pages, page_size, cfg.kv_heads, cfg.hd, dtype)
+
+
+def paged_decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    pools: PagedKV,
+    page_table: Array,  # [B, maxp] int32
+    length: Array,  # [B] int32 — tokens already cached per row
+    tokens: Array,  # [B, 1]
+    *,
+    taus=None,
+    use_pallas: bool = False,
+) -> tuple[Array, PagedKV]:
+    """One serve step against the paged cache: logits + updated pools."""
+    sparsity = cfg.sparsity
+    h = params["embed"][tokens]
+    if cfg.embed_scale:
+        h = h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype)
+    if cfg.pos_kind == "learned":
+        h = h + params["pos_embed"][length[:, None] % params["pos_embed"].shape[0]]
+    positions = length[:, None]  # [B,1]
+    _, norm = make_norm(cfg.norm)
+
+    def cycle_body(carry, xs):
+        hh = carry
+        cycle_params, kc, vc = xs
+        new_k, new_v = {}, {}
+        for i, _pat in enumerate(cfg.attention_pattern):
+            p = cycle_params[str(i)]
+            _x, q, k1, v1 = _qkv(p, cfg, hh, positions, None)
+            kcache = scatter_token(kc[str(i)], page_table, length, k1[:, 0])
+            vcache = scatter_token(vc[str(i)], page_table, length, v1[:, 0])
+            eff_len = length + 1
+            if use_pallas:
+                from repro.kernels.paged_attention import paged_decode_attention
+
+                ao = paged_decode_attention(q, kcache, vcache, page_table, eff_len, logit_cap=cfg.attn_logit_cap)
+            else:
+                k_read = gather_pages(kcache, page_table)
+                v_read = gather_pages(vcache, page_table)
+                ao = attn.decode_attention(q, k_read, v_read, eff_len, window=None, logit_cap=cfg.attn_logit_cap)
+            ao = site_prune(ao, "attn_out", sparsity, taus)
+            attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
+            if cfg.post_norms:
+                attn_out = norm(p["post_attn_norm"], attn_out)
+            hh = hh + attn_out
+            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), sparsity, taus)
+            if cfg.post_norms:
+                mlp_out = norm(p["post_mlp_norm"], mlp_out)
+            hh = hh + mlp_out
+            new_k[str(i)], new_v[str(i)] = kcache, vcache
+        return hh, (new_k, new_v)
+
+    h, (ks, vs) = jax.lax.scan(cycle_body, h, (params["blocks"], pools.k, pools.v))
+    h = norm(params["final_norm"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_cap)
+    logits = constrain(logits[:, 0], "logits_2d")
+    return logits, PagedKV(k=ks, v=vs)
+
+
+def paged_prefill_chunk(
+    params: dict,
+    cfg: ModelConfig,
+    pools: PagedKV,
+    page_table_row: Array,  # [maxp] int32 — ONE sequence's page table
+    start_len: Array,  # scalar i32: tokens already cached
+    tokens: Array,  # [1, C] — chunk of prompt tokens (right-padded)
+    n_valid: Array,  # scalar i32: real tokens in this chunk
+    *,
+    taus=None,
+) -> tuple[Array, PagedKV]:
+    """Prefill C prompt tokens at once for one sequence, writing K/V into
+    its pages.  Returns next-token logits at the last valid position [1, V].
+    With C == 1 this is op-for-op identical to ``paged_decode_step`` on a
+    batch of one (the engine's dense-equivalence mode)."""
+    sparsity = cfg.sparsity
+    c = tokens.shape[1]
+    h = params["embed"][tokens]  # [1, C, D]
+    if cfg.embed_scale:
+        h = h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype)
+    positions = (start_len + jnp.arange(c))[None, :]  # [1, C]
+    if cfg.pos_kind == "learned":
+        h = h + params["pos_embed"][positions % params["pos_embed"].shape[0]]
+    valid = jnp.arange(c) < n_valid
+    _, norm = make_norm(cfg.norm)
+
+    def cycle_body(carry, xs):
+        hh = carry
+        cycle_params, kc, vc = xs
+        new_k, new_v = {}, {}
+        for i, _pat in enumerate(cfg.attention_pattern):
+            p = cycle_params[str(i)]
+            _x, q, k1, v1 = _qkv(p, cfg, hh, positions, None)
+            kcache = scatter_chunk(kc[str(i)], page_table_row, start_len, k1[0], valid)
+            vcache = scatter_chunk(vc[str(i)], page_table_row, start_len, v1[0], valid)
+            k_read = gather_pages(kcache, page_table_row[None])
+            v_read = gather_pages(vcache, page_table_row[None])
+            ao = attn.chunk_decode_attention(q, k_read, v_read, start_len[None], logit_cap=cfg.attn_logit_cap)
+            ao = site_prune(ao, "attn_out", sparsity, taus)
+            attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
+            if cfg.post_norms:
+                attn_out = norm(p["post_attn_norm"], attn_out)
+            hh = hh + attn_out
+            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), sparsity, taus)
+            if cfg.post_norms:
+                mlp_out = norm(p["post_mlp_norm"], mlp_out)
+            hh = hh + mlp_out
+            new_k[str(i)], new_v[str(i)] = kcache, vcache
+        return hh, (new_k, new_v)
+
+    h, (ks, vs) = jax.lax.scan(cycle_body, h, (params["blocks"], pools.k, pools.v))
+    h = jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)  # last valid position
+    h = norm(params["final_norm"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_cap)
+    logits = constrain(logits[:, 0], "logits_2d")
+    return logits, PagedKV(k=ks, v=vs)

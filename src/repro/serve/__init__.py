@@ -1,1 +1,2 @@
-from .engine import ServeConfig, ServeEngine  # noqa: F401
+from .engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine  # noqa: F401
+from .scheduler import ContinuousScheduler, Request, RhoController, summarize  # noqa: F401

@@ -1,13 +1,22 @@
-"""Batched serving engine: prefill + decode with KV caches and DynaTran's
-runtime accuracy/throughput knob.
+"""Serving engines: slot-granularity baseline and token-granularity
+continuous batching with a paged KV cache.
 
-`ServeEngine` keeps one jitted prefill and one jitted decode step; requests
-are batched to the configured slot count (continuous batching at slot
-granularity: finished rows are replaced by queued requests between steps).
+`ServeEngine` (baseline) keeps one jitted prefill and one jitted decode
+step; requests are batched to the configured slot count (continuous
+batching at slot granularity: finished rows are replaced between
+``generate`` calls only).
+
+`ContinuousServeEngine` rebuilds that loop around a block-paged KV cache
+(`repro.models.kvcache`): sequences are admitted and evicted every step,
+prefill chunks interleave with decode batches, and a `RhoController` closes
+DynaTran's accuracy/throughput knob over queue depth.  Thresholds are
+passed into the jitted step as runtime scalars, so rho changes never
+recompile (paper Fig. 19's dynamic adjustment).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -16,7 +25,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.dynatran import SparsityConfig, ThresholdCalculator
+from repro.models import transformer as tfm
 from repro.models import zoo
+from repro.models.kvcache import PageAllocator
+from repro.serve.scheduler import ContinuousScheduler, Request, RhoController, summarize
 
 
 @dataclasses.dataclass
@@ -94,3 +106,257 @@ class ServeEngine:
                 row = row[: row.index(eos_id) + 1]
             result.append(row)
         return result
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged KV cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ContinuousServeConfig:
+    slots: int = 8  # decode batch width
+    max_len: int = 512  # per-sequence token budget (prompt + generated)
+    page_size: int = 16  # tokens per KV page
+    num_pages: int = 0  # pool size; 0 -> slots * pages_per_seq + 1 (uncontended)
+    prefill_chunk: int = 16  # prompt tokens cached per prefill call
+    # tokens decoded per host tick (multi-step scheduling).  The scheduler
+    # must sync on every emitted token; scanning W steps per jitted call
+    # amortises that host round-trip W-fold.  Rows finishing mid-window
+    # waste at most W-1 row-steps (their surplus tokens are discarded).
+    decode_window: int = 1
+    use_pallas: bool = False  # fused paged-attention kernel (interpret mode on CPU)
+    target_rho: Optional[float] = None  # fixed DynaTran knob when not adaptive
+    adaptive_rho: bool = False  # close the rho loop over queue depth
+    rho_min: float = 0.0
+    rho_max: float = 0.7
+    depth_lo: int = 1
+    depth_hi: int = 16
+    rho_ema: float = 0.5
+
+    @property
+    def pages_per_seq(self) -> int:
+        if self.max_len % self.page_size:
+            raise ValueError("max_len must be a multiple of page_size")
+        return self.max_len // self.page_size
+
+
+class ContinuousServeEngine:
+    """Token-granularity continuous batching: every step either decodes one
+    token for all ready rows or prefills one chunk of an admitted prompt,
+    and the scheduler re-fills freed slots/pages immediately.
+
+    At ``target_rho == 0`` (or sparsity mode "none") decode logits are
+    bitwise-identical to the dense-KV `ServeEngine` path — the paged read
+    masks exactly the positions the dense read masks.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        scfg: ContinuousServeConfig,
+        calculator: Optional[ThresholdCalculator] = None,
+    ):
+        tfm.check_paged_support(cfg)
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.maxp = scfg.pages_per_seq
+        num_pages = scfg.num_pages or scfg.slots * self.maxp + 1
+        self.allocator = PageAllocator(num_pages, scfg.page_size)
+        self.sched = ContinuousScheduler(scfg.slots, self.allocator, self.maxp)
+        self.pools = tfm.init_paged_state(cfg, num_pages, scfg.page_size)
+
+        sp: SparsityConfig = cfg.sparsity
+        self._dynatran = sp.mode == "dynatran"
+        self._sites = sp.sites
+        calculator = calculator or ThresholdCalculator.default()
+        # host-side copies of the transfer curves: the per-step tau lookup is
+        # two np.interp calls, no device dispatch
+        self._curves = {
+            s: (np.asarray(c.rhos, np.float64), np.asarray(c.taus, np.float64))
+            for s, c in calculator.curves.items()
+        }
+        self.rho_ctrl = (
+            RhoController(scfg.rho_min, scfg.rho_max, scfg.depth_lo, scfg.depth_hi, scfg.rho_ema)
+            if (self._dynatran and scfg.adaptive_rho)
+            else None
+        )
+        base_rho = scfg.target_rho if scfg.target_rho is not None else sp.target_rho
+        self._fixed_rho = float(base_rho)
+        self.current_rho = self._fixed_rho if self._dynatran else 0.0
+
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(0,))
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0,))
+        self._rid = 0
+        self._tick = 0
+        self.requests: list[Request] = []
+
+    # --- jitted bodies ----------------------------------------------------
+    def _decode_impl(self, pools, page_table, lengths, tokens, taus):
+        """Scan ``decode_window`` steps per host round-trip; returns the
+        window's tokens [W, B]."""
+
+        def body(carry, _):
+            pools, lengths, toks = carry
+            logits, pools = tfm.paged_decode_step(
+                self.params, self.cfg, pools, page_table, lengths, toks,
+                taus=taus, use_pallas=self.scfg.use_pallas,
+            )
+            nxt = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
+            return (pools, lengths + 1, nxt[:, None]), nxt
+
+        (pools, _, _), toks = jax.lax.scan(
+            body, (pools, lengths, tokens), None, length=self.scfg.decode_window
+        )
+        return pools, toks
+
+    def _prefill_impl(self, pools, pt_row, start, tokens, n_valid, taus):
+        logits, pools = tfm.paged_prefill_chunk(
+            self.params, self.cfg, pools, pt_row, start, tokens, n_valid, taus=taus
+        )
+        next_tok = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
+        return pools, next_tok, logits
+
+    # --- runtime DynaTran knob -------------------------------------------
+    def _current_taus(self) -> Optional[dict]:
+        if not self._dynatran:
+            return None
+        rho = self.rho_ctrl.update(self.sched.queue_depth) if self.rho_ctrl else self._fixed_rho
+        self.current_rho = rho
+        return {
+            s: np.float32(np.interp(rho, *self._curves[s]))
+            for s in self._sites
+            if s in self._curves
+        }
+
+    # --- public API -------------------------------------------------------
+    def submit(
+        self,
+        prompt: list[int],
+        max_new_tokens: int = 32,
+        eos_id: int = -1,
+        slo_s: Optional[float] = None,
+    ) -> Request:
+        assert prompt, "empty prompt"
+        req = Request(
+            rid=self._rid, prompt=list(prompt), max_new_tokens=max_new_tokens,
+            eos_id=eos_id, slo_s=slo_s, submit_time=time.perf_counter(),
+        )
+        self._rid += 1
+        self.sched.submit(req)
+        self.requests.append(req)
+        return req
+
+    def step(self) -> list[Request]:
+        """One engine tick: admissions, then one prefill chunk OR one decode
+        batch (alternating when both are pending).  Returns newly finished
+        requests."""
+        self._tick += 1
+        self.sched.admit_ready()
+        taus = self._current_taus()
+        prefill_req = self.sched.prefill_candidate()
+        ready = self.sched.decode_rows()
+        finished: list[Request] = []
+        if prefill_req is not None and (not ready or self._tick % 2 == 1):
+            finished += self._prefill_step(prefill_req, taus)
+        elif ready:
+            finished += self._decode_step(ready, taus)
+        return finished
+
+    def run_until_complete(self, max_steps: int = 1_000_000) -> list[Request]:
+        finished = []
+        for _ in range(max_steps):
+            if not self.sched.queue and not self.sched.active:
+                return finished
+            finished += self.step()
+        raise RuntimeError("run_until_complete: step budget exhausted")
+
+    def generate(self, prompts: list[list[int]], max_new_tokens: int = 32, eos_id: int = -1) -> list[list[int]]:
+        """Baseline-compatible API: submit all prompts, run to completion,
+        return generated token lists in submission order."""
+        reqs = [self.submit(p, max_new_tokens, eos_id) for p in prompts]
+        self.run_until_complete()
+        return [r.generated for r in reqs]
+
+    def metrics(self) -> dict:
+        out = summarize(self.requests)
+        out["rho"] = self.current_rho
+        out["free_pages"] = self.allocator.free_pages
+        out["queue_depth"] = self.sched.queue_depth
+        return out
+
+    def clear_history(self) -> None:
+        """Drop finished requests from the metrics window.  Long-lived
+        engines should call this after consuming ``metrics()`` — the
+        request history grows without bound otherwise."""
+        self.requests = [r for r in self.requests if not r.done]
+
+    # --- internals --------------------------------------------------------
+    def _finish(self, req: Request) -> None:
+        req.finish_time = time.perf_counter()
+        self.sched.finish(req)
+
+    def _prefill_step(self, req: Request, taus) -> list[Request]:
+        replay = req.replay
+        c = self.scfg.prefill_chunk
+        chunk = replay[req.prefill_pos : req.prefill_pos + c]
+        nv = len(chunk)
+        padded = np.zeros((1, c), np.int32)
+        padded[0, :nv] = chunk
+        pt_row = jnp.asarray(self.sched.page_table_row(req), jnp.int32)
+        self.pools, next_tok, _ = self._prefill(
+            self.pools, pt_row, jnp.asarray(req.prefill_pos, jnp.int32),
+            jnp.asarray(padded), jnp.asarray(nv, jnp.int32), taus,
+        )
+        req.prefill_pos += nv
+        req.cache_len = req.prefill_pos
+        if req.prefill_pos < len(replay):
+            return []
+        req.ready = True
+        if req.generated:  # re-admitted after eviction: resume, don't resample
+            req.pending_token = req.generated[-1]
+            return []
+        tok = int(next_tok[0])
+        req.generated.append(tok)
+        req.pending_token = tok
+        req.first_token_time = time.perf_counter()
+        if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
+            self._finish(req)
+            return [req]
+        return []
+
+    def _decode_step(self, ready: list[Request], taus) -> list[Request]:
+        window = self.scfg.decode_window
+        rows: list[Request] = []
+        for req in ready:
+            if req.slot is not None and self.sched.grow(req, window):
+                rows.append(req)
+        rows = [r for r in rows if r.slot is not None]  # grow() may evict peers
+        if not rows:
+            return []
+        b, maxp = self.scfg.slots, self.maxp
+        pt = np.zeros((b, maxp), np.int32)
+        lens = np.zeros((b,), np.int32)
+        toks = np.zeros((b, 1), np.int32)
+        for req in rows:
+            pt[req.slot] = self.sched.page_table_row(req)
+            lens[req.slot] = req.cache_len
+            toks[req.slot, 0] = req.pending_token
+        self.pools, win_tok = self._decode(
+            self.pools, jnp.asarray(pt), jnp.asarray(lens), jnp.asarray(toks), taus
+        )
+        win_tok = np.asarray(win_tok)  # [W, B]
+        finished = []
+        for req in rows:
+            for w in range(window):
+                tok = int(win_tok[w, req.slot])
+                req.cache_len += 1
+                req.generated.append(tok)
+                req.pending_token = tok
+                if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
+                    self._finish(req)
+                    finished.append(req)
+                    break  # surplus window tokens are discarded
+        return finished

@@ -1,6 +1,9 @@
 """Binary-mask compressed format + pre/post-compute sparsity module algebra
 (paper Fig. 8) — property tests prove losslessness and dense-equality."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra.numpy import arrays
 
