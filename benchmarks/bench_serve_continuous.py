@@ -34,6 +34,85 @@ def _tiny_cfg() -> ModelConfig:
     )
 
 
+def _ring_cfg() -> ModelConfig:
+    # gemma2-style local/global alternation: half the layers page into
+    # window-budget ring tables instead of max_len-budget full tables
+    return ModelConfig(
+        name="bench-serve-ring", family="dense", layers=4, d_model=256, heads=8, kv_heads=4,
+        d_ff=512, vocab=512, remat="none",
+        attention_pattern=("sliding", "full"), window=32,
+    )
+
+
+def _pool_bytes_by_kind(engine) -> dict:
+    """Split the engine's pool bytes into ring vs full slots."""
+    out = {"ring": 0, "full": 0}
+    for i, kind in enumerate(engine.layout.slot_kinds):
+        for entry in (engine.pools.k[str(i)], engine.pools.v[str(i)]):
+            out[kind] += sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(entry))
+    return out
+
+
+def _run_ring_section(quick: bool) -> dict:
+    """Sliding-window (ring) paging on the continuous engine: correctness
+    vs the dense baseline, throughput, and the memory claim — ring pool
+    bytes scale with ``window`` while a dense cache scales with max_len."""
+    from repro.models.kvcache import cache_bytes
+
+    cfg = _ring_cfg()
+    params = zoo.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    slots, window = 4, cfg.window
+    n_req = 6 if quick else 16
+    new_tokens = 24 if quick else 48
+    requests = [(rng.integers(1, 256, size=8).tolist(), new_tokens) for _ in range(n_req)]
+    useful = sum(new for _, new in requests)
+
+    base = ServeEngine(cfg, params, ServeConfig(slots=1, max_len=128))
+    want = [base.generate([p], max_new_tokens=new)[0] for p, new in requests[:3]]
+    eng1 = ContinuousServeEngine(
+        cfg, params, ContinuousServeConfig(slots=1, max_len=128, page_size=8, prefill_chunk=1)
+    )
+    got = [eng1.generate([p], max_new_tokens=new)[0] for p, new in requests[:3]]
+    bitwise = want == got
+
+    engine = ContinuousServeEngine(
+        cfg, params, ContinuousServeConfig(slots=slots, max_len=128, page_size=8, prefill_chunk=8)
+    )
+    engine.generate([p for p, _ in requests[:slots]], max_new_tokens=2)  # jit warmup
+    engine.clear_history()
+    t0 = time.perf_counter()
+    for p, new in requests:
+        engine.submit(p, max_new_tokens=new)
+    engine.run_until_complete()
+    wall = time.perf_counter() - t0
+
+    # memory scaling: ring pool bytes are flat in max_len (window-bound);
+    # the dense per-slot cache and the full-attention pool both grow linearly
+    scaling = []
+    for max_len in (128, 256, 512):
+        e = ContinuousServeEngine(
+            cfg, params, ContinuousServeConfig(slots=slots, max_len=max_len, page_size=8)
+        )
+        kinds = _pool_bytes_by_kind(e)
+        scaling.append(
+            {
+                "max_len": max_len,
+                "ring_pool_bytes": kinds["ring"],
+                "full_pool_bytes": kinds["full"],
+                "dense_cache_bytes": cache_bytes(cfg.layers, slots, max_len, cfg.kv_heads, cfg.hd),
+            }
+        )
+    flat = scaling[0]["ring_pool_bytes"] == scaling[-1]["ring_pool_bytes"]
+    return {
+        "bitwise_identical_rho0": bitwise,
+        "tok_per_s": useful / wall,
+        "window": window,
+        "memory_scaling": scaling,
+        "ring_bytes_flat_in_max_len": flat,
+    }
+
+
 def _request_mix(n: int, prompt_len: int, short_new: int, long_new: int, rng) -> list[tuple[list[int], int]]:
     """75% short / 25% long generations, shuffled so waves mix both."""
     reqs = []
@@ -118,8 +197,11 @@ def run(quick: bool = False) -> dict:
     got = [eng1.generate([p], max_new_tokens=new)[0] for p, new in ident_reqs]
     bitwise = ref == got
 
+    ring = _run_ring_section(quick)
+
     speedup = (useful / c_wall) / (useful / b_wall)
     result = {
+        "ring": ring,
         "requests": n_req,
         "useful_tokens": useful,
         "baseline": {
@@ -148,9 +230,19 @@ def run(quick: bool = False) -> dict:
         f"p50 {result['continuous']['p50_latency_s']:.3f}s p99 {result['continuous']['p99_latency_s']:.3f}s"
     )
     print(f"  speedup {speedup:.2f}x | outputs match: {match_all} | bitwise @ rho=0: {bitwise}")
+    ring_mb = [(s["max_len"], s["ring_pool_bytes"] / 1e6, s["dense_cache_bytes"] / 1e6) for s in ring["memory_scaling"]]
+    print(
+        f"  ring       : {ring['tok_per_s']:7.1f} tok/s  bitwise @ rho=0: {ring['bitwise_identical_rho0']} | "
+        f"ring pool MB vs dense MB over max_len: "
+        + ", ".join(f"{ml}: {r:.2f}/{d:.2f}" for ml, r, d in ring_mb)
+    )
     save("serve_continuous", result)
     if not bitwise:
         raise AssertionError("paged decode diverged from dense-KV reference at rho=0")
+    if not ring["bitwise_identical_rho0"]:
+        raise AssertionError("ring-paged decode diverged from dense-KV reference at rho=0")
+    if not ring["ring_bytes_flat_in_max_len"]:
+        raise AssertionError("ring pool bytes grew with max_len — ring paging is not window-bound")
     if not quick and speedup < 1.5:
         raise AssertionError(f"continuous batching speedup {speedup:.2f}x < 1.5x target")
     return result

@@ -1,5 +1,11 @@
 """gemma2-9b [dense] — local+global alternating attention, logit softcaps
-[arXiv:2408.00118; hf]."""
+[arXiv:2408.00118; hf].
+
+Serving: the continuous engine pages the "sliding" pattern slot into ring
+tables (ceil(window/P)+1 pages per sequence — cache memory bound by the
+4096-token window) and the "full" slot into max_len-budget tables; both
+kinds also serve quantised via ``kv_cache_dtype="int8"`` scale-pool pages.
+"""
 from .base import ModelConfig
 
 

@@ -1,5 +1,11 @@
 """hymba-1.5b [hybrid] — parallel attention + Mamba heads, ssm_state=16,
-sliding-window attention [arXiv:2411.13676; hf]."""
+sliding-window attention [arXiv:2411.13676; hf].
+
+Serving: every attention layer pages into window-budget ring tables (the
+whole KV cache is bound by the 1024-token window) and the Mamba heads'
+O(1)-per-sequence recurrent state rides densely per engine slot — the
+continuous engine serves this family end-to-end.
+"""
 from .base import ModelConfig
 
 

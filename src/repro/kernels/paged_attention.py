@@ -118,23 +118,55 @@ def paged_scatter(
 # ---------------------------------------------------------------------------
 
 
-def _attn_kernel(pt_ref, len_ref, q_ref, kpool_ref, vpool_ref, out_ref, *, page_size, logit_cap):
+def _attn_kernel(pt_ref, len_ref, q_ref, *refs, page_size, logit_cap, window, quant):
+    """Online-softmax decode attention over live pages.
+
+    ``quant``: k/v pools are int8 with parallel bf16 scale pools
+    ([num_pages, P, Hkv]); dequantisation is fused into the page load.
+    ``window``: ring table — a table of C = maxp * P logical ring slots
+    holding the trailing ``window`` positions; page slot offsets are mapped
+    back to absolute positions and masked to the window.
+    """
+    out_ref = refs[-1]
+    kpool_ref, vpool_ref = refs[0], refs[1]
+    ks_ref, vs_ref = (refs[2], refs[3]) if quant else (None, None)
     b = pl.program_id(0)
     hkv, g, d = q_ref.shape[1:]
     q = q_ref[0].astype(jnp.float32)  # [Hkv, G, D], pre-scaled
-    length = len_ref[b]
-    n_live = (length + page_size - 1) // page_size
+    length = len_ref[b]  # tokens in the cache, INCLUDING the current one
+    maxp = pt_ref.shape[1]
+    n_live = jnp.minimum((length + page_size - 1) // page_size, maxp)
+    if window is not None:
+        capacity = maxp * page_size
+
+    def load(pool_ref, scale_ref, page):
+        x = pl.load(pool_ref, (pl.dslice(page, 1),))[0]  # [P, Hkv, D]
+        if scale_ref is not None:
+            s = pl.load(scale_ref, (pl.dslice(page, 1),))[0]  # [P, Hkv]
+            # compute in f32 and round through bf16 explicitly: interpret
+            # mode runs bf16 arithmetic at f32 precision, which would
+            # silently diverge from the jnp dequant path
+            x = (x.astype(jnp.float32) * s.astype(jnp.float32)[..., None]).astype(jnp.bfloat16)
+        return x.astype(jnp.float32)
 
     def body(p, carry):
         m, lsum, acc = carry
         page = pt_ref[b, p]
-        k = pl.load(kpool_ref, (pl.dslice(page, 1),))[0].astype(jnp.float32)  # [P, Hkv, D]
-        v = pl.load(vpool_ref, (pl.dslice(page, 1),))[0].astype(jnp.float32)
+        k = load(kpool_ref, ks_ref, page)
+        v = load(vpool_ref, vs_ref, page)
         s = jnp.einsum("ngd,tnd->ngt", q, k)  # [Hkv, G, P]
         if logit_cap is not None and logit_cap > 0:
             s = logit_cap * jnp.tanh(s / logit_cap)
-        pos = p * page_size + jnp.arange(page_size)
-        s = jnp.where((pos < length)[None, None, :], s, NEG_INF)
+        off = p * page_size + jnp.arange(page_size)
+        if window is None:
+            valid = off < length
+        else:
+            # ring slot `off` holds the largest absolute position a <= L
+            # with a % C == off (L = length - 1, the query's position);
+            # shared window convention: valid iff a > L - window and a >= 0
+            a = (length - 1) - ((length - 1 - off) % capacity)
+            valid = (a >= 0) & (a > length - 1 - window)
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(-1, keepdims=True))
         probs = jnp.exp(s - m_new)
         corr = jnp.exp(m - m_new)
@@ -149,43 +181,54 @@ def _attn_kernel(pt_ref, len_ref, q_ref, kpool_ref, vpool_ref, out_ref, *, page_
     out_ref[0] = (acc / jnp.maximum(lsum, 1e-30)).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("logit_cap", "scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "logit_cap", "scale", "interpret"))
 def paged_decode_attention(
     q: jax.Array,  # [B, 1, H, D]
-    k_pool: jax.Array,  # [num_pages, P, Hkv, D]
+    k_pool: jax.Array,  # [num_pages, P, Hkv, D] (bf16/f32, or int8 with scales)
     v_pool: jax.Array,
     page_table: jax.Array,  # [B, maxp] int32
-    lengths: jax.Array,  # [B] int32 — valid tokens already in the cache
+    lengths: jax.Array,  # [B] int32 — valid tokens in the cache (incl. the current one)
     *,
+    k_scale: jax.Array | None = None,  # [num_pages, P, Hkv] bf16 — int8 absmax scales
+    v_scale: jax.Array | None = None,
+    window: int | None = None,  # set for ring tables: mask to the sliding window
     logit_cap: float | None = None,
     scale: float | None = None,
     interpret: bool = True,
 ) -> jax.Array:
-    """One query per row against its paged cache; reads ceil(len/P) pages.
+    """One query per row against its paged cache; reads ceil(len/P) pages
+    (clamped to the table width for ring tables).
 
-    Equivalent to ``attention.decode_attention(q, gather(k), gather(v),
-    lengths)`` up to online-softmax float reassociation (~1e-6 relative).
+    Equivalent to ``attention.decode_attention`` on the gathered (and
+    dequantised) cache view up to online-softmax float reassociation
+    (~1e-6 relative).  int8 pools pass ``k_scale``/``v_scale``; ring tables
+    pass ``window`` and a table whose C = maxp * P ring slots hold the
+    trailing window (position t at slot t % C).
     """
     b, _, h, d = q.shape
     _, page_size, hkv, _ = k_pool.shape
     g = h // hkv
+    quant = k_scale is not None
     scale = scale if scale is not None else d**-0.5
     qg = (q[:, 0].astype(jnp.float32) * scale).reshape(b, hkv, g, d)
+    any_spec = pl.BlockSpec(memory_space=pl.ANY)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b,),
-        in_specs=[
-            pl.BlockSpec((1, hkv, g, d), lambda i, pt, ln: (i, 0, 0, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
+        in_specs=[pl.BlockSpec((1, hkv, g, d), lambda i, pt, ln: (i, 0, 0, 0))]
+        + [any_spec] * (4 if quant else 2),
         out_specs=pl.BlockSpec((1, hkv, g, d), lambda i, pt, ln: (i, 0, 0, 0)),
     )
-    kernel = functools.partial(_attn_kernel, page_size=page_size, logit_cap=logit_cap)
+    kernel = functools.partial(
+        _attn_kernel, page_size=page_size, logit_cap=logit_cap, window=window, quant=quant
+    )
+    operands = (page_table, lengths, qg, k_pool, v_pool)
+    if quant:
+        operands += (k_scale, v_scale)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
         interpret=interpret,
-    )(page_table, lengths, qg, k_pool, v_pool)
+    )(*operands)
     return out.reshape(b, 1, h, d).astype(q.dtype)

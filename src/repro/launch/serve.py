@@ -35,11 +35,16 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16, help="[continuous] tokens per KV page")
     ap.add_argument("--prefill-chunk", type=int, default=16, help="[continuous] prompt tokens per prefill call")
     ap.add_argument("--adaptive-rho", action="store_true", help="[continuous] close the rho loop over queue depth")
+    ap.add_argument("--kv-cache", default=None, choices=["bfloat16", "int8"], help="KV cache dtype override")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     if cfg.family in ("vlm", "audio"):
         raise SystemExit(f"{args.arch}: serve CLI drives the LM path; use examples/ for frontend stubs")
+    if args.kv_cache:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache)
     params = zoo.init_params(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(0)

@@ -254,7 +254,12 @@ def decode_attention(
         cache_len = jnp.full((b,), cache_len)
     valid = pos[None, :] < cache_len[:, None]  # [B,T]
     if window is not None and window > 0:
-        valid &= pos[None, :] >= (cache_len[:, None] - window)
+        # single window-mask convention shared with every prefill path
+        # (reference/chunked/sliding): the query at position q attends keys
+        # kpos with q - window < kpos <= q — ``window`` keys including
+        # itself.  Here q = cache_len - 1 (the cache includes the query).
+        qpos = cache_len[:, None] - 1
+        valid &= pos[None, :] > qpos - window
     scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bngst,btnd->bsngd", probs, v_cache.astype(jnp.float32))
@@ -267,13 +272,16 @@ def chunk_decode_attention(
     v_cache: Array,
     start_len: Array,  # [B] int32: tokens in the cache BEFORE this chunk
     *,
+    window: int | None = None,
     logit_cap: float | None = None,
     scale: float | None = None,
 ) -> Array:
     """Prefill-chunk attention against a cache: query i of the chunk sees
-    cache positions < start_len + i + 1.  Mirrors ``decode_attention``
-    op-for-op so the C == 1 case is bitwise-identical to it (the continuous
-    serving engine relies on this for its dense-reference equivalence)."""
+    cache positions < start_len + i + 1, window-limited to the ``window``
+    most recent when set (same strict-``>`` convention as the prefill
+    paths).  Mirrors ``decode_attention`` op-for-op so the C == 1 case is
+    bitwise-identical to it (the continuous serving engine relies on this
+    for its dense-reference equivalence)."""
     b, c, h, d = q.shape
     _, t, hkv, _ = k_cache.shape
     scale = scale if scale is not None else d**-0.5
@@ -281,8 +289,55 @@ def chunk_decode_attention(
     scores = jnp.einsum("bsngd,btnd->bngst", qg, k_cache.astype(jnp.float32))  # [B,Hkv,G,C,T]
     scores = _softcap(scores, logit_cap)
     pos = jnp.arange(t)
-    valid = pos[None, None, :] < (start_len[:, None, None] + jnp.arange(c)[None, :, None] + 1)  # [B,C,T]
+    qpos = start_len[:, None, None] + jnp.arange(c)[None, :, None]  # [B,C,1]
+    valid = pos[None, None, :] <= qpos  # [B,C,T]
+    if window is not None and window > 0:
+        valid &= pos[None, None, :] > qpos - window
     scores = jnp.where(valid[:, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bngst,btnd->bsngd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, c, h, d).astype(q.dtype)
+
+
+def ring_chunk_attention(
+    q: Array,  # [B, C, H, D] — chunk queries at absolute positions start..start+C-1
+    k_ctx: Array,  # [B, T, Hkv, D] — ring-buffer context view (BEFORE the chunk)
+    v_ctx: Array,
+    ctx_pos: Array,  # [B, T] int32 — absolute position held by each context entry (< 0: empty)
+    k_new: Array,  # [B, C, Hkv, D] — the chunk's own keys/values
+    v_new: Array,
+    start_len: Array,  # [B] int32: tokens cached before this chunk
+    n_valid: Array,  # [B] int32: real (non-padding) tokens in the chunk
+    *,
+    window: int,
+    logit_cap: float | None = None,
+    scale: float | None = None,
+) -> Array:
+    """Sliding-window prefill-chunk attention for a ring-paged cache.
+
+    Keys are the pre-chunk ring context (whose entries carry explicit
+    absolute positions — ring order is arbitrary) concatenated with the
+    chunk's own K/V, so chunks of ANY size work: every key a query can see
+    is either still in the pre-chunk ring (ring capacity >= window) or
+    inside the chunk itself.  Window convention is the shared strict ``>``:
+    query at position t attends keys kpos with t - window < kpos <= t.
+    """
+    b, c, h, d = q.shape
+    hkv = k_ctx.shape[2]
+    scale = scale if scale is not None else d**-0.5
+    keys = jnp.concatenate([k_ctx, k_new], axis=1)  # [B, T+C, Hkv, D]
+    vals = jnp.concatenate([v_ctx, v_new], axis=1)
+    chunk_pos = start_len[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    kpos = jnp.concatenate([ctx_pos, chunk_pos], axis=1)  # [B, T+C]
+    written = jnp.concatenate(
+        [ctx_pos >= 0, jnp.arange(c)[None, :] < n_valid[:, None]], axis=1
+    )  # [B, T+C]: context entries ever written / chunk entries that are real
+    qg = _group_heads(q, hkv).astype(jnp.float32) * scale  # [B,C,Hkv,G,D]
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, keys.astype(jnp.float32))  # [B,Hkv,G,C,T+C]
+    scores = _softcap(scores, logit_cap)
+    qpos = chunk_pos[:, :, None]  # [B, C, 1]
+    valid = written[:, None, :] & (kpos[:, None, :] <= qpos) & (kpos[:, None, :] > qpos - window)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, vals.astype(jnp.float32))
     return out.reshape(b, c, h, d).astype(q.dtype)

@@ -11,6 +11,7 @@ Sharding: T (sequence) shards over "data" when batch is too small to fill it
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any
 
 import jax
@@ -64,6 +65,24 @@ def cache_bytes(layers: int, batch: int, max_len: int, n_kv: int, head_dim: int,
 # tables.  Sequences share one global pool, so total memory scales with live
 # tokens instead of slots * max_len — the structural requirement for
 # token-granularity continuous batching (vLLM-style paging).
+#
+# Two page KINDS, derived from the attention pattern:
+#
+# * "full"  — append-only tables of ``max_len / P`` pages: position t lives
+#   in table entry t // P.
+# * "ring"  — sliding-window layers get a fixed budget of
+#   ``ceil(window / P) + 1`` pages used as a circular array over a logical
+#   ring of capacity C = budget * P: position t lives in table entry
+#   (t % C) // P.  Because C >= window + P, the slot being overwritten
+#   always holds a key that slid fully out of the window, so cache memory
+#   scales with ``window`` rather than ``max_len``.  The scheduler recycles
+#   the dead page through the allocator (free + re-link) whenever a write
+#   crosses into a previously used table slot.
+#
+# int8-quantised caches store a pool entry as {"q": int8 [.., P, Hkv, D],
+# "scale": bf16 [.., P, Hkv]} — per-(position, head) absmax scales in a
+# parallel scale pool, dequantised on the gather path with exactly the dense
+# cache's ops so paged decode stays bitwise-identical to the dense reference.
 # ---------------------------------------------------------------------------
 
 TRASH_PAGE = 0  # reserved scratch page: masked-out rows scatter here
@@ -83,7 +102,9 @@ class PageAllocator:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         self.num_pages = num_pages
         self.page_size = page_size
-        self._free: list[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
+        # deque: alloc pops the hot end, release prepends to the cold end —
+        # both O(1) on the per-token ring-recycle path
+        self._free: deque[int] = deque(range(num_pages - 1, TRASH_PAGE, -1))
         self._owned: dict[int, list[int]] = {}  # seq id -> pages, in order
 
     @property
@@ -112,20 +133,92 @@ class PageAllocator:
         self._free.extend(reversed(pages))
         return len(pages)
 
+    def release(self, seq_id: int, page: int) -> None:
+        """Return ONE page owned by ``seq_id`` to the free list — the ring
+        recycling path: the scheduler releases the page that slid fully out
+        of the window before linking a fresh one into the table slot.  The
+        page joins the COLD end of the free list (``alloc`` pops the hot
+        end), so the immediately following re-link picks a different page
+        and pages genuinely rotate through the pool instead of the
+        release/alloc pair degenerating to an identity swap."""
+        self._owned[seq_id].remove(page)
+        self._free.appendleft(page)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static description of how a model's attention pattern maps onto page
+    pools: one kind per pattern slot, per-kind per-sequence page budgets.
+
+    Hashable and shape-only, so it can close over jitted step functions
+    without retracing.
+    """
+
+    page_size: int
+    max_len: int
+    slot_kinds: tuple[str, ...]  # per pattern slot: "full" | "ring"
+    window: int = 0  # sliding-window size (0 when no ring slots)
+    # decode lookahead: multi-step decode windows reserve (and recycle) ring
+    # pages up to ``lookahead`` tokens ahead of the oldest in-window key, so
+    # the ring budget must span window + lookahead - 1 tokens or a recycled
+    # page could still hold keys the window's FIRST step needs
+    lookahead: int = 1
+
+    def __post_init__(self):
+        if self.max_len % self.page_size:
+            raise ValueError("max_len must be a multiple of page_size")
+        if "ring" in self.slot_kinds and not (0 < self.window < self.max_len):
+            raise ValueError("ring slots need 0 < window < max_len")
+
+    @classmethod
+    def for_config(cls, cfg, max_len: int, page_size: int, lookahead: int = 1) -> "PagedLayout":
+        """Derive the layout from a ModelConfig-like object.  A sliding slot
+        pages as a ring only when the window actually truncates the cache
+        (window < max_len); otherwise it is indistinguishable from full."""
+        kinds = tuple(
+            "ring" if (pat == "sliding" and 0 < cfg.window < max_len) else "full"
+            for pat in cfg.attention_pattern
+        )
+        return cls(page_size=page_size, max_len=max_len, slot_kinds=kinds,
+                   window=cfg.window if "ring" in kinds else 0, lookahead=lookahead)
+
+    @property
+    def kinds(self) -> tuple[str, ...]:
+        """Unique kinds, "full" first when present."""
+        return tuple(k for k in ("full", "ring") if k in self.slot_kinds)
+
+    def budget(self, kind: str) -> int:
+        """Pages per sequence for one kind: the page table width.  Ring
+        tables hold ceil(window/P) + 1 pages (+ decode lookahead), so ring
+        memory scales with ``window`` instead of ``max_len``."""
+        if kind == "ring":
+            return min(
+                -(-(self.window + self.lookahead - 1) // self.page_size) + 1,
+                self.max_len // self.page_size,
+            )
+        return self.max_len // self.page_size
+
+    @property
+    def ring_capacity(self) -> int:
+        """Logical ring length in tokens (C = ring budget * page size)."""
+        return self.budget("ring") * self.page_size
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PagedKV:
-    """Device-side page pools, one pair of arrays per attention-pattern slot.
+    """Device-side page pools, one entry per attention-pattern slot.
 
-    k[i] / v[i]: [n_cycles, num_pages, page_size, Hkv, D].  Page tables and
-    lengths are *not* carried here — the scheduler owns them host-side and
-    passes fresh arrays into every jitted step (shapes are static, so there
-    is no retrace).
+    An entry is [n_cycles, num_pages, P, Hkv, D] (bf16 cache) or
+    {"q": int8 [..., D], "scale": bf16 [n_cycles, num_pages, P, Hkv]}
+    (quantised cache).  Pool sizes may differ per slot: ring slots get
+    window-scaled pools.  Page tables and lengths are *not* carried here —
+    the scheduler owns them host-side and passes fresh arrays into every
+    jitted step (shapes are static, so there is no retrace).
     """
 
-    k: dict[str, Array]
-    v: dict[str, Array]
+    k: dict[str, Any]
+    v: dict[str, Any]
 
     def tree_flatten(self):
         keys = sorted(self.k)
@@ -137,26 +230,51 @@ class PagedKV:
         return cls(k=dict(zip(keys, children[:n])), v=dict(zip(keys, children[n:])))
 
     @property
-    def num_pages(self) -> int:
-        return next(iter(self.k.values())).shape[1]
-
-    @property
     def page_size(self) -> int:
-        return next(iter(self.k.values())).shape[2]
+        first = next(iter(self.k.values()))
+        return (first["q"] if isinstance(first, dict) else first).shape[2]
+
+    def bytes(self) -> int:
+        """Total pool bytes actually allocated (the memory-scaling bench)."""
+        leaves = jax.tree_util.tree_leaves((self.k, self.v))
+        return sum(x.size * x.dtype.itemsize for x in leaves)
 
 
 def init_paged_pools(
-    pattern_len: int, n_cycles: int, num_pages: int, page_size: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16
+    layout: PagedLayout,
+    n_cycles: int,
+    num_pages: dict[str, int] | int,
+    n_kv: int,
+    head_dim: int,
+    dtype=jnp.bfloat16,
+    *,
+    quant: bool = False,
 ) -> PagedKV:
-    shape = (n_cycles, num_pages, page_size, n_kv, head_dim)
-    k = {str(i): jnp.zeros(shape, dtype) for i in range(pattern_len)}
-    v = {str(i): jnp.zeros(shape, dtype) for i in range(pattern_len)}
+    """Per-slot pools sized by page kind; ``num_pages`` maps kind -> pool
+    pages (an int applies to every kind)."""
+    if isinstance(num_pages, int):
+        num_pages = {k: num_pages for k in layout.kinds}
+
+    def entry(kind: str):
+        shape = (n_cycles, num_pages[kind], layout.page_size, n_kv, head_dim)
+        if quant:
+            return {"q": jnp.zeros(shape, jnp.int8), "scale": jnp.zeros(shape[:-1], jnp.bfloat16)}
+        return jnp.zeros(shape, dtype)
+
+    k = {str(i): entry(kind) for i, kind in enumerate(layout.slot_kinds)}
+    v = {str(i): entry(kind) for i, kind in enumerate(layout.slot_kinds)}
     return PagedKV(k=k, v=v)
 
 
+# ---------------------------------------------------------------------------
+# Raw pool ops (one array).  Pool shape [num_pages, P, *rest] — K/V pools
+# carry rest = (Hkv, D), int8 scale pools carry rest = (Hkv,).
+# ---------------------------------------------------------------------------
+
+
 def gather_pages(pool: Array, page_table: Array) -> Array:
-    """jnp gather: pool [num_pages, P, Hkv, D] + table [B, maxp] ->
-    contiguous per-row cache view [B, maxp * P, Hkv, D].
+    """jnp gather: pool [num_pages, P, *rest] + table [B, maxp] ->
+    contiguous per-row cache view [B, maxp * P, *rest].
 
     Rows gathered through trash/stale pages carry garbage values; attention
     masks them by length, and because masked scores are exactly NEG_INF in
@@ -164,27 +282,139 @@ def gather_pages(pool: Array, page_table: Array) -> Array:
     to the dense reference.
     """
     b, maxp = page_table.shape
-    _, p, hkv, d = pool.shape
-    return pool[page_table].reshape(b, maxp * p, hkv, d)
+    p = pool.shape[1]
+    return pool[page_table].reshape(b, maxp * p, *pool.shape[2:])
+
+
+def gather_pages_ring(pool: Array, page_table: Array, cur_pos: Array, window: int) -> Array:
+    """Ring gather in DENSE-RING layout: [B, window, *rest] where entry j
+    holds the key at absolute position a_j = L - ((L - j) mod window) for
+    L = ``cur_pos`` (the newest written position, per row).
+
+    This is exactly the layout of the dense ring cache (T == window, writes
+    at t % T), so paged ring decode reads the same values in the same order
+    and stays bitwise-identical to the dense reference.  Entries with
+    a_j < 0 (cache not yet full) read arbitrary finite pool bytes and are
+    masked by the caller's effective length, as in the dense path.
+    """
+    b, nring = page_table.shape
+    n_pages, p = pool.shape[:2]
+    cap = nring * p  # logical ring capacity C
+    j = jnp.arange(window)
+    a = cur_pos[:, None] - ((cur_pos[:, None] - j[None, :]) % window)  # [B, W]
+    off = a % cap  # jnp modulo is non-negative, so stale (a < 0) entries stay in range
+    page = jnp.take_along_axis(page_table, off // p, axis=1)  # [B, W]
+    flat = pool.reshape(n_pages * p, *pool.shape[2:])
+    return flat[page * p + off % p]
 
 
 def scatter_token(pool: Array, page_table: Array, length: Array, new: Array) -> Array:
-    """Write one step's per-row vectors ``new`` [B, Hkv, D] at each row's
-    current position (page = table[row][length // P], offset = length % P)."""
+    """Write one step's per-row vectors ``new`` [B, *rest] at each row's
+    current position (page = table[row][length // P], offset = length % P).
+
+    Rows whose position falls past their table (retired rows kept in a
+    full-width decode batch) are routed to an explicit out-of-bounds page
+    index and dropped — XLA's gather would otherwise clamp ``length // P``
+    to the LAST table entry and corrupt a live page.
+    """
     p = pool.shape[1]
-    rows = jnp.arange(page_table.shape[0])
-    page = page_table[rows, length // p]
+    b, maxp = page_table.shape
+    rows = jnp.arange(b)
+    idx = length // p
+    page = page_table[rows, jnp.minimum(idx, maxp - 1)]
+    page = jnp.where(idx < maxp, page, pool.shape[0])  # OOB sink -> dropped
     return pool.at[page, length % p].set(new.astype(pool.dtype), mode="drop")
 
 
-def scatter_chunk(pool: Array, page_table_row: Array, start: Array, new: Array, valid: Array) -> Array:
-    """Scatter a prefill chunk ``new`` [C, Hkv, D] for ONE sequence at
-    absolute positions start..start+C-1.  ``valid`` [C] bool masks padding
-    tokens: their writes are routed out of bounds and dropped."""
+def scatter_token_ring(pool: Array, page_table: Array, length: Array, new: Array) -> Array:
+    """Ring write: position ``length`` lands at ring offset length % C
+    (C = table width * P), overwriting the slot that slid out of the
+    window.  Never out of range, so no OOB routing is needed."""
     p = pool.shape[1]
-    pos = start + jnp.arange(new.shape[0])
-    page = jnp.where(valid, page_table_row[pos // p], pool.shape[0])  # OOB -> dropped
+    b, nring = page_table.shape
+    off = length % (nring * p)
+    page = page_table[jnp.arange(b), off // p]
+    return pool.at[page, off % p].set(new.astype(pool.dtype), mode="drop")
+
+
+def scatter_chunk(pool: Array, page_table: Array, start: Array, new: Array, valid: Array) -> Array:
+    """Scatter prefill chunks ``new`` [B, C, *rest] for a BATCH of
+    sequences at absolute positions start[b]..start[b]+C-1.  ``valid``
+    [B, C] masks padding tokens and inactive rows: their writes are routed
+    out of bounds and dropped.  Rows write disjoint pages (each row has its
+    own table), so the batched scatter never conflicts."""
+    p = pool.shape[1]
+    maxp = page_table.shape[1]
+    pos = start[:, None] + jnp.arange(new.shape[1])[None, :]  # [B, C]
+    idx = pos // p
+    page = jnp.take_along_axis(page_table, jnp.minimum(idx, maxp - 1), axis=1)
+    page = jnp.where(valid & (idx < maxp), page, pool.shape[0])  # OOB -> dropped
     return pool.at[page, pos % p].set(new.astype(pool.dtype), mode="drop")
+
+
+def scatter_chunk_ring(pool: Array, page_table: Array, start: Array, new: Array, valid: Array) -> Array:
+    """Batched ring chunk scatter: position t lands at ring offset t % C."""
+    p = pool.shape[1]
+    nring = page_table.shape[1]
+    pos = start[:, None] + jnp.arange(new.shape[1])[None, :]  # [B, C]
+    off = pos % (nring * p)
+    page = jnp.take_along_axis(page_table, off // p, axis=1)
+    page = jnp.where(valid, page, pool.shape[0])  # padding -> dropped
+    return pool.at[page, off % p].set(new.astype(pool.dtype), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Entry ops: dispatch over bf16 pools (a bare array) vs int8 pools
+# ({"q", "scale"}).  Quant/dequant mirror the dense cache's `_quant_update`
+# and `_dequant` op-for-op, which is what keeps paged int8 decode
+# bitwise-identical to the dense int8 reference.
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(new: Array) -> tuple[Array, Array]:
+    """Per-(row, head) absmax int8 quantisation of ``new`` [..., Hkv, D] ->
+    (q int8 [..., Hkv, D], scale bf16 [..., Hkv])."""
+    scale = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(new.astype(jnp.float32) / jnp.maximum(scale, 1e-8)[..., None]).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.bfloat16) * scale[..., None]
+
+
+def entry_scatter_token(entry, page_table: Array, length: Array, new: Array, *, ring: bool):
+    op = scatter_token_ring if ring else scatter_token
+    if isinstance(entry, dict):
+        q, scale = quantize_kv(new)
+        return {"q": op(entry["q"], page_table, length, q),
+                "scale": op(entry["scale"], page_table, length, scale)}
+    return op(entry, page_table, length, new)
+
+
+def entry_scatter_chunk(entry, page_table: Array, start: Array, new: Array, valid: Array, *, ring: bool):
+    op = scatter_chunk_ring if ring else scatter_chunk
+    if isinstance(entry, dict):
+        q, scale = quantize_kv(new)
+        return {"q": op(entry["q"], page_table, start, q, valid),
+                "scale": op(entry["scale"], page_table, start, scale, valid)}
+    return op(entry, page_table, start, new, valid)
+
+
+def entry_gather(entry, page_table: Array) -> Array:
+    """Contiguous cache view with dequantisation fused into the gather."""
+    if isinstance(entry, dict):
+        return dequantize_kv(gather_pages(entry["q"], page_table), gather_pages(entry["scale"], page_table))
+    return gather_pages(entry, page_table)
+
+
+def entry_gather_ring(entry, page_table: Array, cur_pos: Array, window: int) -> Array:
+    if isinstance(entry, dict):
+        return dequantize_kv(
+            gather_pages_ring(entry["q"], page_table, cur_pos, window),
+            gather_pages_ring(entry["scale"], page_table, cur_pos, window),
+        )
+    return gather_pages_ring(entry, page_table, cur_pos, window)
 
 
 def paged_cache_bytes(layers: int, num_pages: int, page_size: int, n_kv: int, head_dim: int, elem_bytes: int = 2) -> int:

@@ -45,11 +45,17 @@ def _causal_depthwise_conv(x: Array, w: Array, init_window: Array | None = None)
     return out
 
 
-def ssm_mix(params: dict, x: Array, state: dict | None = None) -> tuple[Array, dict]:
+def ssm_mix(params: dict, x: Array, state: dict | None = None, n_valid: Array | None = None) -> tuple[Array, dict]:
     """x: [B, S, D] -> (y [B, S, D], new_state).
 
     state = {"h": [B, d_inner, N], "conv": [B, K-1, d_inner]} for decode
     continuation; pass None for a fresh prefill.
+
+    ``n_valid`` [B] (serving prefill chunks, right-padded): positions
+    >= n_valid[b] become identity state updates (da=1, dbx=0) and the conv
+    context window is taken to end at the last VALID position, so the
+    returned state is exactly the state after n_valid real tokens — padded
+    rows (n_valid == 0) pass their state through untouched.
     """
     B, S, D = x.shape
     di = params["out_proj"].shape[0]
@@ -58,13 +64,22 @@ def ssm_mix(params: dict, x: Array, state: dict | None = None) -> tuple[Array, d
     dt_f32 = x.dtype
 
     xz = x @ params["in_proj"].astype(x.dtype)  # [B,S,2di]
-    xs, z = jnp.split(xz, 2, axis=-1)
-    xs, z = constrain(xs, "ssm_inner"), constrain(z, "ssm_inner")
-    conv_ctx = None if state is None else state["conv"]
-    xs = jax.nn.silu(_causal_depthwise_conv(xs, params["conv_w"].astype(x.dtype), conv_ctx))
-    new_conv = jnp.concatenate(
-        [conv_ctx if conv_ctx is not None else jnp.zeros((B, K - 1, di), x.dtype), xs], axis=1
-    )[:, -(K - 1) :]
+    xs_in, z = jnp.split(xz, 2, axis=-1)
+    xs_in, z = constrain(xs_in, "ssm_inner"), constrain(z, "ssm_inner")
+    conv_ctx = state["conv"] if state is not None else jnp.zeros((B, K - 1, di), x.dtype)
+    xs = jax.nn.silu(_causal_depthwise_conv(xs_in, params["conv_w"].astype(x.dtype), conv_ctx))
+    # the conv context carries PRE-conv inputs: decode continuation then
+    # computes exactly the same convolution a full-sequence prefill does,
+    # so chunked prefill == per-token replay == forward()
+    conv_cat = jnp.concatenate([conv_ctx, xs_in], axis=1)
+    if n_valid is None:
+        new_conv = conv_cat[:, -(K - 1) :]
+    else:
+        # conv window ending at the last VALID token: concat position
+        # n_valid-1+(K-1) holds token n_valid-1, so the K-1 window starts
+        # at concat position n_valid (n_valid == 0 returns the old context)
+        idx = n_valid[:, None] + jnp.arange(K - 1)[None, :]
+        new_conv = jnp.take_along_axis(conv_cat, idx[..., None], axis=1)
 
     dbc = xs @ params["x_proj"].astype(x.dtype)  # [B,S,2N+1]
     dt_raw, Bc, Cc = jnp.split(dbc.astype(jnp.float32), [1, 1 + N], axis=-1)
@@ -74,6 +89,11 @@ def ssm_mix(params: dict, x: Array, state: dict | None = None) -> tuple[Array, d
     dbx = constrain(
         dt[..., None] * Bc[:, :, None, :] * xs.astype(jnp.float32)[..., None], "ssm_inner"
     )  # [B,S,di,N]
+    if n_valid is not None:
+        # padded positions advance the state by the identity: h = 1*h + 0
+        vmask = (jnp.arange(S)[None, :] < n_valid[:, None])[..., None, None]  # [B,S,1,1]
+        da = jnp.where(vmask, da, 1.0)
+        dbx = jnp.where(vmask, dbx, 0.0)
 
     h0 = state["h"] if state is not None else jnp.zeros((B, di, N), jnp.float32)
     h0 = constrain(h0, "ssm_state")

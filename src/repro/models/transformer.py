@@ -27,7 +27,18 @@ from repro.configs.base import ModelConfig
 from repro.core.dynatran import SparsityConfig, site_prune
 from repro.launch.sharding import constrain
 from . import attention as attn
-from .kvcache import DecodeState, PagedKV, gather_pages, init_paged_pools, scatter_chunk, scatter_token
+from .kvcache import (
+    DecodeState,
+    PagedKV,
+    PagedLayout,
+    entry_gather,
+    entry_gather_ring,
+    entry_scatter_chunk,
+    entry_scatter_token,
+    init_paged_pools,
+    quantize_kv,
+    dequantize_kv,
+)
 from .layers import ACTIVATIONS, apply_mrope, apply_rope, dense_init, embed_init, make_norm, rms_norm, softcap
 from .moe import moe_ffn, moe_init
 from .ssm import ssm_init, ssm_mix, ssm_state_init
@@ -247,17 +258,17 @@ def forward(
 
 def _quant_update(cache: dict, new: Array, rows: Array, pos: Array) -> dict:
     """Insert one step's [B, Hkv, hd] vectors with per-(row, head) absmax
-    int8 quantisation."""
-    scale = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1) / 127.0  # [B, Hkv]
-    q = jnp.round(new.astype(jnp.float32) / jnp.maximum(scale, 1e-8)[..., None]).astype(jnp.int8)
+    int8 quantisation (the same ops the paged int8 pools use, so the two
+    caches hold identical bits)."""
+    q, scale = quantize_kv(new)
     return {
         "q": cache["q"].at[rows, pos].set(q),
-        "scale": cache["scale"].at[rows, pos].set(scale.astype(jnp.bfloat16)),
+        "scale": cache["scale"].at[rows, pos].set(scale),
     }
 
 
 def _dequant(cache: dict) -> Array:
-    return cache["q"].astype(jnp.bfloat16) * cache["scale"][..., None]
+    return dequantize_kv(cache["q"], cache["scale"])
 
 
 def _cache_len_for(cfg: ModelConfig, pattern: str, max_len: int) -> int:
@@ -367,41 +378,133 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
-# Paged decode/prefill: the continuous-batching serve path.  K/V live in a
-# global page pool shared across sequences; per-row page tables resolve the
-# indirection.  The jnp read path is bitwise-identical to ``decode_step``
-# on a dense cache (masked scores are exactly NEG_INF either way); the
-# Pallas path (``use_pallas=True``) fuses gather + attention and reads only
-# live pages, at online-softmax accuracy.
+# Paged decode/prefill: the continuous-batching serve path.  K/V live in
+# per-pattern-slot page pools shared across sequences; per-row page tables
+# (one per page KIND — append-only "full" tables, fixed-budget "ring"
+# tables for sliding-window layers) resolve the indirection.  The jnp read
+# path is bitwise-identical to ``decode_step`` on a dense cache for every
+# supported cache flavour — full, ring, and int8-quantised — because the
+# gather reproduces the dense cache's values in the dense cache's order and
+# masked scores are exactly NEG_INF either way.  The Pallas path
+# (``use_pallas=True``) fuses gather + dequant + attention and reads only
+# live pages, at online-softmax accuracy.  Hybrid (attention ⊕ SSM) models
+# carry their O(1)-per-sequence recurrent state densely per batch row
+# alongside the pools.
 # ---------------------------------------------------------------------------
 
 
 def check_paged_support(cfg: ModelConfig) -> None:
-    if cfg.ssm_state:
-        raise NotImplementedError("paged KV: SSM/hybrid recurrent state is not paged yet")
-    if any(p != "full" for p in cfg.attention_pattern):
-        raise NotImplementedError("paged KV: sliding-window (ring) layers are not paged yet")
-    if cfg.kv_cache_dtype == "int8":
-        raise NotImplementedError("paged KV: int8 cache quantisation is not paged yet")
+    if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
+        raise NotImplementedError(
+            f"paged KV: family '{cfg.family}' has no paged decode path "
+            "(pure-SSM and encoder-decoder states are not paged)"
+        )
 
 
-def init_paged_state(cfg: ModelConfig, num_pages: int, page_size: int, dtype=jnp.bfloat16) -> PagedKV:
+def paged_layout(cfg: ModelConfig, max_len: int, page_size: int, lookahead: int = 1) -> PagedLayout:
+    """Static page-kind layout for this config at a serving shape.
+    ``lookahead`` is the engine's multi-step decode window (ring budgets
+    must cover it — see PagedLayout)."""
     check_paged_support(cfg)
-    return init_paged_pools(cfg.pattern_len, cfg.n_cycles, num_pages, page_size, cfg.kv_heads, cfg.hd, dtype)
+    return PagedLayout.for_config(cfg, max_len, page_size, lookahead)
+
+
+def init_paged_state(
+    cfg: ModelConfig, layout: PagedLayout, num_pages: dict[str, int] | int, dtype=jnp.bfloat16
+) -> PagedKV:
+    check_paged_support(cfg)
+    return init_paged_pools(
+        layout, cfg.n_cycles, num_pages, cfg.kv_heads, cfg.hd, dtype,
+        quant=cfg.kv_cache_dtype == "int8",
+    )
+
+
+def init_paged_ssm(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """Recurrent side-state for hybrid models, stacked like the dense decode
+    state: pattern slot -> leaves [n_cycles, B, ...].  None when the model
+    has no SSM heads."""
+    if not cfg.ssm_state:
+        return None
+    return {
+        str(i): jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_cycles,) + x.shape),
+            ssm_state_init(batch, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_conv, dtype),
+        )
+        for i in range(cfg.pattern_len)
+    }
+
+
+def _ring_ctx_positions(start_len: Array, capacity: int) -> Array:
+    """Absolute position held by each ring-buffer offset BEFORE the chunk at
+    ``start_len`` is written: offset j holds the largest a <= start_len - 1
+    with a % capacity == j (negative = never written)."""
+    prev = start_len[:, None] - 1
+    j = jnp.arange(capacity)[None, :]
+    return prev - ((prev - j) % capacity)
+
+
+def _paged_attention(
+    cfg: ModelConfig,
+    layout: PagedLayout,
+    i: int,
+    q: Array,
+    kcache,
+    vcache,
+    table: Array,
+    length: Array,
+    *,
+    use_pallas: bool,
+) -> Array:
+    """Decode attention for one pattern slot against its (just-written)
+    pools; ``length`` counts tokens cached BEFORE this step."""
+    ring = layout.slot_kinds[i] == "ring"
+    eff_len = jnp.minimum(length + 1, layout.window) if ring else length + 1
+    if use_pallas:
+        from repro.kernels.paged_attention import paged_decode_attention
+
+        quant = isinstance(kcache, dict)
+        return paged_decode_attention(
+            q,
+            kcache["q"] if quant else kcache,
+            vcache["q"] if quant else vcache,
+            table,
+            length + 1,
+            k_scale=kcache["scale"] if quant else None,
+            v_scale=vcache["scale"] if quant else None,
+            window=layout.window if ring else None,
+            logit_cap=cfg.attn_logit_cap,
+        )
+    if ring:
+        k_read = entry_gather_ring(kcache, table, length, layout.window)
+        v_read = entry_gather_ring(vcache, table, length, layout.window)
+    else:
+        k_read = entry_gather(kcache, table)
+        v_read = entry_gather(vcache, table)
+    return attn.decode_attention(q, k_read, v_read, eff_len, window=None, logit_cap=cfg.attn_logit_cap)
 
 
 def paged_decode_step(
     params: dict,
     cfg: ModelConfig,
+    layout: PagedLayout,
     pools: PagedKV,
-    page_table: Array,  # [B, maxp] int32
+    tables: dict[str, Array],  # page kind -> [B, budget(kind)] int32
     length: Array,  # [B] int32 — tokens already cached per row
     tokens: Array,  # [B, 1]
     *,
+    ssm=None,  # hybrid side-state from init_paged_ssm (or None)
+    live: Array | None = None,  # [B] bool: rows with a decoding request
     taus=None,
     use_pallas: bool = False,
-) -> tuple[Array, PagedKV]:
-    """One serve step against the paged cache: logits + updated pools."""
+) -> tuple[Array, PagedKV, Any]:
+    """One serve step against the paged cache: logits + updated pools (and
+    updated SSM side-state for hybrid models).
+
+    ``live`` masks the SSM state update to rows that actually decode this
+    step: K/V writes of idle rows are trash-routed by their page tables,
+    but the recurrent state has no such sink — without the mask a decode
+    tick would corrupt the state of a slot whose request is mid-prefill.
+    """
     sparsity = cfg.sparsity
     h = params["embed"][tokens]
     if cfg.embed_scale:
@@ -413,24 +516,26 @@ def paged_decode_step(
 
     def cycle_body(carry, xs):
         hh = carry
-        cycle_params, kc, vc = xs
-        new_k, new_v = {}, {}
+        cycle_params, kc, vc, ssmc = xs
+        new_k, new_v, new_ssm = {}, {}, {}
         for i, _pat in enumerate(cfg.attention_pattern):
             p = cycle_params[str(i)]
+            table = tables[layout.slot_kinds[i]]
+            ring = layout.slot_kinds[i] == "ring"
             _x, q, k1, v1 = _qkv(p, cfg, hh, positions, None)
-            kcache = scatter_token(kc[str(i)], page_table, length, k1[:, 0])
-            vcache = scatter_token(vc[str(i)], page_table, length, v1[:, 0])
-            eff_len = length + 1
-            if use_pallas:
-                from repro.kernels.paged_attention import paged_decode_attention
-
-                ao = paged_decode_attention(q, kcache, vcache, page_table, eff_len, logit_cap=cfg.attn_logit_cap)
-            else:
-                k_read = gather_pages(kcache, page_table)
-                v_read = gather_pages(vcache, page_table)
-                ao = attn.decode_attention(q, k_read, v_read, eff_len, window=None, logit_cap=cfg.attn_logit_cap)
+            kcache = entry_scatter_token(kc[str(i)], table, length, k1[:, 0], ring=ring)
+            vcache = entry_scatter_token(vc[str(i)], table, length, v1[:, 0], ring=ring)
+            ao = _paged_attention(cfg, layout, i, q, kcache, vcache, table, length, use_pallas=use_pallas)
             ao = site_prune(ao, "attn_out", sparsity, taus)
             attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
+            if cfg.ssm_state:
+                ssm_out, s_new = ssm_mix(p["ssm"], norm(p["ssm_ln"], hh), state=ssmc[str(i)])
+                attn_out = (attn_out + ssm_out) * 0.5
+                if live is not None:
+                    s_new = jax.tree_util.tree_map(
+                        lambda new, old: jnp.where(live[:, None, None], new, old), s_new, ssmc[str(i)]
+                    )
+                new_ssm[str(i)] = s_new
             if cfg.post_norms:
                 attn_out = norm(p["post_attn_norm"], attn_out)
             hh = hh + attn_out
@@ -439,57 +544,115 @@ def paged_decode_step(
                 mlp_out = norm(p["post_mlp_norm"], mlp_out)
             hh = hh + mlp_out
             new_k[str(i)], new_v[str(i)] = kcache, vcache
-        return hh, (new_k, new_v)
+        return hh, (new_k, new_v, new_ssm if cfg.ssm_state else None)
 
-    h, (ks, vs) = jax.lax.scan(cycle_body, h, (params["blocks"], pools.k, pools.v))
+    xs = (params["blocks"], pools.k, pools.v, ssm if cfg.ssm_state else jnp.zeros((cfg.n_cycles,)))
+    h, (ks, vs, ssms) = jax.lax.scan(cycle_body, h, xs)
     h = norm(params["final_norm"], h)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = h @ head.astype(h.dtype)
     logits = softcap(logits.astype(jnp.float32), cfg.final_logit_cap)
     logits = constrain(logits[:, 0], "logits_2d")
-    return logits, PagedKV(k=ks, v=vs)
+    return logits, PagedKV(k=ks, v=vs), ssms if cfg.ssm_state else None
 
 
 def paged_prefill_chunk(
     params: dict,
     cfg: ModelConfig,
+    layout: PagedLayout,
     pools: PagedKV,
-    page_table_row: Array,  # [maxp] int32 — ONE sequence's page table
-    start_len: Array,  # scalar i32: tokens already cached
-    tokens: Array,  # [1, C] — chunk of prompt tokens (right-padded)
-    n_valid: Array,  # scalar i32: real tokens in this chunk
+    tables: dict[str, Array],  # page kind -> [B, budget(kind)] int32
+    start_len: Array,  # [B] int32: tokens already cached per row
+    tokens: Array,  # [B, C] — one chunk of prompt tokens per row (right-padded)
+    n_valid: Array,  # [B] int32: real tokens in each row's chunk (0 = inactive row)
     *,
+    ssm=None,
+    fresh: Array | None = None,  # [B] bool: rows (re)starting prefill — their SSM state is zeroed
     taus=None,
-) -> tuple[Array, PagedKV]:
-    """Prefill C prompt tokens at once for one sequence, writing K/V into
-    its pages.  Returns next-token logits at the last valid position [1, V].
-    With C == 1 this is op-for-op identical to ``paged_decode_step`` on a
-    batch of one (the engine's dense-equivalence mode)."""
+) -> tuple[Array, PagedKV, Any]:
+    """Batched prefill: one jitted call caches a chunk of C prompt tokens
+    for EVERY row of an admission batch (rows live at their engine slots, so
+    hybrid SSM state stays aligned).  Returns next-token logits at each
+    row's last valid position [B, V]; rows with n_valid == 0 write nothing,
+    leave their SSM state untouched, and return garbage logits.
+
+    With C == 1 this is op-for-op identical to ``paged_decode_step`` (the
+    engine's dense-reference equivalence mode) for every cache flavour.
+    With C > 1 outputs match per-token replay up to reduction-order float
+    noise — exactly zero for bf16 caches in practice, but int8 caches
+    amplify one-ulp hidden-state differences into flipped quantisation
+    bins in later layers, so chunked int8 prefill is approximate
+    (bounded-divergence; decode remains bitwise).
+    """
     sparsity = cfg.sparsity
-    c = tokens.shape[1]
-    h = params["embed"][tokens]  # [1, C, D]
+    b, c = tokens.shape
+    h = params["embed"][tokens]  # [B, C, D]
     if cfg.embed_scale:
         h = h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype)
-    positions = (start_len + jnp.arange(c))[None, :]  # [1, C]
+    positions = start_len[:, None] + jnp.arange(c)[None, :]  # [B, C]
     if cfg.pos_kind == "learned":
         h = h + params["pos_embed"][positions % params["pos_embed"].shape[0]]
-    valid = jnp.arange(c) < n_valid
+    valid = jnp.arange(c)[None, :] < n_valid[:, None]  # [B, C]
     _, norm = make_norm(cfg.norm)
 
     def cycle_body(carry, xs):
         hh = carry
-        cycle_params, kc, vc = xs
-        new_k, new_v = {}, {}
+        cycle_params, kc, vc, ssmc = xs
+        new_k, new_v, new_ssm = {}, {}, {}
         for i, _pat in enumerate(cfg.attention_pattern):
             p = cycle_params[str(i)]
+            table = tables[layout.slot_kinds[i]]
+            ring = layout.slot_kinds[i] == "ring"
             _x, q, k1, v1 = _qkv(p, cfg, hh, positions, None)
-            kcache = scatter_chunk(kc[str(i)], page_table_row, start_len, k1[0], valid)
-            vcache = scatter_chunk(vc[str(i)], page_table_row, start_len, v1[0], valid)
-            k_read = gather_pages(kcache, page_table_row[None])
-            v_read = gather_pages(vcache, page_table_row[None])
-            ao = attn.chunk_decode_attention(q, k_read, v_read, start_len[None], logit_cap=cfg.attn_logit_cap)
+            if ring and c > 1:
+                # sliding-window chunk: attend to the PRE-chunk ring context
+                # (explicit per-entry absolute positions — ring order is
+                # arbitrary) plus the chunk's own K/V, then commit the chunk.
+                # Ring capacity >= window guarantees every in-window prefix
+                # key is still present, for any chunk size.
+                k_ctx = entry_gather(kc[str(i)], table)
+                v_ctx = entry_gather(vc[str(i)], table)
+                ctx_pos = _ring_ctx_positions(start_len, layout.ring_capacity)
+                kcache = entry_scatter_chunk(kc[str(i)], table, start_len, k1, valid, ring=True)
+                vcache = entry_scatter_chunk(vc[str(i)], table, start_len, v1, valid, ring=True)
+                k_in, v_in = k1, v1
+                if isinstance(kc[str(i)], dict):
+                    # quantised cache: the in-chunk keys must carry the same
+                    # int8-round-tripped bits the pool (and every later
+                    # read) holds, or chunked prefill diverges from replay
+                    k_in = dequantize_kv(*quantize_kv(k1))
+                    v_in = dequantize_kv(*quantize_kv(v1))
+                ao = attn.ring_chunk_attention(
+                    q, k_ctx, v_ctx, ctx_pos, k_in, v_in, start_len, n_valid,
+                    window=layout.window, logit_cap=cfg.attn_logit_cap,
+                )
+            elif ring:
+                # C == 1: decode-style ring read — bitwise-identical to
+                # ``paged_decode_step`` (chunk_decode_attention at C == 1
+                # is bitwise decode_attention; the ring view enforces the
+                # window exactly as the dense ring buffer does)
+                kcache = entry_scatter_chunk(kc[str(i)], table, start_len, k1, valid, ring=True)
+                vcache = entry_scatter_chunk(vc[str(i)], table, start_len, v1, valid, ring=True)
+                k_read = entry_gather_ring(kcache, table, start_len, layout.window)
+                v_read = entry_gather_ring(vcache, table, start_len, layout.window)
+                ao = attn.chunk_decode_attention(q, k_read, v_read, start_len, logit_cap=cfg.attn_logit_cap)
+            else:
+                kcache = entry_scatter_chunk(kc[str(i)], table, start_len, k1, valid, ring=False)
+                vcache = entry_scatter_chunk(vc[str(i)], table, start_len, v1, valid, ring=False)
+                k_read = entry_gather(kcache, table)
+                v_read = entry_gather(vcache, table)
+                ao = attn.chunk_decode_attention(q, k_read, v_read, start_len, logit_cap=cfg.attn_logit_cap)
             ao = site_prune(ao, "attn_out", sparsity, taus)
             attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
+            if cfg.ssm_state:
+                sstate = ssmc[str(i)]
+                if fresh is not None:
+                    sstate = jax.tree_util.tree_map(
+                        lambda s: jnp.where(fresh[:, None, None], jnp.zeros_like(s), s), sstate
+                    )
+                ssm_out, s_new = ssm_mix(p["ssm"], norm(p["ssm_ln"], hh), state=sstate, n_valid=n_valid)
+                attn_out = (attn_out + ssm_out) * 0.5
+                new_ssm[str(i)] = s_new
             if cfg.post_norms:
                 attn_out = norm(p["post_attn_norm"], attn_out)
             hh = hh + attn_out
@@ -498,13 +661,15 @@ def paged_prefill_chunk(
                 mlp_out = norm(p["post_mlp_norm"], mlp_out)
             hh = hh + mlp_out
             new_k[str(i)], new_v[str(i)] = kcache, vcache
-        return hh, (new_k, new_v)
+        return hh, (new_k, new_v, new_ssm if cfg.ssm_state else None)
 
-    h, (ks, vs) = jax.lax.scan(cycle_body, h, (params["blocks"], pools.k, pools.v))
-    h = jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)  # last valid position
+    xs = (params["blocks"], pools.k, pools.v, ssm if cfg.ssm_state else jnp.zeros((cfg.n_cycles,)))
+    h, (ks, vs, ssms) = jax.lax.scan(cycle_body, h, xs)
+    last = jnp.maximum(n_valid - 1, 0)[:, None, None]  # [B,1,1]
+    h = jnp.take_along_axis(h, last, axis=1)  # last valid position per row
     h = norm(params["final_norm"], h)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = h @ head.astype(h.dtype)
     logits = softcap(logits.astype(jnp.float32), cfg.final_logit_cap)
     logits = constrain(logits[:, 0], "logits_2d")
-    return logits, PagedKV(k=ks, v=vs)
+    return logits, PagedKV(k=ks, v=vs), ssms if cfg.ssm_state else None

@@ -118,8 +118,9 @@ class ContinuousServeConfig:
     slots: int = 8  # decode batch width
     max_len: int = 512  # per-sequence token budget (prompt + generated)
     page_size: int = 16  # tokens per KV page
-    num_pages: int = 0  # pool size; 0 -> slots * pages_per_seq + 1 (uncontended)
-    prefill_chunk: int = 16  # prompt tokens cached per prefill call
+    num_pages: int = 0  # "full" pool size; 0 -> slots * full budget + 1 (uncontended)
+    num_pages_ring: int = 0  # "ring" pool size; 0 -> slots * ring budget + 1
+    prefill_chunk: int = 16  # prompt tokens cached per (batched) prefill call
     # tokens decoded per host tick (multi-step scheduling).  The scheduler
     # must sync on every emitted token; scanning W steps per jitted call
     # amortises that host round-trip W-fold.  Rows finishing mid-window
@@ -134,20 +135,19 @@ class ContinuousServeConfig:
     depth_hi: int = 16
     rho_ema: float = 0.5
 
-    @property
-    def pages_per_seq(self) -> int:
-        if self.max_len % self.page_size:
-            raise ValueError("max_len must be a multiple of page_size")
-        return self.max_len // self.page_size
-
 
 class ContinuousServeEngine:
     """Token-granularity continuous batching: every step either decodes one
-    token for all ready rows or prefills one chunk of an admitted prompt,
-    and the scheduler re-fills freed slots/pages immediately.
+    token for all ready rows or prefills one chunk for EVERY admitted
+    prompt (batched prefill), and the scheduler re-fills freed slots/pages
+    immediately.  Sliding-window layers page into fixed-budget ring tables
+    (memory scales with the window), int8-quantised caches page into
+    int8 + scale pools, and hybrid models carry their SSM side-state per
+    slot — the full transformer model zoo serves through this engine.
 
     At ``target_rho == 0`` (or sparsity mode "none") decode logits are
     bitwise-identical to the dense-KV `ServeEngine` path — the paged read
+    reproduces the dense cache's values in the dense cache's order and
     masks exactly the positions the dense read masks.
     """
 
@@ -162,11 +162,23 @@ class ContinuousServeEngine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
-        self.maxp = scfg.pages_per_seq
-        num_pages = scfg.num_pages or scfg.slots * self.maxp + 1
-        self.allocator = PageAllocator(num_pages, scfg.page_size)
-        self.sched = ContinuousScheduler(scfg.slots, self.allocator, self.maxp)
-        self.pools = tfm.init_paged_state(cfg, num_pages, scfg.page_size)
+        self.layout = tfm.paged_layout(cfg, scfg.max_len, scfg.page_size, lookahead=scfg.decode_window)
+        if "ring" in self.layout.kinds and scfg.prefill_chunk > self.layout.ring_capacity:
+            # a chunk longer than the ring would scatter two laps into one
+            # .at[].set — duplicate indices with unspecified resolution order
+            raise ValueError(
+                f"prefill_chunk={scfg.prefill_chunk} exceeds the ring capacity "
+                f"{self.layout.ring_capacity} (window {self.layout.window}, page {scfg.page_size})"
+            )
+        self.budgets = {k: self.layout.budget(k) for k in self.layout.kinds}
+        num_pages = {}
+        for kind in self.layout.kinds:
+            configured = scfg.num_pages if kind == "full" else scfg.num_pages_ring
+            num_pages[kind] = configured or scfg.slots * self.budgets[kind] + 1
+        self.allocators = {k: PageAllocator(num_pages[k], scfg.page_size) for k in self.layout.kinds}
+        self.sched = ContinuousScheduler(scfg.slots, self.allocators, self.budgets, scfg.max_len)
+        self.pools = tfm.init_paged_state(cfg, self.layout, num_pages)
+        self.ssm = tfm.init_paged_ssm(cfg, scfg.slots)
 
         sp: SparsityConfig = cfg.sparsity
         self._dynatran = sp.mode == "dynatran"
@@ -187,37 +199,38 @@ class ContinuousServeEngine:
         self._fixed_rho = float(base_rho)
         self.current_rho = self._fixed_rho if self._dynatran else 0.0
 
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(0,))
-        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(0, 1))
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0, 1))
         self._rid = 0
         self._tick = 0
         self.requests: list[Request] = []
 
     # --- jitted bodies ----------------------------------------------------
-    def _decode_impl(self, pools, page_table, lengths, tokens, taus):
+    def _decode_impl(self, pools, ssm, tables, lengths, tokens, live, taus):
         """Scan ``decode_window`` steps per host round-trip; returns the
         window's tokens [W, B]."""
 
         def body(carry, _):
-            pools, lengths, toks = carry
-            logits, pools = tfm.paged_decode_step(
-                self.params, self.cfg, pools, page_table, lengths, toks,
-                taus=taus, use_pallas=self.scfg.use_pallas,
+            pools, ssm, lengths, toks = carry
+            logits, pools, ssm = tfm.paged_decode_step(
+                self.params, self.cfg, self.layout, pools, tables, lengths, toks,
+                ssm=ssm, live=live, taus=taus, use_pallas=self.scfg.use_pallas,
             )
             nxt = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
-            return (pools, lengths + 1, nxt[:, None]), nxt
+            return (pools, ssm, lengths + 1, nxt[:, None]), nxt
 
-        (pools, _, _), toks = jax.lax.scan(
-            body, (pools, lengths, tokens), None, length=self.scfg.decode_window
+        (pools, ssm, _, _), toks = jax.lax.scan(
+            body, (pools, ssm, lengths, tokens), None, length=self.scfg.decode_window
         )
-        return pools, toks
+        return pools, ssm, toks
 
-    def _prefill_impl(self, pools, pt_row, start, tokens, n_valid, taus):
-        logits, pools = tfm.paged_prefill_chunk(
-            self.params, self.cfg, pools, pt_row, start, tokens, n_valid, taus=taus
+    def _prefill_impl(self, pools, ssm, tables, start, tokens, n_valid, fresh, taus):
+        logits, pools, ssm = tfm.paged_prefill_chunk(
+            self.params, self.cfg, self.layout, pools, tables, start, tokens, n_valid,
+            ssm=ssm, fresh=fresh, taus=taus,
         )
         next_tok = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
-        return pools, next_tok, logits
+        return pools, ssm, next_tok
 
     # --- runtime DynaTran knob -------------------------------------------
     def _current_taus(self) -> Optional[dict]:
@@ -250,17 +263,17 @@ class ContinuousServeEngine:
         return req
 
     def step(self) -> list[Request]:
-        """One engine tick: admissions, then one prefill chunk OR one decode
-        batch (alternating when both are pending).  Returns newly finished
-        requests."""
+        """One engine tick: admissions, then one batched prefill chunk (all
+        admitted prompts at once) OR one decode batch (alternating when
+        both are pending).  Returns newly finished requests."""
         self._tick += 1
         self.sched.admit_ready()
         taus = self._current_taus()
-        prefill_req = self.sched.prefill_candidate()
+        prefill_reqs = self.sched.prefill_candidates()
         ready = self.sched.decode_rows()
         finished: list[Request] = []
-        if prefill_req is not None and (not ready or self._tick % 2 == 1):
-            finished += self._prefill_step(prefill_req, taus)
+        if prefill_reqs and (not ready or self._tick % 2 == 1):
+            finished += self._prefill_step(prefill_reqs, taus)
         elif ready:
             finished += self._decode_step(ready, taus)
         return finished
@@ -283,7 +296,8 @@ class ContinuousServeEngine:
     def metrics(self) -> dict:
         out = summarize(self.requests)
         out["rho"] = self.current_rho
-        out["free_pages"] = self.allocator.free_pages
+        out["free_pages"] = {k: a.free_pages for k, a in self.allocators.items()}
+        out["cache_bytes"] = self.pools.bytes()
         out["queue_depth"] = self.sched.queue_depth
         return out
 
@@ -298,34 +312,55 @@ class ContinuousServeEngine:
         req.finish_time = time.perf_counter()
         self.sched.finish(req)
 
-    def _prefill_step(self, req: Request, taus) -> list[Request]:
-        replay = req.replay
-        c = self.scfg.prefill_chunk
-        chunk = replay[req.prefill_pos : req.prefill_pos + c]
-        nv = len(chunk)
-        padded = np.zeros((1, c), np.int32)
-        padded[0, :nv] = chunk
-        pt_row = jnp.asarray(self.sched.page_table_row(req), jnp.int32)
-        self.pools, next_tok, _ = self._prefill(
-            self.pools, pt_row, jnp.asarray(req.prefill_pos, jnp.int32),
-            jnp.asarray(padded), jnp.asarray(nv, jnp.int32), taus,
+    def _tables_for(self, reqs: list[Request]) -> dict[str, jnp.ndarray]:
+        """Full-width [slots, budget(kind)] page tables: rows without a
+        scheduled request point at the trash page."""
+        out = {
+            kind: np.zeros((self.scfg.slots, self.budgets[kind]), np.int32)
+            for kind in self.layout.kinds
+        }
+        for req in reqs:
+            for kind, row in self.sched.page_tables(req).items():
+                out[kind][req.slot] = row
+        return {kind: jnp.asarray(t) for kind, t in out.items()}
+
+    def _prefill_step(self, reqs: list[Request], taus) -> list[Request]:
+        """One jitted call caches a chunk for EVERY admitted prompt; rows
+        live at their engine slots so hybrid SSM state stays aligned."""
+        b, c = self.scfg.slots, self.scfg.prefill_chunk
+        toks = np.zeros((b, c), np.int32)
+        starts = np.zeros((b,), np.int32)
+        nv = np.zeros((b,), np.int32)
+        fresh = np.zeros((b,), bool)
+        for req in reqs:
+            chunk = req.replay[req.prefill_pos : req.prefill_pos + c]
+            toks[req.slot, : len(chunk)] = chunk
+            starts[req.slot] = req.prefill_pos
+            nv[req.slot] = len(chunk)
+            fresh[req.slot] = req.prefill_pos == 0
+        self.pools, self.ssm, next_tok = self._prefill(
+            self.pools, self.ssm, self._tables_for(reqs), jnp.asarray(starts),
+            jnp.asarray(toks), jnp.asarray(nv), jnp.asarray(fresh), taus,
         )
-        req.prefill_pos += nv
-        req.cache_len = req.prefill_pos
-        if req.prefill_pos < len(replay):
-            return []
-        req.ready = True
-        if req.generated:  # re-admitted after eviction: resume, don't resample
-            req.pending_token = req.generated[-1]
-            return []
-        tok = int(next_tok[0])
-        req.generated.append(tok)
-        req.pending_token = tok
-        req.first_token_time = time.perf_counter()
-        if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
-            self._finish(req)
-            return [req]
-        return []
+        finished: list[Request] = []
+        for req in reqs:
+            took = int(nv[req.slot])
+            req.prefill_pos += took
+            req.cache_len = req.prefill_pos
+            if req.prefill_pos < len(req.replay):
+                continue
+            req.ready = True
+            if req.generated:  # re-admitted after eviction: resume, don't resample
+                req.pending_token = req.generated[-1]
+                continue
+            tok = int(next_tok[req.slot])
+            req.generated.append(tok)
+            req.pending_token = tok
+            req.first_token_time = time.perf_counter()
+            if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
+                self._finish(req)
+                finished.append(req)
+        return finished
 
     def _decode_step(self, ready: list[Request], taus) -> list[Request]:
         window = self.scfg.decode_window
@@ -336,16 +371,17 @@ class ContinuousServeEngine:
         rows = [r for r in rows if r.slot is not None]  # grow() may evict peers
         if not rows:
             return []
-        b, maxp = self.scfg.slots, self.maxp
-        pt = np.zeros((b, maxp), np.int32)
+        b = self.scfg.slots
         lens = np.zeros((b,), np.int32)
         toks = np.zeros((b, 1), np.int32)
+        live = np.zeros((b,), bool)
         for req in rows:
-            pt[req.slot] = self.sched.page_table_row(req)
             lens[req.slot] = req.cache_len
             toks[req.slot, 0] = req.pending_token
-        self.pools, win_tok = self._decode(
-            self.pools, jnp.asarray(pt), jnp.asarray(lens), jnp.asarray(toks), taus
+            live[req.slot] = True
+        self.pools, self.ssm, win_tok = self._decode(
+            self.pools, self.ssm, self._tables_for(rows), jnp.asarray(lens), jnp.asarray(toks),
+            jnp.asarray(live), taus,
         )
         win_tok = np.asarray(win_tok)  # [W, B]
         finished = []

@@ -5,9 +5,13 @@ in microseconds:
 
 * ``Request``            — one generation request with SLO/latency metrics.
 * ``ContinuousScheduler``— FIFO admission at token granularity over a fixed
-  slot count, page-table bookkeeping against the ``PageAllocator``, and a
-  youngest-first eviction policy (the oldest admitted request is never
-  evicted, so admission order is starvation-free).
+  slot count, page-table bookkeeping against one ``PageAllocator`` per page
+  KIND ("full" tables grow append-only; "ring" tables for sliding-window
+  layers hold a fixed ``ceil(window/P)+1``-page budget and RECYCLE — the
+  page that slid fully out of the window is released to the allocator and a
+  fresh page is linked into its table slot), and a youngest-first eviction
+  policy (the oldest admitted request is never evicted, so admission order
+  is starvation-free).
 * ``RhoController``      — the paper's accuracy/throughput trade-off closed
   at runtime: queue depth maps monotonically onto DynaTran's target
   sparsity rho (paper §III-A transfer curves make the knob nearly free), so
@@ -45,6 +49,12 @@ class Request:
     evictions: int = 0
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # page-table state, owned by the scheduler: kind -> page list.  "full"
+    # tables are append-ordered (position t lives in entry t // P); "ring"
+    # tables are slot-indexed circular arrays (position t in entry
+    # (t // P) % budget).  ``ring_hi`` counts page-intervals ever started.
+    tables: dict[str, list[int]] = dataclasses.field(default_factory=dict)
+    ring_hi: int = 0
 
     @property
     def replay(self) -> list[int]:
@@ -75,16 +85,20 @@ class ContinuousScheduler:
     """Slot + page bookkeeping for token-granularity continuous batching.
 
     Admission is strict FIFO: the queue head is admitted as soon as a slot
-    is free and the allocator can hold its replay (+1 decode token).  Under
-    page pressure the *youngest* admitted request is evicted and re-queued
-    at the FRONT of the queue, so relative order is preserved and the
-    oldest request always runs to completion — no starvation.
+    is free and every per-kind allocator can hold its replay (+1 decode
+    token).  Under page pressure the *youngest* admitted request is evicted
+    and re-queued at the FRONT of the queue, so relative order is preserved
+    and the oldest request always runs to completion — no starvation.
     """
 
-    def __init__(self, slots: int, allocator: PageAllocator, max_pages_per_seq: int):
+    def __init__(
+        self, slots: int, allocators: dict[str, PageAllocator], budgets: dict[str, int], max_len: int
+    ):
         self.slots = slots
-        self.allocator = allocator
-        self.max_pages_per_seq = max_pages_per_seq
+        self.allocators = allocators
+        self.budgets = budgets
+        self.max_len = max_len
+        self.page_size = next(iter(allocators.values())).page_size
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self._free_slots = list(range(slots - 1, -1, -1))
@@ -98,21 +112,77 @@ class ContinuousScheduler:
     def num_active(self) -> int:
         return len(self.active)
 
+    def _peak_pages(self, kind: str, tokens: int) -> int:
+        """Pages a request holding ``tokens`` cache entries occupies in
+        ``kind``'s pool (ring tables never exceed their fixed budget)."""
+        return min(self.allocators[kind].pages_for(tokens), self.budgets[kind])
+
     def submit(self, req: Request) -> None:
         max_tokens = len(req.prompt) + req.max_new_tokens
-        if max_tokens > self.max_pages_per_seq * self.allocator.page_size:
+        if max_tokens > self.max_len:
             raise ValueError(f"request {req.rid}: {max_tokens} tokens exceeds max_len")
-        if self.allocator.pages_for(max_tokens) > self.allocator.num_pages - 1:
-            raise ValueError(f"request {req.rid}: page pool cannot hold {max_tokens} tokens")
+        for kind, alloc in self.allocators.items():
+            if self._peak_pages(kind, max_tokens) > alloc.num_pages - 1:
+                raise ValueError(f"request {req.rid}: {kind} page pool cannot hold {max_tokens} tokens")
         self.queue.append(req)
+
+    def _ensure(self, req: Request, target_tokens: int) -> bool:
+        """Grow ``req``'s tables to hold ``target_tokens`` cache entries.
+        Returns False (keeping partial progress — ``_ensure`` is resumable)
+        when an allocator runs dry."""
+        for kind, alloc in self.allocators.items():
+            budget = self.budgets[kind]
+            table = req.tables.setdefault(kind, [])
+            if kind == "full":
+                need = self._peak_pages(kind, target_tokens) - len(table)
+                if need > 0:
+                    pages = alloc.alloc(req.rid, need)
+                    if pages is None:
+                        return False
+                    table.extend(pages)
+            else:  # ring: fill the first lap, then recycle in place
+                hi = -(-target_tokens // self.page_size)
+                while req.ring_hi < hi:
+                    if len(table) == budget and hi - req.ring_hi > budget:
+                        # skipping whole laps is sound once the table is
+                        # fully linked: only the trailing ``budget``
+                        # intervals decide which page sits in each slot
+                        # (a long replay would otherwise churn O(replay/P)
+                        # recycles at admission)
+                        req.ring_hi = hi - budget
+                        continue
+                    slot = req.ring_hi % budget
+                    if len(table) <= slot:
+                        pages = alloc.alloc(req.rid, 1)
+                        if pages is None:
+                            return False
+                        table.append(pages[0])
+                    else:
+                        # the page in this slot holds only positions that
+                        # slid fully out of the window (ring capacity is
+                        # window + lookahead + at least one page): release
+                        # it, then re-link a fresh page — the release
+                        # guarantees the alloc can be satisfied
+                        alloc.release(req.rid, table[slot])
+                        pages = alloc.alloc(req.rid, 1)
+                        assert pages is not None, "alloc after release cannot fail"
+                        table[slot] = pages[0]
+                    req.ring_hi += 1
+        return True
+
+    def _drop_pages(self, req: Request) -> None:
+        for alloc in self.allocators.values():
+            alloc.free(req.rid)
+        req.tables = {}
+        req.ring_hi = 0
 
     def admit_ready(self) -> list[Request]:
         """Admit queue heads while a slot and enough pages are available."""
         admitted = []
         while self.queue and self._free_slots:
             req = self.queue[0]
-            need = self.allocator.pages_for(len(req.replay) + 1)
-            if self.allocator.alloc(req.rid, need) is None:
+            if not self._ensure(req, len(req.replay) + 1):
+                self._drop_pages(req)  # roll back the partial reservation
                 break
             self.queue.popleft()
             req.slot = self._free_slots.pop()
@@ -124,31 +194,27 @@ class ContinuousScheduler:
             admitted.append(req)
         return admitted
 
-    def prefill_candidate(self) -> Optional[Request]:
-        """Earliest-admitted active request with replay tokens left to cache."""
+    def prefill_candidates(self) -> list[Request]:
+        """Active requests with replay tokens left to cache, oldest first —
+        one batched prefill call serves all of them."""
         pending = [r for r in self.active.values() if not r.ready]
-        return min(pending, key=lambda r: r.admit_stamp) if pending else None
+        return sorted(pending, key=lambda r: r.admit_stamp)
 
     def decode_rows(self) -> list[Request]:
         return sorted((r for r in self.active.values() if r.ready), key=lambda r: r.admit_stamp)
 
     def grow(self, req: Request, new_tokens: int = 1) -> bool:
         """Ensure ``req`` has pages for its next ``new_tokens`` cache
-        entries, evicting younger requests if the pool is exhausted.
+        entries, evicting younger requests if a pool is exhausted.
         Returns False if ``req`` itself was evicted to make room for older
         work."""
         # never reserve past the request's own token budget: surplus
-        # decode-window writes beyond it are clamp-routed to trash/freed
-        # pages, so they need no backing
+        # decode-window writes beyond it are routed out of bounds and
+        # dropped, so they need no backing
         budget = len(req.prompt) + req.max_new_tokens
-        target = min(
-            req.cache_len + new_tokens,
-            budget,
-            self.max_pages_per_seq * self.allocator.page_size,
-        )
+        target = min(req.cache_len + new_tokens, budget, self.max_len)
         while True:
-            need = self.allocator.pages_for(target) - len(self.allocator.owned(req.rid))
-            if need <= 0 or self.allocator.alloc(req.rid, need) is not None:
+            if self._ensure(req, target):
                 return True
             victim = self._youngest_victim()
             if victim is None:
@@ -163,7 +229,7 @@ class ContinuousScheduler:
 
     def evict(self, req: Request) -> None:
         """Release ``req``'s slot and pages and re-queue it at the front."""
-        self.allocator.free(req.rid)
+        self._drop_pages(req)
         self._release_slot(req)
         req.evictions += 1
         req.ready = False
@@ -172,7 +238,7 @@ class ContinuousScheduler:
         self.queue.appendleft(req)
 
     def finish(self, req: Request) -> None:
-        self.allocator.free(req.rid)
+        self._drop_pages(req)
         self._release_slot(req)
 
     def _release_slot(self, req: Request) -> None:
@@ -181,11 +247,15 @@ class ContinuousScheduler:
             self._free_slots.append(req.slot)
             req.slot = None
 
-    def page_table_row(self, req: Request) -> list[int]:
-        """The request's page table, zero-padded to max_pages_per_seq (page
-        0 is the reserved trash page, masked out by attention lengths)."""
-        pages = self.allocator.owned(req.rid)
-        return pages + [0] * (self.max_pages_per_seq - len(pages))
+    def page_tables(self, req: Request) -> dict[str, list[int]]:
+        """The request's page table per kind, zero-padded to the kind's
+        budget (page 0 is the reserved trash page, masked out by attention
+        lengths)."""
+        out = {}
+        for kind, budget in self.budgets.items():
+            pages = req.tables.get(kind, [])
+            out[kind] = pages + [0] * (budget - len(pages))
+        return out
 
 
 class RhoController:

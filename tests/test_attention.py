@@ -101,6 +101,70 @@ class TestDecodeAttention:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
+class TestWindowConventionEquivalence:
+    """Every path shares ONE window-mask convention — the query at position
+    t attends keys t - window < kpos <= t (``window`` keys including the
+    query).  Prefill replayed through decode must admit exactly the same
+    key set at every position; an off-by-one here silently skews every
+    sliding-window serve step."""
+
+    def test_prefill_vs_decode_windowed(self):
+        b, s, w = 2, 24, 8
+        q, k, v = qkv(b=b, sq=s, h=4, hkv=2, d=16, seed=10)
+        ref = attn.reference_attention(q, k, v, causal=True, window=w)
+        for t in range(s):
+            dec = attn.decode_attention(q[:, t : t + 1], k[:, : t + 1], v[:, : t + 1], t + 1, window=w)
+            np.testing.assert_allclose(
+                np.asarray(dec), np.asarray(ref[:, t : t + 1]), rtol=2e-5, atol=2e-5,
+                err_msg=f"decode admits a different key set than prefill at position {t}",
+            )
+
+    def test_chunked_prefill_vs_decode_windowed(self):
+        b, s, w = 2, 24, 8
+        q, k, v = qkv(b=b, sq=s, h=4, hkv=2, d=16, seed=11)
+        ref = attn.chunked_attention(q, k, v, causal=True, window=w, chunk_q=8, chunk_k=8)
+        for t in range(s):
+            dec = attn.decode_attention(q[:, t : t + 1], k[:, : t + 1], v[:, : t + 1], t + 1, window=w)
+            np.testing.assert_allclose(np.asarray(dec), np.asarray(ref[:, t : t + 1]), rtol=2e-5, atol=2e-5)
+
+    def test_chunk_decode_window_matches_reference(self):
+        # chunk_decode_attention's window path == reference rows, any chunk split
+        b, s, w, c = 2, 24, 8, 6
+        q, k, v = qkv(b=b, sq=s, h=4, hkv=2, d=16, seed=12)
+        ref = attn.reference_attention(q, k, v, causal=True, window=w)
+        for c0 in range(0, s, c):
+            got = attn.chunk_decode_attention(
+                q[:, c0 : c0 + c], k, v, jnp.full((b,), c0, jnp.int32), window=w
+            )
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref[:, c0 : c0 + c]), rtol=2e-5, atol=2e-5)
+
+    def test_ring_chunk_attention_matches_reference(self):
+        # ring-context + in-chunk attention == the reference window rows
+        b, s, w, c = 2, 20, 8, 5
+        cap = 12  # ring capacity (budget 3 pages of 4)
+        q, k, v = qkv(b=b, sq=s, h=4, hkv=2, d=16, seed=13)
+        ref = attn.reference_attention(q, k, v, causal=True, window=w)
+        for c0 in range(0, s, c):
+            start = jnp.full((b,), c0, jnp.int32)
+            # build the pre-chunk ring context view from the raw k/v
+            ctx_pos = np.zeros((b, cap), np.int64)
+            for j in range(cap):
+                a = (c0 - 1) - ((c0 - 1 - j) % cap)
+                ctx_pos[:, j] = a
+            k_ctx = np.zeros((b, cap) + k.shape[2:], np.float32)
+            v_ctx = np.zeros_like(k_ctx)
+            for j in range(cap):
+                if ctx_pos[0, j] >= 0:
+                    k_ctx[:, j] = np.asarray(k[:, ctx_pos[0, j]])
+                    v_ctx[:, j] = np.asarray(v[:, ctx_pos[0, j]])
+            got = attn.ring_chunk_attention(
+                q[:, c0 : c0 + c], jnp.asarray(k_ctx), jnp.asarray(v_ctx),
+                jnp.asarray(ctx_pos, jnp.int32), k[:, c0 : c0 + c], v[:, c0 : c0 + c],
+                start, jnp.full((b,), c, jnp.int32), window=w,
+            )
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref[:, c0 : c0 + c]), rtol=2e-5, atol=2e-5)
+
+
 class TestSparsityHooks:
     def test_dynatran_prunes_probs(self):
         q, k, v = qkv(b=1, sq=32, h=2, d=16, seed=7)

@@ -16,7 +16,15 @@ def make_req(rid, prompt_len=8, max_new=8):
 
 
 def make_sched(slots=2, num_pages=17, page_size=4, maxp=4):
-    return ContinuousScheduler(slots, PageAllocator(num_pages, page_size), maxp)
+    return ContinuousScheduler(
+        slots, {"full": PageAllocator(num_pages, page_size)}, {"full": maxp}, maxp * page_size
+    )
+
+
+def make_ring_sched(slots=2, num_pages=9, page_size=4, budget=3, max_len=64):
+    return ContinuousScheduler(
+        slots, {"ring": PageAllocator(num_pages, page_size)}, {"ring": budget}, max_len
+    )
 
 
 class TestAdmission:
@@ -69,13 +77,13 @@ class TestEviction:
     def test_grow_never_reserves_past_request_budget(self):
         # prompt 8 + max_new 24 = 32 tokens = 2 pages of 16; a decode window
         # larger than the remaining budget must not demand a third page
-        s = ContinuousScheduler(1, PageAllocator(3, 16), 4)
+        s = ContinuousScheduler(1, {"full": PageAllocator(3, 16)}, {"full": 4}, 64)
         req = make_req(0, prompt_len=8, max_new=24)
         s.submit(req)
         s.admit_ready()
         req.cache_len = 24
         assert s.grow(req, new_tokens=16) is True  # capped at budget 32 -> 2 pages
-        assert len(s.allocator.owned(req.rid)) == 2
+        assert len(s.allocators["full"].owned(req.rid)) == 2
 
     def test_no_starvation_under_churn(self):
         """With continuous arrivals and page pressure, the oldest queued
@@ -100,6 +108,66 @@ class TestEviction:
             if not s.queue and not s.active:
                 break
         assert done_order == sorted(done_order)  # FIFO completion, nobody starved
+
+
+class TestRingRecycling:
+    def test_ring_pages_capped_at_budget_under_growth(self):
+        s = make_ring_sched(slots=1, num_pages=5, budget=3, page_size=4)
+        req = make_req(0, prompt_len=8, max_new=40)  # 48 tokens, 12 intervals
+        s.submit(req)
+        s.admit_ready()
+        alloc = s.allocators["ring"]
+        assert len(alloc.owned(req.rid)) == 3  # replay+1 = 9 tokens -> 3 intervals
+        for cache_len in range(9, 48):
+            req.cache_len = cache_len
+            assert s.grow(req, 1) is True
+            owned = alloc.owned(req.rid)
+            assert len(owned) <= 3  # never exceeds ceil(window-span/P) + 1
+            assert len(req.tables["ring"]) == 3  # table stays fully linked
+            assert alloc.free_pages + len(owned) == 4  # conservation
+
+    def test_ring_admission_allocates_at_most_budget(self):
+        # a long replay still only needs the ring budget, so a pool sized
+        # for the window admits arbitrarily long prompts
+        s = make_ring_sched(slots=1, num_pages=4, budget=3, page_size=4, max_len=256)
+        req = make_req(0, prompt_len=200, max_new=8)
+        s.submit(req)  # would need 52 pages append-only; ring needs 3
+        assert len(s.admit_ready()) == 1
+        assert len(s.allocators["ring"].owned(req.rid)) == 3
+
+    def test_ring_recycle_interleaves_with_other_sequences(self):
+        s = make_ring_sched(slots=2, num_pages=7, budget=3, page_size=4)
+        a, b = make_req(0, prompt_len=4, max_new=40), make_req(1, prompt_len=4, max_new=40)
+        s.submit(a)
+        s.submit(b)
+        assert len(s.admit_ready()) == 2
+        alloc = s.allocators["ring"]
+        for step in range(5, 40):
+            for req in (a, b):
+                req.cache_len = step
+                assert s.grow(req, 1) is True
+            owned_a, owned_b = set(alloc.owned(a.rid)), set(alloc.owned(b.rid))
+            assert not owned_a & owned_b  # no page double-owned, ever
+            assert len(owned_a) <= 3 and len(owned_b) <= 3
+            assert alloc.free_pages + len(owned_a) + len(owned_b) == 6
+
+    def test_mixed_kinds_admission_rolls_back_on_failure(self):
+        # ring reservation succeeds first, then the full pool runs dry: the
+        # partial ring reservation must be rolled back for the blocked head
+        s = ContinuousScheduler(
+            2,
+            {"ring": PageAllocator(9, 4), "full": PageAllocator(5, 4)},
+            {"ring": 3, "full": 8},
+            32,
+        )
+        r0, r1 = make_req(0), make_req(1)  # replay+1 = 9 -> 3 full + 3 ring pages
+        s.submit(r0)
+        s.submit(r1)
+        admitted = s.admit_ready()
+        assert [r.rid for r in admitted] == [0]  # only 1 full page left for r1
+        assert r1.tables == {} and r1.ring_hi == 0  # fully rolled back
+        assert s.allocators["ring"].free_pages == 8 - 3  # only r0's pages held
+        assert s.allocators["full"].free_pages == 4 - 3
 
 
 class TestRhoController:

@@ -84,7 +84,10 @@ class TestDecodeForwardConsistency:
     """Prefill-by-decode replay must reproduce forward()'s next-token logits
     — the cache math is exact, not approximate."""
 
-    @pytest.mark.parametrize("arch", ["qwen3-4b", "gemma2-9b", "rwkv6-7b", "mixtral-8x7b"])
+    # hymba joined once the SSM conv state carried PRE-conv inputs — with
+    # post-conv context (the old convention) decode replay could never
+    # reproduce a full-sequence pass
+    @pytest.mark.parametrize("arch", ["qwen3-4b", "gemma2-9b", "rwkv6-7b", "mixtral-8x7b", "hymba-1.5b"])
     def test_replay_matches_forward(self, arch):
         import dataclasses
 

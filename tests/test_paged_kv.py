@@ -1,5 +1,8 @@
-"""Paged KV cache: allocator alloc/free/reuse, gather/scatter kernels,
-paged decode bitwise-equality vs the dense reference, eviction correctness."""
+"""Paged KV cache: allocator alloc/free/release, gather/scatter kernels
+(full + ring + int8), paged decode bitwise-equality vs the dense reference
+for every cache flavour, batched prefill, eviction correctness."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +13,17 @@ from repro.kernels.paged_attention import paged_decode_attention, paged_gather, 
 from repro.models import transformer as tfm
 from repro.models import zoo
 from repro.models.attention import chunk_decode_attention, decode_attention
-from repro.models.kvcache import TRASH_PAGE, PageAllocator, gather_pages, scatter_token
+from repro.models.kvcache import (
+    TRASH_PAGE,
+    PageAllocator,
+    PagedLayout,
+    dequantize_kv,
+    gather_pages,
+    gather_pages_ring,
+    quantize_kv,
+    scatter_chunk,
+    scatter_token,
+)
 
 
 def tiny_cfg(**kw):
@@ -26,6 +39,32 @@ def tiny_cfg(**kw):
         remat="none",
         **kw,
     )
+
+
+def sliding_cfg(**kw):
+    """gemma2-family shape: alternating sliding/full with softcaps."""
+    base = dict(
+        attention_pattern=("sliding", "full"),
+        window=8,
+        attn_logit_cap=50.0,
+        final_logit_cap=30.0,
+        post_norms=True,
+        embed_scale=True,
+        tie_embeddings=True,
+    )
+    base.update(kw)
+    return tiny_cfg(**base)
+
+
+def make_tables(layout: PagedLayout, batch: int, slack: int = 4):
+    """One allocator per kind, every row's tables fully allocated."""
+    allocs = {k: PageAllocator(batch * layout.budget(k) + 1 + slack, layout.page_size) for k in layout.kinds}
+    tables = {
+        k: jnp.asarray(np.stack([allocs[k].alloc(i, layout.budget(k)) for i in range(batch)]), jnp.int32)
+        for k in layout.kinds
+    }
+    num_pages = {k: allocs[k].num_pages for k in layout.kinds}
+    return allocs, tables, num_pages
 
 
 class TestPageAllocator:
@@ -52,11 +91,77 @@ class TestPageAllocator:
         assert a.owned(0) == []
         assert a.owned(1) == second
 
+    def test_release_single_page(self):
+        a = PageAllocator(num_pages=6, page_size=4)
+        pages = a.alloc(0, 3)
+        a.release(0, pages[1])
+        assert a.owned(0) == [pages[0], pages[2]]
+        assert a.free_pages == 3
+        # released pages join the COLD end of the free list: the next alloc
+        # returns a different page (ring re-links genuinely rotate the
+        # pool), but the released page does circulate once the list drains
+        got = a.alloc(1, 1)
+        assert got != [pages[1]]
+        rest = a.alloc(2, 2)
+        assert pages[1] in rest
+
     def test_pages_for(self):
         a = PageAllocator(num_pages=4, page_size=8)
         assert a.pages_for(1) == 1
         assert a.pages_for(8) == 1
         assert a.pages_for(9) == 2
+
+
+class TestPagedLayout:
+    def test_ring_budget_scales_with_window_not_max_len(self):
+        for max_len in (128, 256, 1024):
+            lo = PagedLayout.for_config(sliding_cfg(window=32), max_len, 16)
+            assert lo.budget("ring") == 3  # ceil(32/16) + 1
+            assert lo.budget("full") == max_len // 16
+
+    def test_window_ge_max_len_degrades_to_full(self):
+        lo = PagedLayout.for_config(sliding_cfg(window=64), 64, 16)
+        assert lo.slot_kinds == ("full", "full")
+
+    def test_lookahead_extends_ring_budget(self):
+        assert PagedLayout.for_config(sliding_cfg(window=32), 256, 16, lookahead=17).budget("ring") == 4
+
+
+class TestScatterToken:
+    def test_oob_write_dropped_not_clamped(self):
+        """A row whose position is past its table must not corrupt the LAST
+        table entry's page (XLA gather clamp) — the write is dropped."""
+        num_pages, p, maxp = 6, 4, 2
+        pool = jnp.zeros((num_pages, p, 2, 4), jnp.float32)
+        pt = jnp.asarray([[1, 2]], jnp.int32)  # table holds 2 pages = 8 tokens
+        new = jnp.ones((1, 2, 4), jnp.float32)
+        out = scatter_token(pool, pt, jnp.asarray([8], jnp.int32), new)  # pos 8 = OOB
+        np.testing.assert_array_equal(np.asarray(out), np.zeros_like(np.asarray(out)))
+
+    def test_oob_regression_fill_past_table(self):
+        """Fill a row past its table and assert no foreign (or own) live
+        page is mutated by the overflow writes."""
+        num_pages, p, maxp = 8, 4, 2
+        rng = np.random.default_rng(0)
+        pool = jnp.asarray(rng.normal(size=(num_pages, p, 2, 4)), jnp.float32)
+        pt = jnp.asarray([[1, 2]], jnp.int32)
+        snapshot = np.asarray(pool).copy()
+        out = pool
+        for t in range(8, 16):  # all positions past the 8-token table
+            out = scatter_token(out, pt, jnp.asarray([t], jnp.int32), jnp.full((1, 2, 4), 99.0))
+        np.testing.assert_array_equal(np.asarray(out), snapshot)
+
+    def test_chunk_oob_and_padding_dropped(self):
+        num_pages, p = 8, 4
+        pool = jnp.zeros((num_pages, p, 2, 4), jnp.float32)
+        pt = jnp.asarray([[1, 2]], jnp.int32)
+        new = jnp.ones((1, 6, 2, 4), jnp.float32)
+        valid = jnp.asarray([[True, True, False, True, True, True]])
+        out = scatter_chunk(pool, pt, jnp.asarray([5], jnp.int32), new, valid)  # 5..10; 8+ OOB
+        got = np.asarray(out)
+        assert got[2, 1:3].max() == 1.0  # positions 5, 6 landed in page 2
+        assert got[2, 3].max() == 0.0  # position 7 was padding-masked
+        assert got.sum() == 2 * 2 * 4  # positions 8..10 dropped
 
 
 class TestPagedKernels:
@@ -87,6 +192,29 @@ class TestPagedKernels:
         out = paged_decode_attention(q, pool, vpool, pt, lens)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
 
+    def test_fused_attention_ring(self, pool_setup, rng):
+        pool, pt, lens = pool_setup
+        window = 8
+        vpool = jnp.asarray(rng.normal(size=pool.shape), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(3, 1, 4, 8)), jnp.float32)
+        kr = gather_pages_ring(pool, pt, lens - 1, window)
+        vr = gather_pages_ring(vpool, pt, lens - 1, window)
+        ref = decode_attention(q, kr, vr, jnp.minimum(lens, window))
+        out = paged_decode_attention(q, pool, vpool, pt, lens, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+    def test_fused_attention_int8_dequant(self, pool_setup, rng):
+        pool, pt, lens = pool_setup
+        vpool = jnp.asarray(rng.normal(size=pool.shape), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(3, 1, 4, 8)), jnp.float32)
+        kq, ks = quantize_kv(pool)
+        vq, vs = quantize_kv(vpool)
+        kd = dequantize_kv(gather_pages(kq, pt), gather_pages(ks, pt))
+        vd = dequantize_kv(gather_pages(vq, pt), gather_pages(vs, pt))
+        ref = decode_attention(q, kd, vd, lens)
+        out = paged_decode_attention(q, kq, vq, pt, lens, k_scale=ks, v_scale=vs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
     def test_chunk_attention_c1_bitwise_matches_decode(self, rng):
         b, t, h, hkv, d = 2, 16, 4, 2, 8
         q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
@@ -97,93 +225,372 @@ class TestPagedKernels:
         got = chunk_decode_attention(q, k, v, start)
         np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
 
+    def test_gather_pages_ring_dense_layout(self, rng):
+        """The ring gather reproduces the dense ring buffer exactly: entry j
+        holds the key at the newest absolute position congruent j mod W."""
+        num_pages, p, window = 7, 4, 8
+        nring, b = 3, 1  # capacity 12
+        pool = jnp.asarray(rng.normal(size=(num_pages, p, 1, 2)), jnp.float32)
+        pt = jnp.asarray([[1, 2, 3]], jnp.int32)
+        # stamp position markers through the ring write path
+        from repro.models.kvcache import scatter_token_ring
 
-class TestPagedDecode:
-    def _setup(self, seed=0):
-        cfg = tiny_cfg()
+        pool = jnp.zeros_like(pool)
+        L = 17
+        for t in range(L + 1):
+            pool = scatter_token_ring(pool, pt, jnp.asarray([t]), jnp.full((1, 1, 2), float(t)))
+        view = np.asarray(gather_pages_ring(pool, pt, jnp.asarray([L]), window))[0, :, 0, 0]
+        want = np.array([L - ((L - j) % window) for j in range(window)], np.float32)
+        np.testing.assert_array_equal(view, want)
+
+
+class TestPagedDecodeBitwise:
+    """Paged decode must be bitwise-identical to the dense decode reference
+    at rho=0 for every cache flavour: full, ring, int8, ring+int8, hybrid."""
+
+    def _compare(self, cfg, steps=20, b=2, p=4, max_len=32, seed=0):
         params = zoo.init_params(jax.random.PRNGKey(seed), cfg)
-        b, p, maxp = 2, 4, 8
-        alloc = PageAllocator(num_pages=b * maxp + 4, page_size=p)
-        pt = np.stack([alloc.alloc(i, maxp) for i in range(b)]).astype(np.int32)
-        return cfg, params, b, p, maxp, alloc, pt
-
-    def test_bitwise_identical_to_dense_decode(self, rng):
-        cfg, params, b, p, maxp, alloc, pt = self._setup()
-        dense = zoo.init_decode_state(cfg, b, maxp * p)
-        pools = tfm.init_paged_state(cfg, alloc.num_pages, p)
-        toks = rng.integers(1, cfg.vocab, size=(b, 9)).astype(np.int32)
-        for t in range(toks.shape[1]):
+        layout = tfm.paged_layout(cfg, max_len, p)
+        _, tables, num_pages = make_tables(layout, b)
+        pools = tfm.init_paged_state(cfg, layout, num_pages)
+        ssm = tfm.init_paged_ssm(cfg, b)
+        dense = zoo.init_decode_state(cfg, b, max_len)
+        rng = np.random.default_rng(seed)
+        toks = rng.integers(1, cfg.vocab, size=(b, steps)).astype(np.int32)
+        for t in range(steps):
             tok = jnp.asarray(toks[:, t : t + 1])
-            # NB: build a fresh lengths array per step — jnp.asarray may
-            # zero-copy a numpy buffer, so mutating one in place races the
-            # async computation
             lengths = jnp.full((b,), t, jnp.int32)
             ld, dense = zoo.decode_step(params, cfg, dense, tok)
-            lp, pools = tfm.paged_decode_step(params, cfg, pools, jnp.asarray(pt), lengths, tok)
-            np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
+            lp, pools, ssm = tfm.paged_decode_step(params, cfg, layout, pools, tables, lengths, tok, ssm=ssm)
+            np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp), err_msg=f"step {t}")
+
+    def test_full(self):
+        self._compare(tiny_cfg(), steps=9)
+
+    def test_ring_past_wraparound(self):
+        # 20 steps >> window 8 and ring capacity 12: the ring wraps twice
+        self._compare(sliding_cfg(), steps=20)
+
+    def test_int8(self):
+        self._compare(tiny_cfg(kv_cache_dtype="int8"), steps=9)
+
+    def test_ring_int8(self):
+        self._compare(sliding_cfg(kv_cache_dtype="int8"), steps=20)
+
+    def test_hybrid_ssm(self):
+        cfg = ModelConfig(
+            name="tiny-hybrid", family="hybrid", layers=2, d_model=64, heads=4, kv_heads=4,
+            d_ff=128, vocab=128, remat="none", attention_pattern=("sliding",), window=8,
+            ssm_state=8, ssm_expand=2, ssm_conv=4,
+        )
+        self._compare(cfg, steps=20)
+
+
+class TestPagedPrefill:
+    def _setup(self, cfg, b=2, p=4, max_len=32, seed=1):
+        params = zoo.init_params(jax.random.PRNGKey(seed), cfg)
+        layout = tfm.paged_layout(cfg, max_len, p)
+        _, tables, num_pages = make_tables(layout, b)
+        return params, layout, tables, num_pages
 
     def test_chunked_prefill_matches_per_token(self, rng):
-        cfg, params, _, p, maxp, alloc, pt = self._setup(seed=1)
+        cfg = tiny_cfg()
+        params, layout, tables, num_pages = self._setup(cfg)
         prompt = rng.integers(1, cfg.vocab, size=11).astype(np.int32)
 
-        pools_ref = tfm.init_paged_state(cfg, alloc.num_pages, p)
+        pools_ref = tfm.init_paged_state(cfg, layout, num_pages)
         for t in range(len(prompt)):
-            l_ref, pools_ref = tfm.paged_decode_step(
-                params,
-                cfg,
-                pools_ref,
-                jnp.asarray(pt[:1]),
+            l_ref, pools_ref, _ = tfm.paged_decode_step(
+                params, cfg, layout, pools_ref,
+                {k: tb[:1] for k, tb in tables.items()},
                 jnp.full((1,), t, jnp.int32),
                 jnp.asarray(prompt[t][None, None]),
             )
 
-        pools = tfm.init_paged_state(cfg, alloc.num_pages, p)
+        pools = tfm.init_paged_state(cfg, layout, num_pages)
         c, start = 4, 0
         for c0 in range(0, len(prompt), c):
             chunk = prompt[c0 : c0 + c]
             padded = np.zeros(c, np.int32)
             padded[: len(chunk)] = chunk
-            l_chunk, pools = tfm.paged_prefill_chunk(
-                params,
-                cfg,
-                pools,
-                jnp.asarray(pt[0]),
-                jnp.asarray(start, jnp.int32),
+            l_chunk, pools, _ = tfm.paged_prefill_chunk(
+                params, cfg, layout, pools,
+                {k: tb[:1] for k, tb in tables.items()},
+                jnp.asarray([start], jnp.int32),
                 jnp.asarray(padded[None]),
-                jnp.asarray(len(chunk), jnp.int32),
+                jnp.asarray([len(chunk)], jnp.int32),
             )
             start += len(chunk)
         np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_chunk), atol=1e-3, rtol=1e-3)
         assert int(np.argmax(np.asarray(l_ref))) == int(np.argmax(np.asarray(l_chunk)))
 
-    def test_unsupported_configs_rejected(self):
+    @pytest.mark.parametrize("kv_dtype", ["bfloat16", "int8"])
+    def test_ring_chunked_prefill_matches_per_token(self, rng, kv_dtype):
+        """Sliding-window chunked prefill vs per-token replay: the ring
+        context + in-chunk attention covers exactly the window.  The int8
+        case pins the in-chunk keys to the cache's round-tripped bits —
+        residual divergence is quantisation amplifying reduction-order
+        noise in LATER layers' caches (bins flip on 1-ulp hidden-state
+        differences), so it gets a looser bound plus argmax equality."""
+        cfg = sliding_cfg(kv_cache_dtype=kv_dtype)
+        params, layout, tables, num_pages = self._setup(cfg)
+        prompt = rng.integers(1, cfg.vocab, size=13).astype(np.int32)
+
+        def run(c):
+            pools = tfm.init_paged_state(cfg, layout, num_pages)
+            start = 0
+            for c0 in range(0, len(prompt), c):
+                chunk = prompt[c0 : c0 + c]
+                padded = np.zeros(c, np.int32)
+                padded[: len(chunk)] = chunk
+                logits, pools, _ = tfm.paged_prefill_chunk(
+                    params, cfg, layout, pools,
+                    {k: tb[:1] for k, tb in tables.items()},
+                    jnp.asarray([start], jnp.int32),
+                    jnp.asarray(padded[None]),
+                    jnp.asarray([len(chunk)], jnp.int32),
+                )
+                start += len(chunk)
+            return np.asarray(logits)
+
+        l1, l5 = run(1), run(5)
+        tol = 1e-3 if kv_dtype == "bfloat16" else 0.08  # measured int8 residue ~0.03
+        np.testing.assert_allclose(l1, l5, atol=tol, rtol=tol)
+        assert int(np.argmax(l1)) == int(np.argmax(l5))
+
+    def test_batched_prefill_matches_single(self, rng):
+        """One batched call over N rows == N single-row calls (rows are
+        independent: disjoint pages, per-row masks)."""
+        cfg = sliding_cfg()
+        b = 3
+        params, layout, tables, num_pages = self._setup(cfg, b=b)
+        prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32) for n in (9, 5, 12)]
+        c = 4
+
+        # reference: each row prefilled alone (batch of 1)
+        ref_logits = []
+        pools = tfm.init_paged_state(cfg, layout, num_pages)
+        for i, prompt in enumerate(prompts):
+            start = 0
+            for c0 in range(0, len(prompt), c):
+                chunk = prompt[c0 : c0 + c]
+                padded = np.zeros(c, np.int32)
+                padded[: len(chunk)] = chunk
+                logits, pools, _ = tfm.paged_prefill_chunk(
+                    params, cfg, layout, pools,
+                    {k: tb[i : i + 1] for k, tb in tables.items()},
+                    jnp.asarray([start], jnp.int32),
+                    jnp.asarray(padded[None]),
+                    jnp.asarray([len(chunk)], jnp.int32),
+                )
+                start += len(chunk)
+            ref_logits.append(np.asarray(logits)[0])
+
+        # batched: all rows advance together, shorter rows go inactive
+        pools = tfm.init_paged_state(cfg, layout, num_pages)
+        starts = np.zeros((b,), np.int32)
+        done_logits = [None] * b
+        while any(starts[i] < len(prompts[i]) for i in range(b)):
+            toks = np.zeros((b, c), np.int32)
+            nv = np.zeros((b,), np.int32)
+            for i, prompt in enumerate(prompts):
+                chunk = prompt[starts[i] : starts[i] + c]
+                toks[i, : len(chunk)] = chunk
+                nv[i] = len(chunk)
+            logits, pools, _ = tfm.paged_prefill_chunk(
+                params, cfg, layout, pools, tables,
+                jnp.asarray(starts), jnp.asarray(toks), jnp.asarray(nv),
+            )
+            starts = starts + nv
+            for i in range(b):
+                if starts[i] >= len(prompts[i]) and done_logits[i] is None and nv[i] > 0:
+                    done_logits[i] = np.asarray(logits)[i]
+        for i in range(b):
+            np.testing.assert_allclose(done_logits[i], ref_logits[i], atol=1e-3, rtol=1e-3)
+            assert int(np.argmax(done_logits[i])) == int(np.argmax(ref_logits[i]))
+
+    def test_supported_and_unsupported_configs(self):
+        # sliding-window and int8 are now first-class paged citizens
+        tfm.check_paged_support(tiny_cfg(kv_cache_dtype="int8"))
+        tfm.check_paged_support(tiny_cfg(attention_pattern=("full", "sliding"), window=8))
         with pytest.raises(NotImplementedError):
-            tfm.check_paged_support(tiny_cfg(kv_cache_dtype="int8"))
-        with pytest.raises(NotImplementedError):
-            tfm.check_paged_support(tiny_cfg(attention_pattern=("full", "sliding"), window=8))
+            tfm.check_paged_support(
+                ModelConfig(name="r", family="ssm", layers=2, d_model=64, heads=2, kv_heads=2,
+                            d_ff=128, vocab=128)
+            )
 
 
 class TestEvictionCorrectness:
-    def test_eviction_reproduces_uncontended_outputs(self, rng):
-        """A pool too small for all sequences forces evict + replay; greedy
-        decode must still produce exactly the uncontended tokens."""
+    def _engines(self, cfg, seed, tight_pages):
         from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine
 
-        cfg = tiny_cfg()
-        params = zoo.init_params(jax.random.PRNGKey(2), cfg)
-        prompts = [rng.integers(1, cfg.vocab, size=10).tolist() for _ in range(5)]
-
+        params = zoo.init_params(jax.random.PRNGKey(seed), cfg)
         ample = ContinuousServeEngine(
             cfg, params, ContinuousServeConfig(slots=4, max_len=64, page_size=4, prefill_chunk=4)
         )
+        tight = ContinuousServeEngine(
+            cfg, params,
+            ContinuousServeConfig(slots=4, max_len=64, page_size=4, prefill_chunk=4, **tight_pages),
+        )
+        return ample, tight
+
+    def test_eviction_reproduces_uncontended_outputs(self, rng):
+        """A pool too small for all sequences forces evict + replay; greedy
+        decode must still produce exactly the uncontended tokens."""
+        cfg = tiny_cfg()
+        ample, tight = self._engines(cfg, 2, {"num_pages": 12})
+        prompts = [rng.integers(1, cfg.vocab, size=10).tolist() for _ in range(5)]
         want = ample.generate(prompts, max_new_tokens=12)
         assert sum(r.evictions for r in ample.requests) == 0
-
-        tight = ContinuousServeEngine(
-            cfg,
-            params,
-            ContinuousServeConfig(slots=4, max_len=64, page_size=4, num_pages=12, prefill_chunk=4),
-        )
         got = tight.generate(prompts, max_new_tokens=12)
         assert sum(r.evictions for r in tight.requests) > 0  # contention really happened
         assert got == want
+
+    def test_ring_eviction_reproduces_uncontended_outputs(self, rng):
+        """Same under RING page pressure.  Short prompts admit on one ring
+        page, then first-lap decode growth (toward the full 3-page budget)
+        drains the tight ring pool, forcing evict + replay — outputs must
+        still match the uncontended run."""
+        cfg = sliding_cfg()
+        ample, tight = self._engines(cfg, 3, {"num_pages_ring": 7})
+        prompts = [rng.integers(1, cfg.vocab, size=2).tolist() for _ in range(5)]
+        want = ample.generate(prompts, max_new_tokens=16)
+        assert sum(r.evictions for r in ample.requests) == 0
+        got = tight.generate(prompts, max_new_tokens=16)
+        assert sum(r.evictions for r in tight.requests) > 0
+        assert got == want
+
+
+class TestUniversalEngine:
+    """gemma2/hymba-family smokes serve end-to-end through the continuous
+    engine and match the dense-KV baseline token-for-token."""
+
+    def _roundtrip(self, cfg, seed, n=3, prompt_len=10, new=6, **scfg_kw):
+        from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine
+
+        params = zoo.init_params(jax.random.PRNGKey(seed), cfg)
+        rng = np.random.default_rng(seed)
+        prompts = [rng.integers(1, cfg.vocab, size=prompt_len).tolist() for _ in range(n)]
+        base = ServeEngine(cfg, params, ServeConfig(slots=1, max_len=64))
+        want = [base.generate([p], max_new_tokens=new)[0] for p in prompts]
+        eng = ContinuousServeEngine(
+            cfg, params,
+            ContinuousServeConfig(slots=2, max_len=64, page_size=4, prefill_chunk=1, **scfg_kw),
+        )
+        got = eng.generate(prompts, max_new_tokens=new)
+        assert got == want
+        return eng
+
+    def test_gemma2_family_serves(self):
+        from repro.configs import get_smoke
+
+        self._roundtrip(get_smoke("gemma2-9b"), seed=4)
+
+    def test_gemma2_int8_serves(self):
+        from repro.configs import get_smoke
+
+        self._roundtrip(dataclasses.replace(get_smoke("gemma2-9b"), kv_cache_dtype="int8"), seed=5)
+
+    def test_gemma2_int8_chunked_prefill_serves(self):
+        """Chunked int8 prefill serves end-to-end.  NOTE: token-for-token
+        equality with chunk=1 is NOT asserted — int8 quantisation amplifies
+        benign reduction-order noise into flipped cache bins in later
+        layers, so a greedy rollout can legitimately diverge (bounded-
+        divergence + argmax equality is pinned at the prefill level in
+        TestPagedPrefill); only decode itself is bitwise."""
+        from repro.configs import get_smoke
+        from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine
+
+        cfg = dataclasses.replace(get_smoke("gemma2-9b"), kv_cache_dtype="int8")
+        params = zoo.init_params(jax.random.PRNGKey(9), cfg)
+        rng = np.random.default_rng(9)
+        prompts = [rng.integers(1, cfg.vocab, size=12).tolist() for _ in range(3)]
+        chunked = ContinuousServeEngine(
+            cfg, params, ContinuousServeConfig(slots=2, max_len=64, page_size=4, prefill_chunk=5)
+        )
+        outs = chunked.generate(prompts, max_new_tokens=6)
+        assert all(len(o) == 6 for o in outs)
+        assert all(0 <= t < cfg.vocab for o in outs for t in o)
+
+    def test_hymba_family_serves(self):
+        from repro.configs import get_smoke
+
+        self._roundtrip(get_smoke("hymba-1.5b"), seed=6)
+
+    def test_hymba_mixed_lengths_interleaved_prefill_decode(self):
+        """Regression: decode ticks must not advance the SSM state of slots
+        whose request is still mid-prefill (K/V writes are trash-routed for
+        idle rows; the recurrent state needs an explicit liveness mask).
+        Mixed prompt/generation lengths force prefill and decode to
+        interleave, which equal-length batches never do."""
+        from repro.configs import get_smoke
+        from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine
+
+        cfg = get_smoke("hymba-1.5b")
+        params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        lens = [4, 14, 6, 12]
+        news = [12, 4, 10, 6]
+        prompts = [rng.integers(1, cfg.vocab, size=n).tolist() for n in lens]
+        base = ServeEngine(cfg, params, ServeConfig(slots=1, max_len=64))
+        want = [base.generate([p], max_new_tokens=n)[0] for p, n in zip(prompts, news)]
+        eng = ContinuousServeEngine(
+            cfg, params, ContinuousServeConfig(slots=2, max_len=64, page_size=4, prefill_chunk=2)
+        )
+        got = [eng.submit(p, max_new_tokens=n) for p, n in zip(prompts, news)]
+        eng.run_until_complete()
+        assert [r.generated for r in got] == want
+
+    def test_prefill_chunk_exceeding_ring_capacity_rejected(self):
+        """A chunk longer than the ring capacity would scatter colliding
+        indices in one .at[].set (unspecified resolution order) — rejected
+        up front."""
+        from repro.configs import get_smoke
+        from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine
+
+        cfg = get_smoke("gemma2-9b")  # window 16; page 4 -> ring capacity 20
+        params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="ring capacity"):
+            ContinuousServeEngine(
+                cfg, params, ContinuousServeConfig(slots=2, max_len=64, page_size=4, prefill_chunk=24)
+            )
+
+    def test_ring_decode_window_multi_step(self):
+        """Multi-step decode windows on a ring config: the lookahead-aware
+        ring budget keeps recycled pages out of the live window."""
+        from repro.configs import get_smoke
+        from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine
+
+        cfg = get_smoke("hymba-1.5b")
+        params = zoo.init_params(jax.random.PRNGKey(7), cfg)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(1, cfg.vocab, size=10).tolist() for _ in range(3)]
+        one = ContinuousServeEngine(
+            cfg, params, ContinuousServeConfig(slots=2, max_len=64, page_size=4, prefill_chunk=4)
+        )
+        want = one.generate(prompts, max_new_tokens=7)
+        win = ContinuousServeEngine(
+            cfg, params,
+            ContinuousServeConfig(slots=2, max_len=64, page_size=4, prefill_chunk=4, decode_window=3),
+        )
+        assert win.generate(prompts, max_new_tokens=7) == want
+
+    def test_ring_cache_memory_scales_with_window(self):
+        """The acceptance bench in miniature: ring pool bytes are flat in
+        max_len and the all-ring cache is far smaller than a full cache."""
+        from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine
+
+        cfg = tiny_cfg(attention_pattern=("sliding",), window=8)
+        params = zoo.init_params(jax.random.PRNGKey(8), cfg)
+        sizes = {}
+        for max_len in (64, 256):
+            eng = ContinuousServeEngine(
+                cfg, params, ContinuousServeConfig(slots=2, max_len=max_len, page_size=4, prefill_chunk=8)
+            )
+            sizes[max_len] = eng.pools.bytes()
+        assert sizes[64] == sizes[256]  # window-bound, not max_len-bound
+        # same shapes, full attention: the params tree is pattern-agnostic
+        full = ContinuousServeEngine(
+            tiny_cfg(), params, ContinuousServeConfig(slots=2, max_len=256, page_size=4)
+        )
+        assert sizes[256] < full.pools.bytes() / 4
