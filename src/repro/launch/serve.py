@@ -1,12 +1,13 @@
-"""Serving launcher: batched greedy generation with the DynaTran runtime
-accuracy/throughput knob.
+"""Serving launcher: batched generation with per-request sampling and the
+DynaTran runtime accuracy/throughput knob.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --prompts 4 --max-new 16 [--target-rho 0.5]
+        --prompts 4 --max-new 16 [--target-rho 0.5] [--temperature 0.8 --top-k 40]
 
-    # token-granularity continuous batching over the paged KV cache:
+    # token-granularity continuous batching over the paged KV cache, with
+    # shared-prefix page caching and token streaming:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --continuous --prompts 16 --max-new 32 --adaptive-rho
+        --continuous --prompts 16 --max-new 32 --adaptive-rho --stream
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ import numpy as np
 from repro import configs
 from repro.models import zoo
 from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine
+from repro.serve.sampling import SamplingParams
 
 
 def main() -> None:
@@ -30,11 +32,17 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--target-rho", type=float, default=None, help="DynaTran runtime sparsity knob")
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0, help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0, help="top-k filter (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0, help="nucleus filter (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0, help="sampling seed (per-request streams are keyed on it)")
     ap.add_argument("--continuous", action="store_true", help="paged-KV continuous batching engine")
+    ap.add_argument("--stream", action="store_true", help="[continuous] stream the first request's tokens as they decode")
     ap.add_argument("--slots", type=int, default=8, help="[continuous] decode batch width")
     ap.add_argument("--page-size", type=int, default=16, help="[continuous] tokens per KV page")
     ap.add_argument("--prefill-chunk", type=int, default=16, help="[continuous] prompt tokens per prefill call")
     ap.add_argument("--adaptive-rho", action="store_true", help="[continuous] close the rho loop over queue depth")
+    ap.add_argument("--no-prefix-cache", action="store_true", help="[continuous] disable shared-prefix page caching")
     ap.add_argument("--kv-cache", default=None, choices=["bfloat16", "int8"], help="KV cache dtype override")
     args = ap.parse_args()
 
@@ -46,6 +54,10 @@ def main() -> None:
 
         cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_cache)
     params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    sampling = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.seed, max_new_tokens=args.max_new,
+    )
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab, size=args.prompt_len).tolist() for _ in range(args.prompts)]
@@ -59,21 +71,33 @@ def main() -> None:
                 max_len=args.max_len,
                 page_size=args.page_size,
                 prefill_chunk=args.prefill_chunk,
+                prefix_caching=not args.no_prefix_cache,
                 target_rho=args.target_rho,
                 adaptive_rho=args.adaptive_rho,
             ),
         )
-        outs = engine.generate(prompts, max_new_tokens=args.max_new)
+        handles = [engine.submit(p, sampling=sampling) for p in prompts]
+        if args.stream:
+            print("[serve] streaming request 0: ", end="", flush=True)
+            for tok in handles[0].tokens():
+                print(tok, end=" ", flush=True)
+            print()
+        engine.run_until_complete()
+        outs = [h.generated for h in handles]
         dt = time.perf_counter() - t0
         m = engine.metrics()
-        print(
+        line = (
             f"[serve] continuous: {m['tokens']} tokens in {dt:.2f}s -> {m['tokens']/dt:.1f} tok/s | "
             f"p50 {m['p50_latency_s']:.3f}s p99 {m['p99_latency_s']:.3f}s | "
             f"evictions {m['evictions']} rho {m['rho']:.2f}"
         )
+        if m["prefix_cache"] is not None:
+            pc = m["prefix_cache"]
+            line += f" | prefix hit rate {pc['hit_rate']:.2f} ({pc['pages_shared']} page links shared)"
+        print(line)
     else:
         engine = ServeEngine(cfg, params, ServeConfig(slots=args.prompts, max_len=args.max_len, target_rho=args.target_rho))
-        outs = engine.generate(prompts, max_new_tokens=args.max_new)
+        outs = engine.generate(prompts, sampling=sampling)
         dt = time.perf_counter() - t0
         toks = sum(len(o) for o in outs)
         print(f"[serve] {args.prompts} prompts x {args.max_new} new tokens in {dt:.2f}s -> {toks/dt:.1f} tok/s")

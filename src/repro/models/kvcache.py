@@ -11,11 +11,13 @@ Sharding: T (sequence) shards over "data" when batch is too small to fill it
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import deque
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -89,12 +91,19 @@ TRASH_PAGE = 0  # reserved scratch page: masked-out rows scatter here
 
 
 class PageAllocator:
-    """Host-side free-list allocator over a fixed pool of KV pages.
+    """Host-side free-list allocator over a fixed pool of KV pages, with
+    per-page REFCOUNTS so sequences can share read-only prefix pages.
 
     Page ``TRASH_PAGE`` (index 0) is reserved as a write sink for inactive
     batch rows, so a jitted decode step can always run full-width: rows with
     no live sequence point their whole page table at the trash page and their
     writes land there harmlessly.
+
+    A page's refcount is the number of links to it: one per sequence table
+    entry (``alloc``/``share``) plus one if the prefix cache retains it
+    (``retain``).  A page returns to the free list only when its last link
+    drops.  Writers must hold the ONLY link (refcount 1) — the scheduler
+    enforces this by forking shared pages copy-on-write before any write.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -102,47 +111,238 @@ class PageAllocator:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         self.num_pages = num_pages
         self.page_size = page_size
-        # deque: alloc pops the hot end, release prepends to the cold end —
-        # both O(1) on the per-token ring-recycle path
+        # deque: alloc pops the hot end, freed pages prepend to the cold end —
+        # both O(1) on the per-token ring-recycle path, and a release/alloc
+        # pair never degenerates to an identity swap
         self._free: deque[int] = deque(range(num_pages - 1, TRASH_PAGE, -1))
-        self._owned: dict[int, list[int]] = {}  # seq id -> pages, in order
+        self._owned: dict[int, list[int]] = {}  # seq id -> page links, in order
+        self._ref: dict[int, int] = {}  # page -> live link count
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    @property
+    def allocated(self) -> set[int]:
+        """Pages with at least one live link (invariant: disjoint from the
+        free list, together they tile pages 1..num_pages-1)."""
+        return set(self._ref)
+
+    @property
+    def total_refs(self) -> int:
+        return sum(self._ref.values())
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def pages_for(self, tokens: int) -> int:
         """Pages needed to hold ``tokens`` cache entries."""
         return -(-tokens // self.page_size)
 
     def alloc(self, seq_id: int, n: int = 1) -> list[int] | None:
-        """Append ``n`` pages to ``seq_id``'s table; None (no-op) if the pool
-        cannot satisfy the request."""
+        """Append ``n`` fresh pages (refcount 1) to ``seq_id``'s table; None
+        (no-op) if the pool cannot satisfy the request."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
         self._owned.setdefault(seq_id, []).extend(pages)
         return pages
+
+    def share(self, seq_id: int, pages: list[int]) -> None:
+        """Link already-allocated ``pages`` into ``seq_id``'s table,
+        bumping each refcount — the shared-prefix admission path.  The new
+        owner must treat them as read-only until forked."""
+        for p in pages:
+            if p not in self._ref:
+                raise ValueError(f"cannot share unallocated page {p}")
+            self._ref[p] += 1
+        self._owned.setdefault(seq_id, []).extend(pages)
+
+    def retain(self, page: int) -> None:
+        """Add an anonymous link (the prefix cache's retention ref)."""
+        if page not in self._ref:
+            raise ValueError(f"cannot retain unallocated page {page}")
+        self._ref[page] += 1
+
+    def drop(self, page: int) -> bool:
+        """Drop an anonymous link; True if the page went back to the free
+        list (no sequence links it either)."""
+        return self._decref(page)
+
+    def _decref(self, page: int, *, hot: bool = False) -> bool:
+        """Drop one link; at zero the page joins the free list — the COLD
+        end by default (ring recycling and COW forks must rotate through
+        the pool), the HOT end for whole-sequence frees (a finished
+        request's pages are the natural ones to hand out next)."""
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            del self._ref[page]
+            if hot:
+                self._free.append(page)
+            else:
+                self._free.appendleft(page)
+            return True
+        return False
 
     def owned(self, seq_id: int) -> list[int]:
         return list(self._owned.get(seq_id, ()))
 
     def free(self, seq_id: int) -> int:
-        """Release all pages of ``seq_id`` back to the free list."""
+        """Drop all of ``seq_id``'s links; pages with no remaining link
+        (not shared, not cache-retained) return to the free list (hot end:
+        they are reused first)."""
         pages = self._owned.pop(seq_id, [])
-        self._free.extend(reversed(pages))
+        for p in reversed(pages):
+            self._decref(p, hot=True)
         return len(pages)
 
     def release(self, seq_id: int, page: int) -> None:
-        """Return ONE page owned by ``seq_id`` to the free list — the ring
-        recycling path: the scheduler releases the page that slid fully out
-        of the window before linking a fresh one into the table slot.  The
-        page joins the COLD end of the free list (``alloc`` pops the hot
-        end), so the immediately following re-link picks a different page
-        and pages genuinely rotate through the pool instead of the
-        release/alloc pair degenerating to an identity swap."""
+        """Drop ONE of ``seq_id``'s links — the ring recycling path (the
+        page that slid fully out of the window) and the copy-on-write fork
+        path (the writer's link on a still-shared page).  A page whose last
+        link drops joins the COLD end of the free list (``alloc`` pops the
+        hot end), so pages genuinely rotate through the pool."""
         self._owned[seq_id].remove(page)
-        self._free.appendleft(page)
+        self._decref(page)
+
+
+class PrefixCache:
+    """Hash-of-prefix → page-chain cache over one ``PageAllocator``: requests
+    whose prompts share a page-aligned token prefix link the SAME physical
+    pages instead of re-allocating and re-prefilling them.
+
+    Only **full-attention** pages are shareable: a full page's K/V at
+    positions ``[i*P, (i+1)*P)`` is a pure function of the token prefix (for
+    bf16 AND int8 pools — quantisation is per-position), so any request with
+    the same prefix reads bit-identical values through it.  Ring pages are
+    per-sequence (their content depends on the sequence's own write cursor)
+    and SSM side-state is per-slot recurrent state; neither is cacheable, so
+    the engine enables this cache only for all-"full" layouts without SSM
+    state.  K/V also depend on the DynaTran taus: the engine disables the
+    cache under ADAPTIVE rho (pages filled at one rho must not serve a
+    request arriving at another); a fixed rho keeps taus constant, so
+    sharing stays exact there.
+
+    Entries form chains: the key for an ``i``-page prefix is a digest folded
+    over the previous key and the page's tokens, inserts extend contiguously
+    from the root, and reclaim drops LEAF entries only (LRU order) — so a
+    cache hit is always a contiguous prefix walk.  Each cached page holds one
+    retention ref in the allocator; pages shared with live sequences survive
+    a reclaim (the entry is dropped, the page stays until its owners finish).
+    """
+
+    def __init__(self, alloc: PageAllocator):
+        self.alloc = alloc
+        self.page_size = alloc.page_size
+        self._page: dict[bytes, int] = {}  # key -> page id
+        self._parent: dict[bytes, bytes | None] = {}
+        self._children: dict[bytes, int] = {}  # key -> cached child count
+        self._stamp: dict[bytes, int] = {}  # key -> last-use tick (LRU)
+        self._tick = 0
+        # metrics, counted by the scheduler per successful admission (an
+        # admission blocked on pages retries its lookup every tick — those
+        # retries must not inflate the hit rate)
+        self.lookups = 0
+        self.hits = 0  # admissions that linked >= 1 cached page
+        self.pages_shared = 0  # cumulative page links served (pages saved)
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self._page)
+
+    def chain_keys(self, tokens: list[int]) -> list[bytes]:
+        """One digest per COMPLETE page of ``tokens``, each folded over its
+        parent — chains collide only when the whole prefix matches.  Pure
+        in ``tokens``: callers with an immutable prompt (the scheduler)
+        memoize the result so admission retries don't re-hash."""
+        keys, prev = [], b"prefix-root"
+        p = self.page_size
+        for i in range(len(tokens) // p):
+            h = hashlib.blake2b(prev, digest_size=16)
+            h.update(np.asarray(tokens[i * p : (i + 1) * p], np.int64).tobytes())
+            prev = h.digest()
+            keys.append(prev)
+        return keys
+
+    def lookup(self, tokens: list[int]) -> list[int]:
+        """Longest cached page chain for this prompt (possibly empty).  The
+        caller links the returned pages via ``alloc.share``."""
+        return self.lookup_keys(self.chain_keys(tokens))
+
+    def lookup_keys(self, keys: list[bytes]) -> list[int]:
+        """``lookup`` over precomputed ``chain_keys`` (the memoized path)."""
+        self._tick += 1
+        pages = []
+        for key in keys:
+            page = self._page.get(key)
+            if page is None:
+                break
+            self._stamp[key] = self._tick
+            pages.append(page)
+        return pages
+
+    def insert(self, tokens: list[int], pages: list[int]) -> int:
+        """Register ``pages`` (the owner's full-kind table, prefill complete)
+        as this prompt's page chain; existing entries are kept (first writer
+        wins — contents are identical by construction).  Returns the number
+        of newly cached pages."""
+        self._tick += 1
+        added = 0
+        parent: bytes | None = None
+        for i, key in enumerate(self.chain_keys(tokens)):
+            if i >= len(pages):
+                break
+            if key in self._page:
+                parent = key
+                continue
+            self._page[key] = pages[i]
+            self._parent[key] = parent
+            self._children[key] = 0
+            self._stamp[key] = self._tick
+            if parent is not None:
+                self._children[parent] += 1
+            self.alloc.retain(pages[i])
+            parent = key
+            added += 1
+        return added
+
+    def _drop_entry(self, key: bytes) -> None:
+        page = self._page.pop(key)
+        parent = self._parent.pop(key)
+        del self._children[key]
+        del self._stamp[key]
+        if parent is not None:
+            self._children[parent] -= 1
+        self.alloc.drop(page)
+
+    def reclaim(self) -> bool:
+        """Drop the least-recently-used LEAF entry (no cached children — so
+        chains stay contiguous).  Returns False when the cache is empty.
+        The page only reaches the free list if no live sequence shares it,
+        so a caller looping ``reclaim()`` under allocation pressure may need
+        several drops before a page actually frees."""
+        leaves = [k for k, n in self._children.items() if n == 0]
+        if not leaves:
+            return False
+        self._drop_entry(min(leaves, key=lambda k: self._stamp[k]))
+        return True
+
+    def drop_all(self) -> None:
+        """Drop every entry (engine shutdown): releases all retention refs
+        so the allocator can drain to empty once live requests finish."""
+        while self.reclaim():
+            pass
+
+    def stats(self) -> dict:
+        return {
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "hit_rate": self.hits / self.lookups if self.lookups else 0.0,
+            "pages_shared": self.pages_shared,
+            "cached_pages": self.cached_pages,
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -361,6 +561,24 @@ def scatter_chunk_ring(pool: Array, page_table: Array, start: Array, new: Array,
     page = jnp.take_along_axis(page_table, off // p, axis=1)
     page = jnp.where(valid, page, pool.shape[0])  # padding -> dropped
     return pool.at[page, off % p].set(new.astype(pool.dtype), mode="drop")
+
+
+def copy_pool_pages(pool: Array, src: Array, dst: Array) -> Array:
+    """Copy whole pages ``src[i] -> dst[i]`` within one pool
+    [n_cycles, num_pages, P, *rest] — the copy-on-write fork: a sequence
+    about to write a page whose refcount is > 1 gets a private duplicate
+    first, so the write can never mutate a page visible to another sequence
+    (or to the prefix cache).  Padding pairs (0, 0) copy the trash page onto
+    itself, harmlessly, which lets callers bucket ``src``/``dst`` lengths to
+    bound retracing."""
+    return pool.at[:, dst].set(pool[:, src])
+
+
+def entry_copy_pages(entry, src: Array, dst: Array):
+    if isinstance(entry, dict):
+        return {"q": copy_pool_pages(entry["q"], src, dst),
+                "scale": copy_pool_pages(entry["scale"], src, dst)}
+    return copy_pool_pages(entry, src, dst)
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ from .kvcache import (
     DecodeState,
     PagedKV,
     PagedLayout,
+    entry_copy_pages,
     entry_gather,
     entry_gather_ring,
     entry_scatter_chunk,
@@ -432,6 +433,19 @@ def init_paged_ssm(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
         )
         for i in range(cfg.pattern_len)
     }
+
+
+def paged_copy_pages(layout: PagedLayout, pools: PagedKV, kind: str, src: Array, dst: Array) -> PagedKV:
+    """Copy pages ``src[i] -> dst[i]`` in every pool of ``kind`` (all pattern
+    slots, all cycles, K and V, int8 scale pools included) — the device half
+    of the scheduler's copy-on-write fork."""
+    k, v = dict(pools.k), dict(pools.v)
+    for i, slot_kind in enumerate(layout.slot_kinds):
+        if slot_kind != kind:
+            continue
+        k[str(i)] = entry_copy_pages(k[str(i)], src, dst)
+        v[str(i)] = entry_copy_pages(v[str(i)], src, dst)
+    return PagedKV(k=k, v=v)
 
 
 def _ring_ctx_positions(start_len: Array, capacity: int) -> Array:

@@ -1,2 +1,3 @@
 from .engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine  # noqa: F401
+from .sampling import SamplingParams, sample_tokens  # noqa: F401
 from .scheduler import ContinuousScheduler, Request, RhoController, summarize  # noqa: F401

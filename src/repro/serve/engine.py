@@ -7,11 +7,16 @@ batching at slot granularity: finished rows are replaced between
 ``generate`` calls only).
 
 `ContinuousServeEngine` rebuilds that loop around a block-paged KV cache
-(`repro.models.kvcache`): sequences are admitted and evicted every step,
-prefill chunks interleave with decode batches, and a `RhoController` closes
-DynaTran's accuracy/throughput knob over queue depth.  Thresholds are
-passed into the jitted step as runtime scalars, so rho changes never
-recompile (paper Fig. 19's dynamic adjustment).
+(`repro.models.kvcache`) and a request lifecycle: ``submit()`` takes
+per-request `SamplingParams` and returns a handle that streams tokens
+(``req.tokens()``) and cancels (``req.cancel()``); sequences are admitted
+and evicted every step, prefill chunks interleave with decode batches,
+requests sharing a page-aligned prompt prefix link the same physical pages
+through a refcounted prefix cache (copy-on-write on any shared write), and
+a `RhoController` closes DynaTran's accuracy/throughput knob over queue
+depth.  Sampling knobs, like the DynaTran thresholds, enter the jitted
+step as runtime per-row scalars — changing a request's temperature /
+top-k / top-p / seed never recompiles.
 """
 from __future__ import annotations
 
@@ -27,15 +32,33 @@ from repro.configs.base import ModelConfig
 from repro.core.dynatran import SparsityConfig, ThresholdCalculator
 from repro.models import transformer as tfm
 from repro.models import zoo
-from repro.models.kvcache import PageAllocator
+from repro.models.kvcache import PageAllocator, PrefixCache
+from repro.serve.sampling import SamplingParams, fill_row, sample_tokens, sampling_tensors
 from repro.serve.scheduler import ContinuousScheduler, Request, RhoController, summarize
+
+
+def _resolve_params(
+    sampling: Optional[SamplingParams],
+    max_new_tokens: Optional[int],
+    eos_id: Optional[int],
+    default_temperature: float = 0.0,
+) -> SamplingParams:
+    """Merge the modern ``SamplingParams`` argument with the legacy
+    ``max_new_tokens``/``eos_id`` aliases: an explicit alias wins over the
+    params' field, and a non-negative ``eos_id`` joins the stop set."""
+    sp = sampling if sampling is not None else SamplingParams(temperature=default_temperature)
+    if max_new_tokens is not None:
+        sp = dataclasses.replace(sp, max_new_tokens=max_new_tokens)
+    if eos_id is not None and eos_id >= 0:
+        sp = sp.with_stop(eos_id)
+    return sp
 
 
 @dataclasses.dataclass
 class ServeConfig:
     slots: int = 8  # concurrent sequences
     max_len: int = 512
-    temperature: float = 0.0  # 0 = greedy
+    temperature: float = 0.0  # default SamplingParams temperature (0 = greedy)
     target_rho: Optional[float] = None  # runtime DynaTran knob (overrides cfg)
 
 
@@ -51,7 +74,8 @@ class ServeEngine:
         self.taus = calculator.taus(sp) if sp.mode == "dynatran" else None
 
         self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(0,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(0,), static_argnames=("sample",))
+        self._sample = jax.jit(sample_tokens)
 
     # --- jitted bodies ----------------------------------------------------
     def _prefill_impl(self, params, state, tokens, lengths):
@@ -60,7 +84,14 @@ class ServeEngine:
         would be slow; instead we run forward for logits and then batch-write
         K/V via a scan of decode steps only for cache construction when the
         model family needs it).  For simplicity and exactness the engine
-        replays decode steps; prompt lengths are padded to the max."""
+        replays decode steps; prompt lengths are padded to the max.
+
+        Returns each row's logits at ITS OWN last prompt position (the scan
+        has cached exactly that row's real tokens at that point), so a short
+        row's first token is exact even in a ragged batch.  Later positions
+        do write pad K/V into the slot-dense cache, which biases subsequent
+        decode attention for short rows — an inherent slot-granularity
+        limitation; ragged workloads belong on the continuous engine."""
         def step(carry, t):
             st = carry
             tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
@@ -68,20 +99,37 @@ class ServeEngine:
             return st, logits
 
         state, logits = jax.lax.scan(step, state, jnp.arange(tokens.shape[1]))
-        return state, logits[-1]
+        last = logits[lengths - 1, jnp.arange(tokens.shape[0])]  # [B, V]
+        return state, last
 
-    def _decode_impl(self, state, tokens):
+    def _decode_impl(self, state, tokens, temps, top_ks, top_ps, seeds, steps, *, sample: bool):
         logits, state = zoo.decode_step(self.params, self.cfg, state, tokens, taus=self.taus)
-        if self.scfg.temperature > 0:
-            # deterministic fallback: temperature sampling needs a key; engine
-            # uses greedy for reproducibility unless sampled externally
-            pass
-        next_tok = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
+        sliced = logits[..., : self.cfg.vocab]
+        if sample:  # shared keyed sampler (serve/sampling.py)
+            next_tok = sample_tokens(sliced, temps, top_ks, top_ps, seeds, steps)
+        else:  # pure argmax path: bitwise-identical to the original engine
+            next_tok = jnp.argmax(sliced, axis=-1).astype(jnp.int32)
         return state, next_tok, logits
 
     # --- public API ---------------------------------------------------------
-    def generate(self, prompts: list[list[int]], max_new_tokens: int = 32, eos_id: int = -1) -> list[list[int]]:
-        """Greedy-generate for a batch of prompts (token-id lists)."""
+    def generate(
+        self,
+        prompts: list[list[int]],
+        max_new_tokens: Optional[int] = None,
+        eos_id: int = -1,
+        sampling: Optional[SamplingParams] = None,
+    ) -> list[list[int]]:
+        """Generate for a batch of prompts (token-id lists).  ``sampling``
+        applies to every row (per-request policies need the continuous
+        engine); when omitted, ``scfg.temperature`` sets the default and
+        decoding is greedy at 0.  An explicit ``max_new_tokens`` overrides
+        the sampling params'; omitted, ``sampling.max_new_tokens`` (default
+        32) governs."""
+        if max_new_tokens is None and sampling is None:
+            max_new_tokens = 32
+        sp = _resolve_params(sampling, max_new_tokens, eos_id)
+        if sampling is None and self.scfg.temperature > 0:
+            sp = dataclasses.replace(sp, temperature=self.scfg.temperature)
         B = len(prompts)
         assert B <= self.scfg.slots, "more prompts than slots; queue upstream"
         maxp = max(len(p) for p in prompts)
@@ -89,21 +137,38 @@ class ServeEngine:
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
         lengths = np.array([len(p) for p in prompts], np.int32)
+        sample = sp.temperature > 0
+        st = sampling_tensors(B)
+        for i in range(B):
+            fill_row(st, i, sp, 0)
 
         state = zoo.init_decode_state(self.cfg, B, self.scfg.max_len)
         state, last_logits = self._prefill(self.params, state, jnp.asarray(toks), jnp.asarray(lengths))
-        cur = jnp.argmax(last_logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)[:, None]
+        sliced = last_logits[..., : self.cfg.vocab]
+        if sample:
+            cur = self._sample(
+                sliced, st["temps"], st["top_ks"], st["top_ps"], st["seeds"], st["steps"]
+            )[:, None]
+        else:
+            cur = jnp.argmax(sliced, axis=-1).astype(jnp.int32)[:, None]
         outs = [cur]
-        for _ in range(max_new_tokens - 1):
-            state, nxt, _ = self._decode(state, cur)
+        for t in range(1, sp.max_new_tokens):
+            # fresh per call: the CPU backend may alias np buffers zero-copy,
+            # so mutating a previously passed array would race the dispatch
+            steps_t = np.full((B,), t, np.int32)
+            state, nxt, _ = self._decode(
+                state, cur, st["temps"], st["top_ks"], st["top_ps"], st["seeds"],
+                steps_t, sample=sample,
+            )
             cur = nxt[:, None]
             outs.append(cur)
         gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
         result = []
         for i in range(B):
             row = gen[i].tolist()
-            if eos_id >= 0 and eos_id in row:
-                row = row[: row.index(eos_id) + 1]
+            cut = next((j for j, t in enumerate(row) if t in sp.stop), None)
+            if cut is not None:
+                row = row[: cut + 1]  # stop token included, as eos_id was
             result.append(row)
         return result
 
@@ -127,6 +192,11 @@ class ContinuousServeConfig:
     # waste at most W-1 row-steps (their surplus tokens are discarded).
     decode_window: int = 1
     use_pallas: bool = False  # fused paged-attention kernel (interpret mode on CPU)
+    # refcounted shared-prefix page cache.  Auto-disabled when the layout
+    # has non-shareable state: ring pages (content depends on the sequence's
+    # own write cursor) and hybrid SSM side-state are per-sequence; only
+    # all-"full" attention layouts (bf16 or int8 pools) share prefixes.
+    prefix_caching: bool = True
     target_rho: Optional[float] = None  # fixed DynaTran knob when not adaptive
     adaptive_rho: bool = False  # close the rho loop over queue depth
     rho_min: float = 0.0
@@ -145,10 +215,20 @@ class ContinuousServeEngine:
     int8 + scale pools, and hybrid models carry their SSM side-state per
     slot — the full transformer model zoo serves through this engine.
 
-    At ``target_rho == 0`` (or sparsity mode "none") decode logits are
-    bitwise-identical to the dense-KV `ServeEngine` path — the paged read
-    reproduces the dense cache's values in the dense cache's order and
-    masks exactly the positions the dense read masks.
+    Request lifecycle: ``submit()`` carries per-request ``SamplingParams``
+    and returns a handle; ``handle.tokens()`` streams tokens as engine
+    steps emit them, ``handle.cancel()`` releases the request's pages
+    immediately.  On all-full-attention layouts, prompts sharing a
+    page-aligned prefix link the same physical pages (refcounted,
+    copy-on-write) — see ``metrics()['prefix_cache']``.
+
+    At ``target_rho == 0`` (or sparsity mode "none") with greedy requests,
+    decode logits are bitwise-identical to the dense-KV `ServeEngine` path —
+    the paged read reproduces the dense cache's values in the dense cache's
+    order and masks exactly the positions the dense read masks.  Prefix
+    sharing preserves this: a full page's K/V is a pure per-position
+    function of the token prefix, so shared pages hold exactly the bits the
+    request's own prefill would have written.
     """
 
     def __init__(
@@ -176,7 +256,22 @@ class ContinuousServeEngine:
             configured = scfg.num_pages if kind == "full" else scfg.num_pages_ring
             num_pages[kind] = configured or scfg.slots * self.budgets[kind] + 1
         self.allocators = {k: PageAllocator(num_pages[k], scfg.page_size) for k in self.layout.kinds}
-        self.sched = ContinuousScheduler(scfg.slots, self.allocators, self.budgets, scfg.max_len)
+        # prefix sharing needs every page to be a pure function of the token
+        # prefix: all-"full" layouts only, no per-slot SSM side-state, and no
+        # ADAPTIVE rho — K/V depend on the DynaTran taus, so pages filled at
+        # one rho must not be linked by a request arriving at another (a
+        # FIXED rho keeps taus constant for the engine's lifetime, which
+        # keeps cached pages consistent)
+        self.prefix_caching = bool(
+            scfg.prefix_caching
+            and self.layout.kinds == ("full",)
+            and not cfg.ssm_state
+            and not (cfg.sparsity.mode == "dynatran" and scfg.adaptive_rho)
+        )
+        self.prefix_cache = PrefixCache(self.allocators["full"]) if self.prefix_caching else None
+        self.sched = ContinuousScheduler(
+            scfg.slots, self.allocators, self.budgets, scfg.max_len, prefix_cache=self.prefix_cache
+        )
         self.pools = tfm.init_paged_state(cfg, self.layout, num_pages)
         self.ssm = tfm.init_paged_ssm(cfg, scfg.slots)
 
@@ -199,38 +294,60 @@ class ContinuousServeEngine:
         self._fixed_rho = float(base_rho)
         self.current_rho = self._fixed_rho if self._dynatran else 0.0
 
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(0, 1))
-        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0, 1))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(0, 1), static_argnames=("sample",))
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0, 1), static_argnames=("sample",))
+        self._copy = jax.jit(self._copy_impl, donate_argnums=(0,))
         self._rid = 0
         self._tick = 0
+        self._peak_pages_in_use = 0
         self.requests: list[Request] = []
 
     # --- jitted bodies ----------------------------------------------------
-    def _decode_impl(self, pools, ssm, tables, lengths, tokens, live, taus):
+    def _decode_impl(
+        self, pools, ssm, tables, lengths, tokens, live, taus,
+        temps, top_ks, top_ps, seeds, steps, *, sample: bool,
+    ):
         """Scan ``decode_window`` steps per host round-trip; returns the
-        window's tokens [W, B]."""
+        window's tokens [W, B].  Sampling knobs are runtime per-row tensors
+        (``steps`` advances inside the scan so every window token draws a
+        fresh key); ``sample`` is a static flag so all-greedy batches keep
+        the pure argmax path."""
 
         def body(carry, _):
-            pools, ssm, lengths, toks = carry
+            pools, ssm, lengths, toks, stp = carry
             logits, pools, ssm = tfm.paged_decode_step(
                 self.params, self.cfg, self.layout, pools, tables, lengths, toks,
                 ssm=ssm, live=live, taus=taus, use_pallas=self.scfg.use_pallas,
             )
-            nxt = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
-            return (pools, ssm, lengths + 1, nxt[:, None]), nxt
+            sliced = logits[..., : self.cfg.vocab]
+            if sample:
+                nxt = sample_tokens(sliced, temps, top_ks, top_ps, seeds, stp)
+            else:
+                nxt = jnp.argmax(sliced, axis=-1).astype(jnp.int32)
+            return (pools, ssm, lengths + 1, nxt[:, None], stp + 1), nxt
 
-        (pools, ssm, _, _), toks = jax.lax.scan(
-            body, (pools, ssm, lengths, tokens), None, length=self.scfg.decode_window
+        (pools, ssm, _, _, _), toks = jax.lax.scan(
+            body, (pools, ssm, lengths, tokens, steps), None, length=self.scfg.decode_window
         )
         return pools, ssm, toks
 
-    def _prefill_impl(self, pools, ssm, tables, start, tokens, n_valid, fresh, taus):
+    def _prefill_impl(
+        self, pools, ssm, tables, start, tokens, n_valid, fresh, taus,
+        temps, top_ks, top_ps, seeds, *, sample: bool,
+    ):
         logits, pools, ssm = tfm.paged_prefill_chunk(
             self.params, self.cfg, self.layout, pools, tables, start, tokens, n_valid,
             ssm=ssm, fresh=fresh, taus=taus,
         )
-        next_tok = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1).astype(jnp.int32)
+        sliced = logits[..., : self.cfg.vocab]
+        if sample:  # a request's FIRST token is sampled at step index 0
+            next_tok = sample_tokens(sliced, temps, top_ks, top_ps, seeds, jnp.zeros_like(start))
+        else:
+            next_tok = jnp.argmax(sliced, axis=-1).astype(jnp.int32)
         return pools, ssm, next_tok
+
+    def _copy_impl(self, pools, src, dst):
+        return tfm.paged_copy_pages(self.layout, pools, "full", src, dst)
 
     # --- runtime DynaTran knob -------------------------------------------
     def _current_taus(self) -> Optional[dict]:
@@ -248,25 +365,44 @@ class ContinuousServeEngine:
     def submit(
         self,
         prompt: list[int],
-        max_new_tokens: int = 32,
-        eos_id: int = -1,
+        max_new_tokens: Optional[int] = None,
+        eos_id: Optional[int] = None,
         slo_s: Optional[float] = None,
+        sampling: Optional[SamplingParams] = None,
     ) -> Request:
+        """Queue one request and return its handle.  ``sampling`` carries
+        the per-request decode policy; the legacy ``max_new_tokens`` /
+        ``eos_id`` aliases override/extend it when passed.  The handle
+        streams (``.tokens()``) and cancels (``.cancel()``)."""
         assert prompt, "empty prompt"
         req = Request(
-            rid=self._rid, prompt=list(prompt), max_new_tokens=max_new_tokens,
-            eos_id=eos_id, slo_s=slo_s, submit_time=time.perf_counter(),
+            rid=self._rid, prompt=list(prompt), slo_s=slo_s,
+            submit_time=time.perf_counter(),
+            params=_resolve_params(sampling, max_new_tokens, eos_id),
+            _engine=self,
         )
         self._rid += 1
         self.sched.submit(req)
         self.requests.append(req)
         return req
 
+    def cancel(self, req: Request) -> None:
+        """Cancel ``req`` wherever it is in its lifecycle — queued, mid-
+        prefill, decoding, or evicted — releasing its slot and page links
+        immediately (shared prefix pages survive for their other owners and
+        the cache).  Idempotent; finished requests are left untouched."""
+        if req.done:
+            return
+        req.cancelled = True
+        self.sched.cancel(req)
+        req.finish_time = time.perf_counter()
+
     def step(self) -> list[Request]:
         """One engine tick: admissions, then one batched prefill chunk (all
         admitted prompts at once) OR one decode batch (alternating when
         both are pending).  Returns newly finished requests."""
         self._tick += 1
+        self._drain_copies()  # forks queued since the last jitted call
         self.sched.admit_ready()
         taus = self._current_taus()
         prefill_reqs = self.sched.prefill_candidates()
@@ -276,6 +412,8 @@ class ContinuousServeEngine:
             finished += self._prefill_step(prefill_reqs, taus)
         elif ready:
             finished += self._decode_step(ready, taus)
+        in_use = sum(a.num_pages - 1 - a.free_pages for a in self.allocators.values())
+        self._peak_pages_in_use = max(self._peak_pages_in_use, in_use)
         return finished
 
     def run_until_complete(self, max_steps: int = 1_000_000) -> list[Request]:
@@ -286,17 +424,36 @@ class ContinuousServeEngine:
             finished += self.step()
         raise RuntimeError("run_until_complete: step budget exhausted")
 
-    def generate(self, prompts: list[list[int]], max_new_tokens: int = 32, eos_id: int = -1) -> list[list[int]]:
+    def generate(
+        self,
+        prompts: list[list[int]],
+        max_new_tokens: Optional[int] = None,
+        eos_id: int = -1,
+        sampling: Optional[SamplingParams] = None,
+    ) -> list[list[int]]:
         """Baseline-compatible API: submit all prompts, run to completion,
-        return generated token lists in submission order."""
-        reqs = [self.submit(p, max_new_tokens, eos_id) for p in prompts]
+        return generated token lists in submission order.  An explicit
+        ``max_new_tokens`` overrides the sampling params'; omitted,
+        ``sampling.max_new_tokens`` (default 32) governs."""
+        if max_new_tokens is None and sampling is None:
+            max_new_tokens = 32
+        reqs = [self.submit(p, max_new_tokens, eos_id, sampling=sampling) for p in prompts]
         self.run_until_complete()
         return [r.generated for r in reqs]
+
+    def drop_prefix_cache(self) -> None:
+        """Drop every prefix-cache retention ref (shutdown / memory drain):
+        once live requests finish, the allocator returns to fully free."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.drop_all()
 
     def metrics(self) -> dict:
         out = summarize(self.requests)
         out["rho"] = self.current_rho
         out["free_pages"] = {k: a.free_pages for k, a in self.allocators.items()}
+        out["pages_in_use"] = {k: a.num_pages - 1 - a.free_pages for k, a in self.allocators.items()}
+        out["peak_pages_in_use"] = self._peak_pages_in_use
+        out["prefix_cache"] = self.prefix_cache.stats() if self.prefix_cache else None
         out["cache_bytes"] = self.pools.bytes()
         out["queue_depth"] = self.sched.queue_depth
         return out
@@ -308,6 +465,24 @@ class ContinuousServeEngine:
         self.requests = [r for r in self.requests if not r.done]
 
     # --- internals --------------------------------------------------------
+    def _drain_copies(self) -> None:
+        """Execute queued copy-on-write page forks (device-side page copies)
+        before the next jitted call touches the pools.  Lengths are padded
+        to a power of two — padding pairs copy the trash page onto itself —
+        so retraces stay logarithmic in fork-burst size."""
+        copies = self.sched.pending_copies
+        if not copies:
+            return
+        self.sched.pending_copies = []
+        n = 1
+        while n < len(copies):
+            n *= 2
+        src = np.zeros((n,), np.int32)
+        dst = np.zeros((n,), np.int32)
+        for i, (s, d) in enumerate(copies):
+            src[i], dst[i] = s, d
+        self.pools = self._copy(self.pools, jnp.asarray(src), jnp.asarray(dst))
+
     def _finish(self, req: Request) -> None:
         req.finish_time = time.perf_counter()
         self.sched.finish(req)
@@ -326,21 +501,30 @@ class ContinuousServeEngine:
 
     def _prefill_step(self, reqs: list[Request], taus) -> list[Request]:
         """One jitted call caches a chunk for EVERY admitted prompt; rows
-        live at their engine slots so hybrid SSM state stays aligned."""
+        live at their engine slots so hybrid SSM state stays aligned.
+        Shared-prefix rows start at their first uncached position."""
         b, c = self.scfg.slots, self.scfg.prefill_chunk
         toks = np.zeros((b, c), np.int32)
         starts = np.zeros((b,), np.int32)
         nv = np.zeros((b,), np.int32)
         fresh = np.zeros((b,), bool)
+        st = sampling_tensors(b)
+        sample = False
         for req in reqs:
             chunk = req.replay[req.prefill_pos : req.prefill_pos + c]
             toks[req.slot, : len(chunk)] = chunk
             starts[req.slot] = req.prefill_pos
             nv[req.slot] = len(chunk)
             fresh[req.slot] = req.prefill_pos == 0
+            if req.prefill_pos + len(chunk) >= len(req.replay) and not req.generated:
+                # this row emits its first token from this call
+                fill_row(st, req.slot, req.params, 0)
+                sample |= req.params.temperature > 0
+        self._drain_copies()
         self.pools, self.ssm, next_tok = self._prefill(
             self.pools, self.ssm, self._tables_for(reqs), jnp.asarray(starts),
             jnp.asarray(toks), jnp.asarray(nv), jnp.asarray(fresh), taus,
+            st["temps"], st["top_ks"], st["top_ps"], st["seeds"], sample=sample,
         )
         finished: list[Request] = []
         for req in reqs:
@@ -350,6 +534,7 @@ class ContinuousServeEngine:
             if req.prefill_pos < len(req.replay):
                 continue
             req.ready = True
+            self.sched.register_prefix(req)  # complete prompt pages -> cache
             if req.generated:  # re-admitted after eviction: resume, don't resample
                 req.pending_token = req.generated[-1]
                 continue
@@ -357,7 +542,7 @@ class ContinuousServeEngine:
             req.generated.append(tok)
             req.pending_token = tok
             req.first_token_time = time.perf_counter()
-            if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
+            if len(req.generated) >= req.max_new_tokens or tok in req.stop_ids:
                 self._finish(req)
                 finished.append(req)
         return finished
@@ -375,13 +560,20 @@ class ContinuousServeEngine:
         lens = np.zeros((b,), np.int32)
         toks = np.zeros((b, 1), np.int32)
         live = np.zeros((b,), bool)
+        st = sampling_tensors(b)
+        sample = False
         for req in rows:
             lens[req.slot] = req.cache_len
             toks[req.slot, 0] = req.pending_token
             live[req.slot] = True
+            fill_row(st, req.slot, req.params, len(req.generated))
+            sample |= req.params.temperature > 0
+        self._drain_copies()
         self.pools, self.ssm, win_tok = self._decode(
             self.pools, self.ssm, self._tables_for(rows), jnp.asarray(lens), jnp.asarray(toks),
             jnp.asarray(live), taus,
+            st["temps"], st["top_ks"], st["top_ps"], st["seeds"], jnp.asarray(st["steps"]),
+            sample=sample,
         )
         win_tok = np.asarray(win_tok)  # [W, B]
         finished = []
@@ -391,7 +583,7 @@ class ContinuousServeEngine:
                 req.cache_len += 1
                 req.generated.append(tok)
                 req.pending_token = tok
-                if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
+                if len(req.generated) >= req.max_new_tokens or tok in req.stop_ids:
                     self._finish(req)
                     finished.append(req)
                     break  # surplus window tokens are discarded

@@ -22,22 +22,31 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from collections import deque
-from typing import Optional
+from typing import Any, Iterator, Optional
 
-from repro.models.kvcache import PageAllocator
+from repro.models.kvcache import PageAllocator, PrefixCache
+from repro.serve.sampling import SamplingParams
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)  # identity semantics: queue membership, handle use
 class Request:
     """One generation request and its lifecycle metrics (times are
-    ``time.perf_counter`` seconds; step counters are engine ticks)."""
+    ``time.perf_counter`` seconds; step counters are engine ticks).
+
+    ``params`` carries the per-request decode policy (temperature / top-k /
+    top-p / seed / stop set / max_new_tokens).  ``max_new_tokens`` and
+    ``eos_id`` are kept as deprecated construction aliases: when ``params``
+    is not given they build one; when it is, ``params`` wins and a
+    non-negative ``eos_id`` is folded into its stop set.
+    """
 
     rid: int
     prompt: list[int]
-    max_new_tokens: int
-    eos_id: int = -1
+    max_new_tokens: int = 32  # deprecated alias; mirrors params.max_new_tokens
+    eos_id: int = -1  # deprecated alias; folded into params.stop
     slo_s: Optional[float] = None  # end-to-end latency objective
     submit_time: float = 0.0
+    params: Optional[SamplingParams] = None
 
     generated: list[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
@@ -47,6 +56,8 @@ class Request:
     ready: bool = False  # prefill complete, decoding
     pending_token: Optional[int] = None  # next token to feed the decode step
     evictions: int = 0
+    cancelled: bool = False
+    shared_tokens: int = 0  # prefix-cache tokens linked at the LAST admission
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     # page-table state, owned by the scheduler: kind -> page list.  "full"
@@ -55,18 +66,63 @@ class Request:
     # (t // P) % budget).  ``ring_hi`` counts page-intervals ever started.
     tables: dict[str, list[int]] = dataclasses.field(default_factory=dict)
     ring_hi: int = 0
+    # set by the engine at submit(); streaming/cancel route through it
+    _engine: Any = dataclasses.field(default=None, repr=False)
+    # memoized PrefixCache.chain_keys(prompt) — the prompt is immutable
+    # after submit, and a queue head blocked on pages retries admission
+    # (and so the cache lookup) every engine tick
+    _prefix_keys: Any = dataclasses.field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.params is None:
+            stop = frozenset({self.eos_id}) if self.eos_id >= 0 else frozenset()
+            self.params = SamplingParams(max_new_tokens=self.max_new_tokens, stop=stop)
+        else:
+            if self.eos_id >= 0:
+                self.params = self.params.with_stop(self.eos_id)
+            self.max_new_tokens = self.params.max_new_tokens
+
+    @property
+    def stop_ids(self) -> frozenset[int]:
+        return self.params.stop
 
     @property
     def replay(self) -> list[int]:
         """Tokens that must be in the cache before decode can (re)start:
         the prompt plus all generated tokens except the last (which is the
-        pending decode input).  Greedy decoding makes eviction + replay
-        bit-exact with the uninterrupted run."""
+        pending decode input).  Keyed sampling (seed, step) and greedy
+        decoding both make eviction + replay bit-exact with the
+        uninterrupted run — replayed tokens are fed back, never
+        re-sampled."""
         return self.prompt + self.generated[:-1] if self.generated else self.prompt
 
     @property
     def done(self) -> bool:
         return self.finish_time is not None
+
+    # --- streaming handle -------------------------------------------------
+    def tokens(self) -> Iterator[int]:
+        """Stream this request's tokens as the engine emits them.  Yields
+        every generated token (including any already emitted), driving
+        ``engine.step()`` while the request is in flight; returns when the
+        request finishes, hits a stop token, or is cancelled."""
+        if self._engine is None:
+            raise RuntimeError(f"request {self.rid} is not attached to an engine")
+        i = 0
+        while True:
+            while i < len(self.generated):
+                yield self.generated[i]
+                i += 1
+            if self.done:
+                return
+            self._engine.step()
+
+    def cancel(self) -> None:
+        """Cancel this request: its pages are released immediately (whether
+        queued, mid-prefill, decoding, or evicted) and its stream ends."""
+        if self._engine is None:
+            raise RuntimeError(f"request {self.rid} is not attached to an engine")
+        self._engine.cancel(self)
 
     def latency(self) -> Optional[float]:
         return None if self.finish_time is None else self.finish_time - self.submit_time
@@ -89,16 +145,35 @@ class ContinuousScheduler:
     token).  Under page pressure the *youngest* admitted request is evicted
     and re-queued at the FRONT of the queue, so relative order is preserved
     and the oldest request always runs to completion — no starvation.
+
+    With a ``prefix_cache``, admission first links the longest cached
+    page-aligned prefix of the prompt into the request's "full" table
+    (refcount bump, no allocation, no prefill for those tokens) and the
+    engine registers freshly prefilled prompt pages back into the cache.
+    Any page in a request's WRITE range whose refcount is > 1 — shared with
+    another sequence or retained by the cache — is forked copy-on-write
+    before the write: a private page is allocated, a device-side page copy
+    is queued on ``pending_copies`` (the engine drains it before its next
+    jitted call), and the shared page's refcount drops by one.  Under
+    allocation pressure the cache's LRU entries are reclaimed before any
+    live request is evicted.
     """
 
     def __init__(
-        self, slots: int, allocators: dict[str, PageAllocator], budgets: dict[str, int], max_len: int
+        self,
+        slots: int,
+        allocators: dict[str, PageAllocator],
+        budgets: dict[str, int],
+        max_len: int,
+        prefix_cache: Optional[PrefixCache] = None,
     ):
         self.slots = slots
         self.allocators = allocators
         self.budgets = budgets
         self.max_len = max_len
         self.page_size = next(iter(allocators.values())).page_size
+        self.prefix_cache = prefix_cache
+        self.pending_copies: list[tuple[int, int]] = []  # "full"-kind (src, dst) COW forks
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self._free_slots = list(range(slots - 1, -1, -1))
@@ -126,20 +201,84 @@ class ContinuousScheduler:
                 raise ValueError(f"request {req.rid}: {kind} page pool cannot hold {max_tokens} tokens")
         self.queue.append(req)
 
-    def _ensure(self, req: Request, target_tokens: int) -> bool:
-        """Grow ``req``'s tables to hold ``target_tokens`` cache entries.
-        Returns False (keeping partial progress — ``_ensure`` is resumable)
-        when an allocator runs dry."""
+    def _alloc_pages(self, kind: str, rid: int, n: int) -> Optional[list[int]]:
+        """Allocate through the cache-reclaim fallback: when the pool is dry,
+        LRU prefix-cache entries are dropped (cheapest memory to give back —
+        no live request loses state) until the allocation fits or the cache
+        is drained.  A reclaimed entry only frees its page if no live
+        sequence still shares it, hence the loop."""
+        alloc = self.allocators[kind]
+        while True:
+            pages = alloc.alloc(rid, n)
+            if pages is not None:
+                return pages
+            if self.prefix_cache is None or kind != "full" or not self.prefix_cache.reclaim():
+                return None
+
+    def _cow_write_range(self, req: Request, table: list[int], write_start: int) -> bool:
+        """Fork every "full" page in ``req``'s write range whose refcount is
+        > 1: the request is about to write positions >= ``write_start``, and
+        a write must never land on a page another sequence (or the prefix
+        cache) can read.  The fork allocates a private page, queues a
+        device-side page copy, and drops the request's link on the shared
+        page.  Returns False if the pool cannot supply a fork page."""
+        alloc = self.allocators["full"]
+        for idx in range(write_start // self.page_size, len(table)):
+            if alloc.refcount(table[idx]) <= 1:
+                continue
+            fresh = self._alloc_pages("full", req.rid, 1)
+            if fresh is None:
+                return False
+            self.pending_copies.append((table[idx], fresh[0]))
+            alloc.release(req.rid, table[idx])
+            table[idx] = fresh[0]
+        return True
+
+    def _link_prefix(self, req: Request) -> int:
+        """Link the longest cached prefix of ``req.prompt`` into its "full"
+        table (refcounted, copy-on-write).  Returns the position prefill
+        should start from.  A fresh request whose WHOLE prompt is cached
+        still recomputes its last prompt token (the engine needs its logits
+        to emit the first generated token); that token's K/V write lands in
+        the last shared page, which ``_cow_write_range`` then forks."""
+        req.shared_tokens = 0
+        if self.prefix_cache is None:
+            return 0
+        if req._prefix_keys is None:
+            req._prefix_keys = self.prefix_cache.chain_keys(req.prompt)
+        pages = self.prefix_cache.lookup_keys(req._prefix_keys)
+        if not pages:
+            return 0
+        shared = len(pages) * self.page_size
+        if not req.generated and shared == len(req.prompt):
+            start = len(req.prompt) - 1
+        else:
+            start = min(shared, len(req.replay))
+        self.allocators["full"].share(req.rid, pages)
+        req.tables.setdefault("full", []).extend(pages)
+        req.shared_tokens = shared
+        return start
+
+    def _ensure(self, req: Request, target_tokens: int, write_start: Optional[int] = None) -> bool:
+        """Grow ``req``'s tables to hold ``target_tokens`` cache entries and
+        fork any shared page in the write range (positions >=
+        ``write_start``, defaulting to ``req.cache_len``).  Returns False
+        (keeping partial progress — ``_ensure`` is resumable) when an
+        allocator runs dry."""
+        if write_start is None:
+            write_start = req.cache_len
         for kind, alloc in self.allocators.items():
             budget = self.budgets[kind]
             table = req.tables.setdefault(kind, [])
             if kind == "full":
                 need = self._peak_pages(kind, target_tokens) - len(table)
                 if need > 0:
-                    pages = alloc.alloc(req.rid, need)
+                    pages = self._alloc_pages(kind, req.rid, need)
                     if pages is None:
                         return False
                     table.extend(pages)
+                if not self._cow_write_range(req, table, write_start):
+                    return False
             else:  # ring: fill the first lap, then recycle in place
                 hi = -(-target_tokens // self.page_size)
                 while req.ring_hi < hi:
@@ -171,28 +310,78 @@ class ContinuousScheduler:
         return True
 
     def _drop_pages(self, req: Request) -> None:
+        # a queued COW copy whose destination page is being freed must not
+        # outlive it: the page could be re-allocated before the engine
+        # drains, and the stale copy would scatter foreign K/V into it
+        # (fork destinations are always refcount-1 pages of this request,
+        # so filtering on table membership is exact)
+        dropped = set(req.tables.get("full", ()))
+        if dropped and self.pending_copies:
+            self.pending_copies = [(s, d) for s, d in self.pending_copies if d not in dropped]
         for alloc in self.allocators.values():
             alloc.free(req.rid)
         req.tables = {}
         req.ring_hi = 0
 
     def admit_ready(self) -> list[Request]:
-        """Admit queue heads while a slot and enough pages are available."""
+        """Admit queue heads while a slot and enough pages are available.
+        Cached prefix pages are linked first (so only the tail allocates);
+        a request whose whole replay is already cached — a re-admitted
+        request hitting its own prompt pages — skips prefill entirely and
+        resumes decoding from its last generated token."""
         admitted = []
         while self.queue and self._free_slots:
             req = self.queue[0]
-            if not self._ensure(req, len(req.replay) + 1):
+            if req.cancelled:
+                self.queue.popleft()
+                self._drop_pages(req)
+                continue
+            start = self._link_prefix(req)
+            if not self._ensure(req, len(req.replay) + 1, write_start=start):
                 self._drop_pages(req)  # roll back the partial reservation
                 break
             self.queue.popleft()
+            if self.prefix_cache is not None:  # metrics: count committed admissions only
+                self.prefix_cache.lookups += 1
+                if req.shared_tokens:
+                    self.prefix_cache.hits += 1
+                    self.prefix_cache.pages_shared += req.shared_tokens // self.page_size
             req.slot = self._free_slots.pop()
             req.admit_stamp = next(self._stamps)
-            req.prefill_pos = 0
-            req.cache_len = 0
-            req.ready = False
+            req.prefill_pos = start
+            req.cache_len = start
+            req.ready = start >= len(req.replay)
+            if req.ready:  # fully cached replay: resume decode directly
+                req.pending_token = req.generated[-1]
             self.active[req.slot] = req
             admitted.append(req)
         return admitted
+
+    def cancel(self, req: Request) -> None:
+        """Release ``req``'s slot and pages immediately, wherever it is in
+        its lifecycle: queued (holds nothing), mid-prefill or decoding
+        (slot + pages), or evicted (queued again, holds nothing)."""
+        if req.slot is not None:
+            self.finish(req)
+        else:
+            try:
+                self.queue.remove(req)
+            except ValueError:
+                pass
+            self._drop_pages(req)
+
+    def register_prefix(self, req: Request) -> int:
+        """Offer ``req``'s freshly prefilled complete prompt pages to the
+        prefix cache (engine calls this when prefill finishes).  Only pages
+        holding exclusively prompt positions are cacheable — the partial
+        tail page (written by later prefill/decode steps) never is."""
+        if self.prefix_cache is None:
+            return 0
+        n = len(req.prompt) // self.page_size
+        table = req.tables.get("full", [])
+        if n == 0 or len(table) < n:
+            return 0
+        return self.prefix_cache.insert(req.prompt, table[:n])
 
     def prefill_candidates(self) -> list[Request]:
         """Active requests with replay tokens left to cache, oldest first —
@@ -301,14 +490,17 @@ def pct(xs: list, q: float):
 
 
 def summarize(requests: list[Request]) -> dict:
-    """Aggregate latency/SLO metrics over finished requests."""
-    done = [r for r in requests if r.done]
+    """Aggregate latency/SLO metrics over finished requests (cancelled
+    requests are counted separately and excluded from the latency/SLO
+    percentiles — they never completed)."""
+    done = [r for r in requests if r.done and not r.cancelled]
     lats = sorted(r.latency() for r in done)
     ttfts = sorted(t for t in (r.ttft() for r in done) if t is not None)
     tokens = sum(len(r.generated) for r in done)
     slo_known = [r.slo_met() for r in done if r.slo_met() is not None]
     return {
         "finished": len(done),
+        "cancelled": sum(1 for r in requests if r.cancelled),
         "tokens": tokens,
         "p50_latency_s": pct(lats, 0.50),
         "p99_latency_s": pct(lats, 0.99),

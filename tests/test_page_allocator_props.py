@@ -1,27 +1,34 @@
 """Property tests: PageAllocator and the continuous scheduler's page
 bookkeeping under admit/evict/recycle churn — no page leaked, no page
-double-owned, ``free_pages`` conserved, ring tables never exceed their
-budget.  (Runs in CI where the ``[test]`` extra installs hypothesis.)"""
+double-owned (unless explicitly SHARED), refcounts conserved, ring tables
+never exceed their budget, and copy-on-write never leaves a shared page in
+any request's write range.  (Runs in CI where the ``[test]`` extra installs
+hypothesis.)"""
 import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.models.kvcache import TRASH_PAGE, PageAllocator
+from repro.models.kvcache import TRASH_PAGE, PageAllocator, PrefixCache
 from repro.serve.scheduler import ContinuousScheduler, Request
 
 
-def check_allocator_invariants(alloc: PageAllocator, seq_ids) -> None:
-    owned = [p for sid in seq_ids for p in alloc.owned(sid)]
-    assert len(owned) == len(set(owned)), "page double-owned"
-    assert TRASH_PAGE not in owned, "trash page handed out"
-    assert alloc.free_pages + len(owned) == alloc.num_pages - 1, "pages leaked or invented"
+def check_allocator_invariants(alloc: PageAllocator, seq_ids, cache: PrefixCache | None = None) -> None:
+    links = [p for sid in seq_ids for p in alloc.owned(sid)]
+    assert TRASH_PAGE not in links, "trash page handed out"
+    allocated = alloc.allocated
+    assert set(links) <= allocated, "sequence links a page the allocator does not know"
+    assert alloc.free_pages + len(allocated) == alloc.num_pages - 1, "pages leaked or invented"
+    cache_refs = cache.cached_pages if cache is not None else 0
+    assert alloc.total_refs == len(links) + cache_refs, "refcounts out of sync with links"
+    for p in allocated:
+        assert alloc.refcount(p) >= 1
 
 
 # --- raw allocator churn ----------------------------------------------------
 
 ops = st.lists(
-    st.tuples(st.sampled_from(["alloc", "free", "release"]), st.integers(0, 5), st.integers(1, 4)),
+    st.tuples(st.sampled_from(["alloc", "free", "release", "share"]), st.integers(0, 5), st.integers(1, 4)),
     max_size=60,
 )
 
@@ -35,9 +42,17 @@ def test_allocator_conservation_under_churn(num_pages, ops):
             pages = alloc.alloc(sid, n)
             if pages is not None:
                 assert len(pages) == len(set(pages)) == n
+                assert all(alloc.refcount(p) == 1 for p in pages)
         elif op == "free":
             alloc.free(sid)
-        else:  # release one page, if any
+        elif op == "share":  # link another sequence's pages, refcount bump
+            donor = (sid + 1) % 6
+            pages = alloc.owned(donor)[:n]
+            if pages:
+                before = [alloc.refcount(p) for p in pages]
+                alloc.share(sid, pages)
+                assert [alloc.refcount(p) for p in pages] == [b + 1 for b in before]
+        else:  # release one link, if any
             owned = alloc.owned(sid)
             if owned:
                 alloc.release(sid, owned[n % len(owned)])
@@ -133,3 +148,156 @@ def test_ring_recycling_conservation(budget, spare, total_tokens, step):
         assert len(req.tables["ring"]) == len(owned)
     s.finish(req)
     assert alloc.free_pages == alloc.num_pages - 1
+
+
+# --- shared-prefix admit/cancel/evict interleavings (refcounts + COW) -------
+
+PAGE = 4
+
+
+def make_prefix_sched(slots: int, num_pages: int) -> ContinuousScheduler:
+    alloc = PageAllocator(num_pages, PAGE)
+    return ContinuousScheduler(
+        slots, {"full": alloc}, {"full": 16}, 64, prefix_cache=PrefixCache(alloc)
+    )
+
+
+def assert_write_range_private(s: ContinuousScheduler, req: Request) -> None:
+    """The COW contract: every page a request may write (positions >=
+    cache_len, plus its pending prefill range) has refcount 1 — a write can
+    never mutate a page another sequence or the cache can still read."""
+    alloc = s.allocators["full"]
+    table = req.tables.get("full", [])
+    first = min(req.cache_len, req.prefill_pos) // PAGE
+    for idx in range(first, len(table)):
+        assert alloc.refcount(table[idx]) == 1, (
+            f"rid {req.rid}: page {table[idx]} (table idx {idx}) is shared but in the write range"
+        )
+
+
+def simulate_engine_step(s: ContinuousScheduler, req: Request, draw_tokens=None) -> None:
+    """Drive one request the way the engine does: prefill chunks until the
+    replay is cached (registering the prompt prefix), then grow + decode."""
+    if not req.ready:
+        assert_write_range_private(s, req)
+        took = min(4, len(req.replay) - req.prefill_pos)
+        req.prefill_pos += took
+        req.cache_len = req.prefill_pos
+        if req.prefill_pos >= len(req.replay):
+            req.ready = True
+            s.register_prefix(req)
+            if not req.generated:
+                req.generated.append(draw_tokens() if draw_tokens else 1)
+    else:
+        if s.grow(req, 1) and req.slot is not None:
+            assert_write_range_private(s, req)
+            req.cache_len += 1
+            req.generated.append(draw_tokens() if draw_tokens else 1)
+
+
+@settings(max_examples=75, deadline=None)
+@given(
+    slots=st.integers(1, 3),
+    num_pages=st.integers(8, 28),
+    arrivals=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(1, 14), st.integers(1, 8)),  # (family, plen, new)
+        min_size=1,
+        max_size=8,
+    ),
+    data=st.data(),
+)
+def test_shared_prefix_churn_conserves_and_never_mutates_shared(slots, num_pages, arrivals, data):
+    """Shared-prefix admit/cancel/evict/finish interleavings: allocator
+    books stay balanced including the cache's retention refs, no page is
+    double-freed or leaked, copy-on-write always leaves the write range
+    private, and when every request is done and the cache dropped, the
+    allocator drains to empty."""
+    s = make_prefix_sched(slots, num_pages)
+    cache = s.prefix_cache
+    reqs = []
+    for rid, (family, plen, new) in enumerate(arrivals):
+        # four prompt families sharing long prefixes => heavy cache overlap
+        prompt = [family * 100 + (i // 8) for i in range(plen)]
+        r = Request(rid=rid, prompt=prompt, max_new_tokens=new)
+        try:
+            s.submit(r)
+        except ValueError:
+            continue
+        reqs.append(r)
+    rids = [r.rid for r in reqs]
+    tok = iter(range(10_000))
+    for _ in range(300):
+        s.admit_ready()
+        active = list(s.active.values())
+        if not active and not s.queue:
+            break
+        for r in active:
+            if r.slot is None:
+                continue  # evicted by a peer's grow earlier this round
+            action = data.draw(st.sampled_from(["step", "step", "finish", "cancel", "evict"]),
+                               label=f"rid={r.rid}")
+            if action == "step":
+                simulate_engine_step(s, r, draw_tokens=lambda: next(tok))
+                if r.ready and len(r.generated) >= r.max_new_tokens:
+                    s.finish(r)
+                    r.finish_time = 1.0
+            elif action == "finish":
+                s.finish(r)
+                r.finish_time = 1.0
+            elif action == "cancel":
+                r.cancelled = True
+                s.cancel(r)
+                r.finish_time = 1.0
+            else:
+                s.evict(r)
+        s.pending_copies.clear()  # engine drains these; host model needs no device copy
+        check_allocator_invariants(s.allocators["full"], rids, cache)
+    # drain: finish stragglers, cancel the queue, drop the cache
+    for r in list(s.active.values()):
+        s.finish(r)
+    for r in list(s.queue):
+        r.cancelled = True
+        s.cancel(r)
+    check_allocator_invariants(s.allocators["full"], rids, cache)
+    cache.drop_all()
+    assert s.allocators["full"].free_pages == num_pages - 1, "cache retained pages after drop_all"
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    plen=st.integers(4, 24),
+    num_pages=st.integers(10, 30),
+    n_sharers=st.integers(2, 4),
+)
+def test_cow_fork_isolates_writers(plen, num_pages, n_sharers):
+    """N requests with the SAME prompt admitted sequentially: each after
+    the first links the cached prefix, and the copy-on-write fork keeps
+    every writer's write range private while refcounts stay conserved."""
+    s = make_prefix_sched(slots=1, num_pages=num_pages)
+    prompt = list(range(1, plen + 1))
+    prev_tables: list[list[int]] = []
+    for rid in range(n_sharers):
+        r = Request(rid=rid, prompt=prompt, max_new_tokens=4)
+        s.submit(r)
+        if not s.admit_ready():
+            return  # pool too small for this (plen, num_pages) draw — vacuous
+        while not r.ready:
+            simulate_engine_step(s, r, draw_tokens=lambda: 7)
+        assert_write_range_private(s, r)
+        shared_pages = r.shared_tokens // PAGE
+        if rid > 0:
+            assert shared_pages >= plen // PAGE - (plen % PAGE == 0), "prefix hit expected"
+            # shared prefix pages are the SAME physical pages as the first
+            # owner's registered ones, except any COW-forked boundary page
+            if plen % PAGE == 0 and plen // PAGE:
+                boundary = plen // PAGE - 1
+                assert r.tables["full"][boundary] != prev_tables[0][boundary], (
+                    "page-aligned prompt must fork its recomputed boundary page"
+                )
+        prev_tables.append(list(r.tables["full"]))
+        s.pending_copies.clear()
+        check_allocator_invariants(s.allocators["full"], range(n_sharers), s.prefix_cache)
+        s.finish(r)
+        r.finish_time = 1.0
+    s.prefix_cache.drop_all()
+    assert s.allocators["full"].free_pages == num_pages - 1

@@ -1,0 +1,122 @@
+"""Keyed vectorized sampler: greedy exactness, filter support, per-row
+(seed, step) determinism, and batch-composition independence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import Request
+
+
+def _sample(logits, temps, top_ks, top_ps, seeds, steps):
+    return np.asarray(
+        sample_tokens(
+            jnp.asarray(logits, jnp.float32),
+            jnp.asarray(temps, jnp.float32),
+            jnp.asarray(top_ks, jnp.int32),
+            jnp.asarray(top_ps, jnp.float32),
+            jnp.asarray(seeds, jnp.uint32),
+            jnp.asarray(steps, jnp.int32),
+        )
+    )
+
+
+@pytest.fixture(scope="module")
+def logits():
+    rng = np.random.default_rng(0)
+    return rng.normal(size=(4, 64)).astype(np.float32)
+
+
+class TestSampleTokens:
+    def test_temperature_zero_is_exact_argmax(self, logits):
+        got = _sample(logits, [0.0] * 4, [0] * 4, [1.0] * 4, [0] * 4, [0] * 4)
+        assert (got == logits.argmax(-1)).all()
+
+    def test_top_k_one_is_argmax_even_when_hot(self, logits):
+        got = _sample(logits, [2.0] * 4, [1] * 4, [1.0] * 4, [1, 2, 3, 4], [0] * 4)
+        assert (got == logits.argmax(-1)).all()
+
+    def test_tiny_top_p_is_argmax(self, logits):
+        got = _sample(logits, [1.5] * 4, [0] * 4, [1e-6] * 4, [5, 6, 7, 8], [3] * 4)
+        assert (got == logits.argmax(-1)).all()
+
+    def test_top_k_support(self, logits):
+        """Sampled ids always come from each row's top-k set."""
+        k = 5
+        topk = np.argsort(-logits, axis=-1)[:, :k]
+        for step in range(40):
+            got = _sample(logits, [1.3] * 4, [k] * 4, [1.0] * 4, [9] * 4, [step] * 4)
+            for b in range(4):
+                assert got[b] in topk[b]
+
+    def test_deterministic_in_seed_and_step(self, logits):
+        a = _sample(logits, [0.9] * 4, [0] * 4, [1.0] * 4, [3] * 4, [7] * 4)
+        b = _sample(logits, [0.9] * 4, [0] * 4, [1.0] * 4, [3] * 4, [7] * 4)
+        assert (a == b).all()
+        c = _sample(logits, [0.9] * 4, [0] * 4, [1.0] * 4, [3] * 4, [8] * 4)
+        d = _sample(logits, [0.9] * 4, [0] * 4, [1.0] * 4, [4] * 4, [7] * 4)
+        # a fresh key re-rolls every row with overwhelming probability
+        assert (a != c).any() and (a != d).any()
+
+    def test_batch_composition_independence(self, logits):
+        """A row's sample depends only on (its logits, seed, step) — not on
+        which other rows share the batch (the eviction-replay and
+        cross-engine determinism contract)."""
+        full = _sample(logits, [0.8] * 4, [10] * 4, [0.9] * 4, [11, 12, 13, 14], [2, 5, 9, 0])
+        for b in range(4):
+            solo = _sample(logits[b : b + 1], [0.8], [10], [0.9], [11 + b], [[2, 5, 9, 0][b]])
+            assert solo[0] == full[b]
+
+    def test_mixed_greedy_and_sampled_rows(self, logits):
+        got = _sample(logits, [0.0, 1.2, 0.0, 1.2], [0] * 4, [1.0] * 4, [1] * 4, [4] * 4)
+        assert got[0] == logits[0].argmax() and got[2] == logits[2].argmax()
+
+    def test_sampled_distribution_tracks_logits(self):
+        """With a strongly peaked distribution, the mode dominates."""
+        v = 16
+        logits = np.full((1, v), -4.0, np.float32)
+        logits[0, 3] = 4.0
+        hits = sum(
+            int(_sample(logits, [1.0], [0], [1.0], [0], [s])[0] == 3) for s in range(100)
+        )
+        assert hits > 90
+
+
+class TestSamplingParams:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SamplingParams(top_k=-1)
+        with pytest.raises(ValueError):
+            SamplingParams(top_p=0.0)
+        with pytest.raises(ValueError):
+            SamplingParams(max_new_tokens=0)
+
+    def test_stop_set_coercion_and_with_stop(self):
+        sp = SamplingParams(stop=[3, 5, 3])
+        assert sp.stop == frozenset({3, 5})
+        assert sp.with_stop(9).stop == frozenset({3, 5, 9})
+
+    def test_request_eos_alias_builds_stop_set(self):
+        r = Request(rid=0, prompt=[1], max_new_tokens=4, eos_id=7)
+        assert r.stop_ids == frozenset({7}) and r.params.max_new_tokens == 4
+
+    def test_request_params_win_and_absorb_eos(self):
+        sp = SamplingParams(temperature=0.5, stop=[2], max_new_tokens=9)
+        r = Request(rid=0, prompt=[1], max_new_tokens=99, eos_id=7, params=sp)
+        assert r.stop_ids == frozenset({2, 7})
+        assert r.max_new_tokens == 9  # params govern; field is a mirror
+
+    def test_negative_eos_ignored(self):
+        r = Request(rid=0, prompt=[1], max_new_tokens=4)
+        assert r.stop_ids == frozenset()
+
+
+def test_row_keys_match_scalar_fold_in():
+    """The vmapped per-row key derivation equals the scalar reference, so a
+    request's stream is reproducible from (seed, step) alone."""
+    seeds = jnp.asarray([0, 1, 2], jnp.uint32)
+    steps = jnp.asarray([5, 5, 7], jnp.int32)
+    keys = jax.vmap(lambda s, t: jax.random.fold_in(jax.random.PRNGKey(s), t))(seeds, steps)
+    want = jax.random.fold_in(jax.random.PRNGKey(np.uint32(1)), 5)
+    assert np.array_equal(np.asarray(keys[1]), np.asarray(want))
