@@ -13,10 +13,22 @@ bitwise-identical to the dense-KV baseline at target_rho=0.
 The prefix section measures refcounted shared-prefix page caching on a
 shared-system-prompt workload: identical tokens to the uncached run,
 cache hit rate > 0, fewer pages in use than the no-sharing baseline, and
-a fully drained allocator at shutdown — all asserted.
+a fully drained allocator at shutdown — all asserted.  A cold same-tick
+burst additionally pins the vLLM-style incremental registration: identical
+prompts submitted together dedupe INSIDE one admission wave (pages relink
+mid-prefill), holding fewer pages at prefill completion than the uncached
+run while emitting identical tokens.
+
+The TP section shards the engine over an emulated device mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``): tensor-parallel
+decode must be bitwise-identical to the single-device engine for every
+page kind (full / ring / int8), per-shard pool bytes must equal total/N,
+and tokens/s is reported per shard count.  Skipped (reported, not failed)
+when only one device is visible.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -118,6 +130,80 @@ def _run_ring_section(quick: bool) -> dict:
     }
 
 
+def _run_tp_section(quick: bool) -> dict:
+    """Tensor-parallel serving over the mesh "model" axis: bitwise parity
+    with the single-device engine for every page kind, per-shard pool
+    memory = total/N, and tokens/s per shard count.  CPU-emulated meshes
+    exercise the whole path; real chips run the same code."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return {
+            "skipped": f"needs >= 2 devices, have {n_dev} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        }
+    cfg = _tiny_cfg()
+    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    n_req = 6 if quick else 16
+    new_tokens = 16 if quick else 32
+    requests = [(rng.integers(1, 256, size=8).tolist(), new_tokens) for _ in range(n_req)]
+    useful = sum(new for _, new in requests)
+
+    def build(c, p, tp):
+        return ContinuousServeEngine(
+            c, p, ContinuousServeConfig(slots=4, max_len=128, page_size=8, prefill_chunk=8, tp=tp)
+        )
+
+    # bitwise parity at TP>1 for every page kind (greedy decode: identical
+    # token streams are the engine-level bitwise claim)
+    ring_cfg = _ring_cfg()
+    int8_cfg = dataclasses.replace(_tiny_cfg(), name="bench-serve-int8", kv_cache_dtype="int8")
+    flavours = {
+        "full": (cfg, params),
+        "ring": (ring_cfg, zoo.init_params(jax.random.PRNGKey(1), ring_cfg)),
+        "int8": (int8_cfg, zoo.init_params(jax.random.PRNGKey(2), int8_cfg)),
+    }
+    tp_test = 2
+    parity = {}
+    for kind, (c, p) in flavours.items():
+        prompts = [q for q, _ in requests[:4]]
+        want = build(c, p, 1).generate(prompts, max_new_tokens=new_tokens)
+        got = build(c, p, tp_test).generate(prompts, max_new_tokens=new_tokens)
+        parity[kind] = want == got
+
+    # throughput + per-shard memory per shard count.  On an emulated mesh
+    # all shards run on one physical CPU, so tokens/s is a schedule sanity
+    # number, not a hardware scaling claim — the asserted claims here are
+    # parity and the memory split.
+    scaling = []
+    for tp in (1, 2, 4):
+        if tp > n_dev or cfg.kv_heads % tp:
+            continue
+        eng = build(cfg, params, tp)
+        eng.generate([q for q, _ in requests[:4]], max_new_tokens=2)  # jit warmup
+        eng.clear_history()
+        t0 = time.perf_counter()
+        for q, new in requests:
+            eng.submit(q, max_new_tokens=new)
+        eng.run_until_complete()
+        wall = time.perf_counter() - t0
+        m = eng.metrics()
+        scaling.append(
+            {
+                "tp": tp,
+                "tok_per_s": useful / wall,
+                "pool_bytes": m["cache_bytes"],
+                "pool_bytes_per_shard": m["cache_bytes_per_shard"],
+                "shard_bytes_exact": m["cache_bytes_per_shard"] * tp == m["cache_bytes"],
+            }
+        )
+    return {
+        "devices": n_dev,
+        "bitwise_identical_tp": parity,
+        "scaling": scaling,
+    }
+
+
 def _run_prefix_section(quick: bool) -> dict:
     """Refcounted shared-prefix page caching on a shared-system-prompt
     workload: one warm-up request fills the cache, then concurrent bursts
@@ -160,6 +246,35 @@ def _run_prefix_section(quick: bool) -> dict:
             "drained": all(a.free_pages == a.num_pages - 1 for a in eng.allocators.values()),
         }
 
+    # cold same-tick burst (no warm-up): identical prompts submitted
+    # together must dedupe INSIDE the admission wave — pages register as
+    # each one fills and peers relink them mid-prefill (vLLM-style), so
+    # the cached run holds fewer pages by the time every row is decoding
+    burst = {}
+    burst_tails = tails[: min(6, n_req)]
+    for caching in (False, True):
+        eng = ContinuousServeEngine(
+            cfg, params,
+            ContinuousServeConfig(slots=len(burst_tails), max_len=128, page_size=page_size,
+                                  prefill_chunk=page_size, prefix_caching=caching),
+        )
+        reqs = [eng.submit(system + tail, max_new_tokens=new_tokens) for tail in burst_tails]
+        in_use_at_ready = None
+        for _ in range(100_000):
+            if all(r.done for r in reqs):
+                break
+            eng.step()
+            if in_use_at_ready is None and all(r.ready or r.done for r in reqs):
+                a = eng.allocators["full"]
+                in_use_at_ready = a.num_pages - 1 - a.free_pages
+        else:
+            raise RuntimeError("cold-burst section: step budget exhausted")
+        burst[caching] = {
+            "outs": [r.generated for r in reqs],
+            "pages_at_ready": in_use_at_ready,
+            "relinked_pages": eng.metrics()["prefix_cache"]["relinked_pages"] if caching else 0,
+        }
+
     cached, plain = results[True], results[False]
     stats = cached["prefix_cache"]
     return {
@@ -173,6 +288,10 @@ def _run_prefix_section(quick: bool) -> dict:
         "tok_per_s": (n_req * new_tokens) / cached["wall_s"],
         "tok_per_s_no_sharing": (n_req * new_tokens) / plain["wall_s"],
         "allocator_drained_at_shutdown": cached["drained"] and plain["drained"],
+        "burst_tokens_identical": burst[True]["outs"] == burst[False]["outs"],
+        "burst_relinked_pages": burst[True]["relinked_pages"],
+        "burst_pages_at_ready": burst[True]["pages_at_ready"],
+        "burst_pages_at_ready_no_sharing": burst[False]["pages_at_ready"],
     }
 
 
@@ -262,11 +381,13 @@ def run(quick: bool = False) -> dict:
 
     ring = _run_ring_section(quick)
     prefix = _run_prefix_section(quick)
+    tp = _run_tp_section(quick)
 
     speedup = (useful / c_wall) / (useful / b_wall)
     result = {
         "ring": ring,
         "prefix_cache": prefix,
+        "tp": tp,
         "requests": n_req,
         "useful_tokens": useful,
         "baseline": {
@@ -307,6 +428,19 @@ def run(quick: bool = False) -> dict:
         f"tokens identical: {prefix['tokens_identical_to_uncached']} | "
         f"drained: {prefix['allocator_drained_at_shutdown']}"
     )
+    print(
+        f"  cold burst : {prefix['burst_relinked_pages']} pages relinked mid-wave | "
+        f"pages at ready {prefix['burst_pages_at_ready']} vs {prefix['burst_pages_at_ready_no_sharing']} unshared | "
+        f"tokens identical: {prefix['burst_tokens_identical']}"
+    )
+    if "skipped" in tp:
+        print(f"  tp         : skipped ({tp['skipped']})")
+    else:
+        scale_str = ", ".join(
+            f"tp={s['tp']}: {s['tok_per_s']:.1f} tok/s {s['pool_bytes_per_shard'] / 1e6:.2f} MB/shard"
+            for s in tp["scaling"]
+        )
+        print(f"  tp         : bitwise {tp['bitwise_identical_tp']} | {scale_str}")
     save("serve_continuous", result)
     if not bitwise:
         raise AssertionError("paged decode diverged from dense-KV reference at rho=0")
@@ -322,6 +456,19 @@ def run(quick: bool = False) -> dict:
         raise AssertionError("prefix sharing did not reduce pages in use")
     if not prefix["allocator_drained_at_shutdown"]:
         raise AssertionError("allocator did not drain to empty after drop_prefix_cache")
+    if not prefix["burst_tokens_identical"]:
+        raise AssertionError("same-wave dedup changed the emitted tokens")
+    if not prefix["burst_relinked_pages"] > 0:
+        raise AssertionError("cold same-tick burst never relinked a page mid-wave")
+    if not prefix["burst_pages_at_ready"] < prefix["burst_pages_at_ready_no_sharing"]:
+        raise AssertionError("same-wave dedup did not reduce pages held at prefill completion")
+    if "skipped" not in tp:
+        for kind, ok in tp["bitwise_identical_tp"].items():
+            if not ok:
+                raise AssertionError(f"TP decode diverged from the single-device engine ({kind} pages)")
+        for s in tp["scaling"]:
+            if not s["shard_bytes_exact"]:
+                raise AssertionError(f"tp={s['tp']}: per-shard pool bytes != total/N")
     if not quick and speedup < 1.5:
         raise AssertionError(f"continuous batching speedup {speedup:.2f}x < 1.5x target")
     return result

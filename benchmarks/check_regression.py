@@ -1,0 +1,180 @@
+"""Bench regression gate: compare a fresh ``serve_continuous`` result
+against the committed baseline (``BENCH_serve.json`` at the repo root).
+
+    python -m benchmarks.check_regression \
+        [--baseline BENCH_serve.json] \
+        [--fresh experiments/bench/serve_continuous.json] \
+        [--out experiments/bench/serve_trajectory.json] \
+        [--tolerance 0.25]
+
+Two gate classes:
+
+* **Parity** — every bitwise/equivalence assertion the bench records must
+  hold: paged-vs-dense bitwise at rho=0, ring bitwise + window-bound
+  memory, prefix-cache token identity (warm and cold-burst), allocator
+  drain, TP bitwise parity per page kind and the per-shard = total/N
+  memory split (when a multi-device mesh was available).  Any false flag
+  fails the gate outright — no tolerance.
+* **Throughput** — tokens/s ratios must not regress more than
+  ``tolerance`` (default 25%) below the baseline.  Gated on MACHINE-
+  INDEPENDENT ratios (each engine's tokens/s normalised by the same run's
+  slot-granularity baseline engine), so a slower CI runner cannot
+  false-fail the gate; raw tokens/s are recorded in the trajectory for
+  tracking but never gated.
+
+The merged trajectory (baseline + fresh + deltas) is written to ``--out``
+and uploaded as a CI artifact.  ``--update-baseline`` rewrites the
+baseline from the fresh run (maintenance; commit the result).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PARITY_FLAGS = [
+    ("bitwise_identical_rho0", ("bitwise_identical_rho0",)),
+    ("outputs_match_baseline", ("outputs_match_baseline",)),
+    ("ring_bitwise", ("ring", "bitwise_identical_rho0")),
+    ("ring_bytes_flat", ("ring", "ring_bytes_flat_in_max_len")),
+    ("prefix_tokens_identical", ("prefix_cache", "tokens_identical_to_uncached")),
+    ("prefix_drained", ("prefix_cache", "allocator_drained_at_shutdown")),
+    ("burst_tokens_identical", ("prefix_cache", "burst_tokens_identical")),
+]
+
+
+def _get(d: dict, path: tuple, default=None):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return default
+        d = d[k]
+    return d
+
+
+def throughput_ratios(result: dict) -> dict:
+    """Machine-independent tokens/s ratios: every engine normalised by the
+    same run's slot-granularity baseline engine."""
+    base = _get(result, ("baseline", "tok_per_s"))
+    if not base:
+        return {}
+    out = {"speedup": result.get("speedup")}
+    ring = _get(result, ("ring", "tok_per_s"))
+    if ring:
+        out["ring_vs_slot"] = ring / base
+    prefix = _get(result, ("prefix_cache", "tok_per_s"))
+    if prefix:
+        out["prefix_vs_slot"] = prefix / base
+    for s in _get(result, ("tp", "scaling"), ()) or ():
+        out[f"tp{s['tp']}_vs_slot"] = s["tok_per_s"] / base
+    return {k: v for k, v in out.items() if v is not None}
+
+
+def check_parity(result: dict) -> list[str]:
+    failures = []
+    for name, path in PARITY_FLAGS:
+        val = _get(result, path)
+        if val is not True:
+            failures.append(f"parity: {name} is {val!r} (expected True)")
+    if not _get(result, ("prefix_cache", "burst_relinked_pages"), 0) > 0:
+        failures.append("parity: cold burst never relinked a page mid-wave")
+    tp = result.get("tp", {})
+    if tp and "skipped" not in tp:
+        for kind, ok in tp.get("bitwise_identical_tp", {}).items():
+            if ok is not True:
+                failures.append(f"parity: TP decode diverged from single-device ({kind} pages)")
+        for s in tp.get("scaling", ()):
+            if s.get("shard_bytes_exact") is not True:
+                failures.append(f"parity: tp={s['tp']} per-shard pool bytes != total/N")
+    return failures
+
+
+def check_throughput(fresh: dict, baseline: dict, tolerance: float) -> tuple[list[str], dict]:
+    fresh_r = throughput_ratios(fresh)
+    base_r = baseline.get("throughput_ratios", {})
+    tp_skipped = "skipped" in (fresh.get("tp") or {})
+    failures, deltas = [], {}
+    for key, base_val in base_r.items():
+        got = fresh_r.get(key)
+        if got is None:
+            if key.startswith("tp") and tp_skipped:
+                # the bench ran on a single device and reported its TP
+                # section as skipped — a legitimate local run, not a
+                # regression (CI forces a multi-device mesh via XLA_FLAGS)
+                continue
+            failures.append(f"throughput: metric {key} missing from the fresh run")
+            continue
+        deltas[key] = {"baseline": base_val, "fresh": got, "rel": got / base_val}
+        if got < (1.0 - tolerance) * base_val:
+            failures.append(
+                f"throughput: {key} regressed {(1 - got / base_val):.0%} "
+                f"({got:.3f} vs baseline {base_val:.3f}, tolerance {tolerance:.0%})"
+            )
+    return failures, deltas
+
+
+def make_baseline(result: dict) -> dict:
+    return {
+        "bench": "serve_continuous",
+        "throughput_ratios": throughput_ratios(result),
+        "raw_tok_per_s": {
+            "slot_baseline": _get(result, ("baseline", "tok_per_s")),
+            "continuous": _get(result, ("continuous", "tok_per_s")),
+        },
+        "note": (
+            "Gated metrics are tokens/s RATIOS vs the same run's slot-"
+            "granularity engine (machine-independent); raw tok/s is "
+            "informational. Regenerate with --update-baseline."
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_serve.json")
+    ap.add_argument("--fresh", default="experiments/bench/serve_continuous.json")
+    ap.add_argument("--out", default="experiments/bench/serve_trajectory.json")
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the fresh run and exit")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    if args.update_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(make_baseline(fresh), f, indent=1, default=float)
+            f.write("\n")
+        print(f"[gate] baseline rewritten: {args.baseline}")
+        return
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check_parity(fresh)
+    tput_failures, deltas = check_throughput(fresh, baseline, args.tolerance)
+    failures += tput_failures
+
+    trajectory = {
+        "baseline": baseline,
+        "fresh": {"throughput_ratios": throughput_ratios(fresh), "result": fresh},
+        "deltas": deltas,
+        "tolerance": args.tolerance,
+        "failures": failures,
+        "passed": not failures,
+    }
+    with open(args.out, "w") as f:
+        json.dump(trajectory, f, indent=1, default=float)
+
+    for key, d in sorted(deltas.items()):
+        print(f"[gate] {key}: {d['fresh']:.3f} vs baseline {d['baseline']:.3f} ({d['rel']:.0%})")
+    if failures:
+        print("[gate] FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        sys.exit(1)
+    print(f"[gate] passed ({len(deltas)} throughput metrics within {args.tolerance:.0%}, all parity flags hold)")
+
+
+if __name__ == "__main__":
+    main()

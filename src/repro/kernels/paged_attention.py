@@ -17,6 +17,15 @@ per layer cycle) with per-sequence page tables.  Three device paths:
 
 All kernels default to ``interpret=True``: this repo's tests and benches run
 on CPU; on real TPU hardware the same code compiles with interpret=False.
+
+Tensor parallelism: every kernel here is shard-local over the KV-head dim —
+shapes are taken from the operands, and no op mixes heads — so the serving
+engine calls them unchanged inside a ``shard_map`` over the mesh "model"
+axis with pools of Hkv/n heads and q of H/n heads per shard (page tables
+and lengths replicated; page ids are shard-invariant).  The grouped-query
+ratio G = H // Hkv survives equal head splits, and per-head attention is
+exact, so the sharded kernel output is the head-slice of the unsharded one
+(asserted by tests/test_serve_tp.py on an emulated mesh).
 """
 from __future__ import annotations
 
@@ -204,6 +213,11 @@ def paged_decode_attention(
     (~1e-6 relative).  int8 pools pass ``k_scale``/``v_scale``; ring tables
     pass ``window`` and a table whose C = maxp * P ring slots hold the
     trailing window (position t at slot t % C).
+
+    Under tensor parallelism, call with the shard-local pools and the
+    matching q head block (H/n query heads against Hkv/n pool heads): all
+    shapes derive from the operands and no reduction crosses KV heads, so
+    the kernel is oblivious to running inside a ``shard_map``.
     """
     b, _, h, d = q.shape
     _, page_size, hkv, _ = k_pool.shape

@@ -25,6 +25,25 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_serve_mesh(tp: int) -> jax.sharding.Mesh:
+    """(1, tp) mesh over the first ``tp`` devices, axes ("data", "model") —
+    the serving engine's tensor-parallel mesh.  The "model" axis carries the
+    KV-head shards of the paged pools and the head-parallel attention; the
+    "data" axis is degenerate (continuous batching already packs the batch).
+
+    Works on real chips and on an emulated host mesh alike: run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to develop and CI
+    the whole path on CPU.
+    """
+    devices = jax.devices()
+    if tp > len(devices):
+        raise ValueError(
+            f"tp={tp} needs {tp} devices but only {len(devices)} are visible "
+            "(emulate with XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+    return jax.make_mesh((1, tp), ("data", "model"), devices=devices[:tp])
+
+
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """The batch-sharding axes for this mesh ("pod" folds into DP)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

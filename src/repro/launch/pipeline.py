@@ -18,7 +18,6 @@ lowers and by tests on a host mesh.
 from __future__ import annotations
 
 import functools
-import inspect
 from typing import Any
 
 import jax
@@ -26,22 +25,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.launch.sharding import SHARD_MAP_NO_CHECK as _SHARD_MAP_NO_CHECK, shard_map as _shard_map
 from repro.models import transformer, zoo
 
 Array = jax.Array
-
-# jax >= 0.5 promotes shard_map to jax.shard_map and later renames
-# check_rep -> check_vma; probe the signature rather than the version
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-_SHARD_MAP_NO_CHECK = (
-    {"check_vma": False}
-    if "check_vma" in inspect.signature(_shard_map).parameters
-    else {"check_rep": False}
-)
 
 
 def stage_fn(cfg: ModelConfig, blocks: Any, h: Array, positions: Array) -> Array:

@@ -8,6 +8,12 @@ DynaTran runtime accuracy/throughput knob.
     # shared-prefix page caching and token streaming:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
         --continuous --prompts 16 --max-new 32 --adaptive-rho --stream
+
+    # tensor-parallel serving: shard the paged KV pools + attention over
+    # the mesh "model" axis (emulate a mesh on CPU with XLA_FLAGS):
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --continuous --tp 4 --prompts 16 --max-new 32
 """
 from __future__ import annotations
 
@@ -41,6 +47,7 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=8, help="[continuous] decode batch width")
     ap.add_argument("--page-size", type=int, default=16, help="[continuous] tokens per KV page")
     ap.add_argument("--prefill-chunk", type=int, default=16, help="[continuous] prompt tokens per prefill call")
+    ap.add_argument("--tp", type=int, default=1, help="[continuous] tensor-parallel shards over the mesh 'model' axis")
     ap.add_argument("--adaptive-rho", action="store_true", help="[continuous] close the rho loop over queue depth")
     ap.add_argument("--no-prefix-cache", action="store_true", help="[continuous] disable shared-prefix page caching")
     ap.add_argument("--kv-cache", default=None, choices=["bfloat16", "int8"], help="KV cache dtype override")
@@ -74,8 +81,16 @@ def main() -> None:
                 prefix_caching=not args.no_prefix_cache,
                 target_rho=args.target_rho,
                 adaptive_rho=args.adaptive_rho,
+                tp=args.tp,
             ),
         )
+        if args.tp > 1:
+            m0 = engine.metrics()
+            print(
+                f"[serve] tensor-parallel over {engine.mesh}: "
+                f"{m0['cache_bytes'] / 1e6:.2f} MB pool, "
+                f"{m0['cache_bytes_per_shard'] / 1e6:.2f} MB/shard"
+            )
         handles = [engine.submit(p, sampling=sampling) for p in prompts]
         if args.stream:
             print("[serve] streaming request 0: ", end="", flush=True)

@@ -32,6 +32,7 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import dataclasses
+import inspect
 import re
 from typing import Any
 
@@ -40,6 +41,20 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+
+# jax >= 0.5 promotes shard_map to jax.shard_map and later renames
+# check_rep -> check_vma; probe the signature rather than the version.
+# (Shared by pipeline parallelism and the tensor-parallel serve path.)
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map
+
+SHARD_MAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else {"check_rep": False}
+)
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +425,38 @@ def constrain(x: jax.Array, kind: str) -> jax.Array:
         return x
     fitted = fit_spec(tuple(x.shape), spec, ctx.mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, fitted))
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV pool sharding (the tensor-parallel serve path)
+# ---------------------------------------------------------------------------
+
+
+def paged_pool_spec(leaf, axis: str = "model") -> P:
+    """PartitionSpec for one paged-pool leaf, sharded on the KV-head dim.
+
+    K/V pools are [n_cycles, num_pages, P, Hkv, D] (bf16/f32 or int8 "q");
+    int8 absmax scale pools are [n_cycles, num_pages, P, Hkv].  Page ids are
+    shard-invariant — every shard holds the SAME pages for ITS heads — which
+    is what lets the host-side allocator/page tables stay global under TP.
+    """
+    if leaf.ndim == 5:
+        return P(None, None, None, axis, None)
+    if leaf.ndim == 4:
+        return P(None, None, None, axis)
+    raise ValueError(f"unexpected paged-pool leaf rank {leaf.ndim}")
+
+
+def paged_pool_specs(pools: Any, axis: str = "model") -> Any:
+    """Spec pytree matching ``pools`` (a PagedKV or any pool pytree)."""
+    return jax.tree_util.tree_map(lambda leaf: paged_pool_spec(leaf, axis), pools)
+
+
+def paged_pool_shardings(pools: Any, mesh: Mesh, axis: str = "model") -> Any:
+    """NamedSharding pytree for ``jax.device_put``-ing pools onto ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, paged_pool_spec(leaf, axis)), pools
+    )
 
 
 def logits_sharding(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int | None, strategy: Strategy | None = None) -> NamedSharding:

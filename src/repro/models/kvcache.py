@@ -247,6 +247,10 @@ class PrefixCache:
         self.lookups = 0
         self.hits = 0  # admissions that linked >= 1 cached page
         self.pages_shared = 0  # cumulative page links served (pages saved)
+        # pages linked MID-prefill (vLLM-style incremental sharing): a
+        # request still prefilling swaps/links pages a peer registered
+        # after its admission — same-tick bursts dedupe through this
+        self.relinked_pages = 0
 
     @property
     def cached_pages(self) -> int:
@@ -283,15 +287,17 @@ class PrefixCache:
             pages.append(page)
         return pages
 
-    def insert(self, tokens: list[int], pages: list[int]) -> int:
-        """Register ``pages`` (the owner's full-kind table, prefill complete)
+    def insert(self, tokens: list[int], pages: list[int], keys: list[bytes] | None = None) -> int:
+        """Register ``pages`` (a prefix of the owner's full-kind table —
+        pages COMPLETELY filled by prefill, registered as each one fills)
         as this prompt's page chain; existing entries are kept (first writer
-        wins — contents are identical by construction).  Returns the number
-        of newly cached pages."""
+        wins — contents are identical by construction).  ``keys`` passes
+        precomputed ``chain_keys`` (callers registering chunk-by-chunk
+        memoize them).  Returns the number of newly cached pages."""
         self._tick += 1
         added = 0
         parent: bytes | None = None
-        for i, key in enumerate(self.chain_keys(tokens)):
+        for i, key in enumerate(keys if keys is not None else self.chain_keys(tokens)):
             if i >= len(pages):
                 break
             if key in self._page:
@@ -341,6 +347,7 @@ class PrefixCache:
             "hits": self.hits,
             "hit_rate": self.hits / self.lookups if self.lookups else 0.0,
             "pages_shared": self.pages_shared,
+            "relinked_pages": self.relinked_pages,
             "cached_pages": self.cached_pages,
         }
 
@@ -438,6 +445,17 @@ class PagedKV:
         """Total pool bytes actually allocated (the memory-scaling bench)."""
         leaves = jax.tree_util.tree_leaves((self.k, self.v))
         return sum(x.size * x.dtype.itemsize for x in leaves)
+
+    def shard_bytes(self) -> int:
+        """Pool bytes resident on ONE device — ``bytes() / tp`` when the
+        pools are KV-head-sharded over a tensor-parallel mesh, equal to
+        ``bytes()`` unsharded (the per-shard memory claim the TP bench
+        asserts)."""
+        per_device: dict[int, int] = {}
+        for x in jax.tree_util.tree_leaves((self.k, self.v)):
+            for s in x.addressable_shards:
+                per_device[s.device.id] = per_device.get(s.device.id, 0) + s.data.size * x.dtype.itemsize
+        return max(per_device.values()) if per_device else 0
 
 
 def init_paged_pools(

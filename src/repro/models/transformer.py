@@ -402,6 +402,46 @@ def check_paged_support(cfg: ModelConfig) -> None:
         )
 
 
+# --- tensor parallelism over the KV-head dim --------------------------------
+#
+# The paged steps take ``tp=(axis_name, n_shards)`` when traced INSIDE a
+# ``shard_map`` over a mesh axis (see ``make_tp_paged_fns``).  The sharded
+# quantities are exactly the attention inner loop: each shard holds the page
+# pools for Hkv/n KV heads (page ids are shard-invariant), scatters its own
+# head-slice of the new K/V, gathers/attends over its pool shard, and the
+# per-head attention outputs are reassembled with an ``all_gather`` (pure
+# data movement).  Everything else — projections, norms, MLP, SSM side-state,
+# the LM head — is computed replicated, identically on every shard.
+#
+# Because attention is computed per (kv-head, group) slice with elementwise/
+# per-head ops, and the all_gather concatenates exact per-head results, the
+# TP step is BITWISE-identical to the single-device step: slicing the head
+# axis commutes with every op in the attention path.
+
+
+def _tp_slice_heads(tp: tuple[str, int] | None, q: Array, k1: Array, v1: Array):
+    """Slice q/k/v [B, S, H(kv), D] to this shard's contiguous head block.
+    GQA grouping is contiguous (head h belongs to kv head h // G), so equal
+    H and Hkv splits keep every query head with its KV head."""
+    if tp is None:
+        return q, k1, v1
+    ax, n = tp
+    idx = jax.lax.axis_index(ax)
+    hq, hkv = q.shape[2] // n, k1.shape[2] // n
+    q = jax.lax.dynamic_slice_in_dim(q, idx * hq, hq, axis=2)
+    k1 = jax.lax.dynamic_slice_in_dim(k1, idx * hkv, hkv, axis=2)
+    v1 = jax.lax.dynamic_slice_in_dim(v1, idx * hkv, hkv, axis=2)
+    return q, k1, v1
+
+
+def _tp_gather_heads(tp: tuple[str, int] | None, ao: Array) -> Array:
+    """Reassemble the full [B, S, H, D] attention output from per-shard head
+    blocks (concatenation only — no arithmetic, so exactness is preserved)."""
+    if tp is None:
+        return ao
+    return jax.lax.all_gather(ao, tp[0], axis=2, tiled=True)
+
+
 def paged_layout(cfg: ModelConfig, max_len: int, page_size: int, lookahead: int = 1) -> PagedLayout:
     """Static page-kind layout for this config at a serving shape.
     ``lookahead`` is the engine's multi-step decode window (ring budgets
@@ -510,6 +550,7 @@ def paged_decode_step(
     live: Array | None = None,  # [B] bool: rows with a decoding request
     taus=None,
     use_pallas: bool = False,
+    tp: tuple[str, int] | None = None,  # set when traced inside shard_map (see make_tp_paged_fns)
 ) -> tuple[Array, PagedKV, Any]:
     """One serve step against the paged cache: logits + updated pools (and
     updated SSM side-state for hybrid models).
@@ -518,6 +559,11 @@ def paged_decode_step(
     step: K/V writes of idle rows are trash-routed by their page tables,
     but the recurrent state has no such sink — without the mask a decode
     tick would corrupt the state of a slot whose request is mid-prefill.
+
+    With ``tp`` the pools passed in are per-shard (Hkv/n heads); the step
+    slices q/k/v to its head block, runs scatter/gather/attention on the
+    shard, and all-gathers the per-head attention outputs — bitwise-equal
+    to the unsharded step.
     """
     sparsity = cfg.sparsity
     h = params["embed"][tokens]
@@ -537,9 +583,11 @@ def paged_decode_step(
             table = tables[layout.slot_kinds[i]]
             ring = layout.slot_kinds[i] == "ring"
             _x, q, k1, v1 = _qkv(p, cfg, hh, positions, None)
+            q, k1, v1 = _tp_slice_heads(tp, q, k1, v1)
             kcache = entry_scatter_token(kc[str(i)], table, length, k1[:, 0], ring=ring)
             vcache = entry_scatter_token(vc[str(i)], table, length, v1[:, 0], ring=ring)
             ao = _paged_attention(cfg, layout, i, q, kcache, vcache, table, length, use_pallas=use_pallas)
+            ao = _tp_gather_heads(tp, ao)
             ao = site_prune(ao, "attn_out", sparsity, taus)
             attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
             if cfg.ssm_state:
@@ -583,6 +631,7 @@ def paged_prefill_chunk(
     ssm=None,
     fresh: Array | None = None,  # [B] bool: rows (re)starting prefill — their SSM state is zeroed
     taus=None,
+    tp: tuple[str, int] | None = None,  # set when traced inside shard_map (see make_tp_paged_fns)
 ) -> tuple[Array, PagedKV, Any]:
     """Batched prefill: one jitted call caches a chunk of C prompt tokens
     for EVERY row of an admission batch (rows live at their engine slots, so
@@ -618,6 +667,7 @@ def paged_prefill_chunk(
             table = tables[layout.slot_kinds[i]]
             ring = layout.slot_kinds[i] == "ring"
             _x, q, k1, v1 = _qkv(p, cfg, hh, positions, None)
+            q, k1, v1 = _tp_slice_heads(tp, q, k1, v1)
             if ring and c > 1:
                 # sliding-window chunk: attend to the PRE-chunk ring context
                 # (explicit per-entry absolute positions — ring order is
@@ -656,6 +706,7 @@ def paged_prefill_chunk(
                 k_read = entry_gather(kcache, table)
                 v_read = entry_gather(vcache, table)
                 ao = attn.chunk_decode_attention(q, k_read, v_read, start_len, logit_cap=cfg.attn_logit_cap)
+            ao = _tp_gather_heads(tp, ao)
             ao = site_prune(ao, "attn_out", sparsity, taus)
             attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
             if cfg.ssm_state:
@@ -687,3 +738,91 @@ def paged_prefill_chunk(
     logits = softcap(logits.astype(jnp.float32), cfg.final_logit_cap)
     logits = constrain(logits[:, 0], "logits_2d")
     return logits, PagedKV(k=ks, v=vs), ssms if cfg.ssm_state else None
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel paged steps: shard_map wrappers over the functions above.
+# The mesh "model" axis carries the KV-head shards of the page pools; the
+# host side (allocator, page tables, scheduler, prefix cache) stays global
+# because page ids are shard-invariant.
+# ---------------------------------------------------------------------------
+
+
+def check_tp_support(cfg: ModelConfig, n: int) -> None:
+    if cfg.kv_heads % n or cfg.heads % n:
+        raise ValueError(
+            f"tensor parallelism needs kv_heads ({cfg.kv_heads}) and heads "
+            f"({cfg.heads}) divisible by the shard count {n}"
+        )
+
+
+def make_tp_paged_fns(
+    cfg: ModelConfig, layout: PagedLayout, mesh, axis: str = "model", *, use_pallas: bool = False
+) -> dict:
+    """Build shard_map-wrapped decode/prefill/copy steps for serving over
+    ``mesh``'s ``axis`` (size n): pools arrive/leave sharded on their KV-head
+    dim, every other operand is replicated, and the math inside is
+    head-sliced so TP decode stays bitwise-identical to the single-device
+    step (see the tp notes on ``paged_decode_step``).
+
+    Returned callables mirror the unsharded signatures:
+
+    * ``decode(params, pools, tables, length, tokens, ssm, live, taus)``
+    * ``prefill(params, pools, tables, start, tokens, n_valid, ssm, fresh, taus)``
+    * ``copy(pools, kind, src, dst)``  (the COW page-fork path)
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import SHARD_MAP_NO_CHECK, paged_pool_specs, shard_map
+
+    n = mesh.shape[axis]
+    check_tp_support(cfg, n)
+    tp = (axis, n)
+
+    def decode(params, pools, tables, length, tokens, ssm, live, taus):
+        specs = paged_pool_specs(pools, axis)
+
+        def body(params, pools, tables, length, tokens, ssm, live, taus):
+            return paged_decode_step(
+                params, cfg, layout, pools, tables, length, tokens,
+                ssm=ssm, live=live, taus=taus, use_pallas=use_pallas, tp=tp,
+            )
+
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), specs, P(), P(), P(), P(), P(), P()),
+            out_specs=(P(), specs, P()),
+            **SHARD_MAP_NO_CHECK,
+        )
+        return f(params, pools, tables, length, tokens, ssm, live, taus)
+
+    def prefill(params, pools, tables, start, tokens, n_valid, ssm, fresh, taus):
+        specs = paged_pool_specs(pools, axis)
+
+        def body(params, pools, tables, start, tokens, n_valid, ssm, fresh, taus):
+            return paged_prefill_chunk(
+                params, cfg, layout, pools, tables, start, tokens, n_valid,
+                ssm=ssm, fresh=fresh, taus=taus, tp=tp,
+            )
+
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), specs, P(), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(), specs, P()),
+            **SHARD_MAP_NO_CHECK,
+        )
+        return f(params, pools, tables, start, tokens, n_valid, ssm, fresh, taus)
+
+    def copy(pools, kind, src, dst):
+        specs = paged_pool_specs(pools, axis)
+
+        def body(pools, src, dst):
+            return paged_copy_pages(layout, pools, kind, src, dst)
+
+        f = shard_map(
+            body, mesh=mesh, in_specs=(specs, P(), P()), out_specs=specs,
+            **SHARD_MAP_NO_CHECK,
+        )
+        return f(pools, src, dst)
+
+    return {"decode": decode, "prefill": prefill, "copy": copy}

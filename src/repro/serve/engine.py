@@ -192,6 +192,14 @@ class ContinuousServeConfig:
     # waste at most W-1 row-steps (their surplus tokens are discarded).
     decode_window: int = 1
     use_pallas: bool = False  # fused paged-attention kernel (interpret mode on CPU)
+    # tensor parallelism: shard the page pools, the paged gather/scatter,
+    # and attention along the KV-head dim over a device mesh's "model" axis
+    # (launch/mesh.make_serve_mesh).  The host-side scheduler/allocator/
+    # prefix cache stay global — page ids are shard-invariant — and TP
+    # decode is bitwise-identical to the single-device engine.  Requires
+    # cfg.kv_heads % tp == 0.  ``mesh`` overrides the default (1, tp) mesh.
+    tp: int = 1
+    mesh: Any = None
     # refcounted shared-prefix page cache.  Auto-disabled when the layout
     # has non-shareable state: ring pages (content depends on the sequence's
     # own write cursor) and hybrid SSM side-state are per-sequence; only
@@ -275,6 +283,26 @@ class ContinuousServeEngine:
         self.pools = tfm.init_paged_state(cfg, self.layout, num_pages)
         self.ssm = tfm.init_paged_ssm(cfg, scfg.slots)
 
+        # tensor parallelism: pools live KV-head-sharded on the mesh, the
+        # jitted steps route through shard_map wrappers; everything host-side
+        # (allocators, page tables, prefix cache, scheduler) is untouched
+        self.mesh = None
+        self._tp_fns = None
+        if scfg.tp > 1 or scfg.mesh is not None:
+            from repro.launch.mesh import make_serve_mesh
+            from repro.launch.sharding import paged_pool_shardings
+
+            self.mesh = scfg.mesh if scfg.mesh is not None else make_serve_mesh(scfg.tp)
+            tfm.check_tp_support(cfg, self.mesh.shape["model"])
+            self._tp_fns = tfm.make_tp_paged_fns(
+                cfg, self.layout, self.mesh, use_pallas=scfg.use_pallas
+            )
+            self.pools = jax.device_put(self.pools, paged_pool_shardings(self.pools, self.mesh))
+            if self.ssm is not None:  # hybrid side-state: replicated on the mesh
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                self.ssm = jax.device_put(self.ssm, NamedSharding(self.mesh, PartitionSpec()))
+
         sp: SparsityConfig = cfg.sparsity
         self._dynatran = sp.mode == "dynatran"
         self._sites = sp.sites
@@ -315,10 +343,7 @@ class ContinuousServeEngine:
 
         def body(carry, _):
             pools, ssm, lengths, toks, stp = carry
-            logits, pools, ssm = tfm.paged_decode_step(
-                self.params, self.cfg, self.layout, pools, tables, lengths, toks,
-                ssm=ssm, live=live, taus=taus, use_pallas=self.scfg.use_pallas,
-            )
+            logits, pools, ssm = self._step_decode(pools, ssm, tables, lengths, toks, live, taus)
             sliced = logits[..., : self.cfg.vocab]
             if sample:
                 nxt = sample_tokens(sliced, temps, top_ks, top_ps, seeds, stp)
@@ -331,14 +356,28 @@ class ContinuousServeEngine:
         )
         return pools, ssm, toks
 
+    def _step_decode(self, pools, ssm, tables, lengths, tokens, live, taus):
+        """One model step: the shard_map-wrapped TP path or the plain one."""
+        if self._tp_fns is not None:
+            return self._tp_fns["decode"](self.params, pools, tables, lengths, tokens, ssm, live, taus)
+        return tfm.paged_decode_step(
+            self.params, self.cfg, self.layout, pools, tables, lengths, tokens,
+            ssm=ssm, live=live, taus=taus, use_pallas=self.scfg.use_pallas,
+        )
+
+    def _step_prefill(self, pools, ssm, tables, start, tokens, n_valid, fresh, taus):
+        if self._tp_fns is not None:
+            return self._tp_fns["prefill"](self.params, pools, tables, start, tokens, n_valid, ssm, fresh, taus)
+        return tfm.paged_prefill_chunk(
+            self.params, self.cfg, self.layout, pools, tables, start, tokens, n_valid,
+            ssm=ssm, fresh=fresh, taus=taus,
+        )
+
     def _prefill_impl(
         self, pools, ssm, tables, start, tokens, n_valid, fresh, taus,
         temps, top_ks, top_ps, seeds, *, sample: bool,
     ):
-        logits, pools, ssm = tfm.paged_prefill_chunk(
-            self.params, self.cfg, self.layout, pools, tables, start, tokens, n_valid,
-            ssm=ssm, fresh=fresh, taus=taus,
-        )
+        logits, pools, ssm = self._step_prefill(pools, ssm, tables, start, tokens, n_valid, fresh, taus)
         sliced = logits[..., : self.cfg.vocab]
         if sample:  # a request's FIRST token is sampled at step index 0
             next_tok = sample_tokens(sliced, temps, top_ks, top_ps, seeds, jnp.zeros_like(start))
@@ -347,6 +386,8 @@ class ContinuousServeEngine:
         return pools, ssm, next_tok
 
     def _copy_impl(self, pools, src, dst):
+        if self._tp_fns is not None:
+            return self._tp_fns["copy"](pools, "full", src, dst)
         return tfm.paged_copy_pages(self.layout, pools, "full", src, dst)
 
     # --- runtime DynaTran knob -------------------------------------------
@@ -455,6 +496,8 @@ class ContinuousServeEngine:
         out["peak_pages_in_use"] = self._peak_pages_in_use
         out["prefix_cache"] = self.prefix_cache.stats() if self.prefix_cache else None
         out["cache_bytes"] = self.pools.bytes()
+        out["cache_bytes_per_shard"] = self.pools.shard_bytes()
+        out["tp"] = self.mesh.shape["model"] if self.mesh is not None else 1
         out["queue_depth"] = self.sched.queue_depth
         return out
 
@@ -503,6 +546,14 @@ class ContinuousServeEngine:
         """One jitted call caches a chunk for EVERY admitted prompt; rows
         live at their engine slots so hybrid SSM state stays aligned.
         Shared-prefix rows start at their first uncached position."""
+        # incremental sharing (vLLM-style): link pages peers registered
+        # since admission — a same-tick burst of identical prompts dedupes
+        # here, mid-wave, instead of prefilling every copy to completion
+        for req in reqs:
+            self.sched.refresh_prefix(req)
+        reqs = [r for r in reqs if not r.ready]  # fully-cached replay: straight to decode
+        if not reqs:
+            return []
         b, c = self.scfg.slots, self.scfg.prefill_chunk
         toks = np.zeros((b, c), np.int32)
         starts = np.zeros((b,), np.int32)
@@ -531,10 +582,10 @@ class ContinuousServeEngine:
             took = int(nv[req.slot])
             req.prefill_pos += took
             req.cache_len = req.prefill_pos
+            self.sched.register_prefix(req)  # pages -> cache as each fills
             if req.prefill_pos < len(req.replay):
                 continue
             req.ready = True
-            self.sched.register_prefix(req)  # complete prompt pages -> cache
             if req.generated:  # re-admitted after eviction: resume, don't resample
                 req.pending_token = req.generated[-1]
                 continue

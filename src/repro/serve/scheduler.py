@@ -371,17 +371,105 @@ class ContinuousScheduler:
             self._drop_pages(req)
 
     def register_prefix(self, req: Request) -> int:
-        """Offer ``req``'s freshly prefilled complete prompt pages to the
-        prefix cache (engine calls this when prefill finishes).  Only pages
-        holding exclusively prompt positions are cacheable — the partial
-        tail page (written by later prefill/decode steps) never is."""
+        """Offer ``req``'s complete freshly prefilled prompt pages to the
+        prefix cache.  The engine calls this after EVERY prefill chunk
+        (vLLM-style): a page is registered the moment its last prompt token
+        lands, so peers still mid-prefill — including requests admitted in
+        the same tick — can link it via ``refresh_prefix`` instead of
+        computing their own copy.  Only pages holding exclusively prompt
+        positions are cacheable — the partial tail page (written by later
+        prefill/decode steps) never is."""
         if self.prefix_cache is None:
             return 0
-        n = len(req.prompt) // self.page_size
+        n = min(req.prefill_pos, len(req.prompt)) // self.page_size
         table = req.tables.get("full", [])
         if n == 0 or len(table) < n:
             return 0
-        return self.prefix_cache.insert(req.prompt, table[:n])
+        if req._prefix_keys is None:
+            req._prefix_keys = self.prefix_cache.chain_keys(req.prompt)
+        return self.prefix_cache.insert(req.prompt, table[:n], keys=req._prefix_keys)
+
+    def refresh_prefix(self, req: Request) -> None:
+        """Mid-prefill cache re-check (the other half of incremental
+        registration): link pages that peers registered AFTER ``req``'s
+        admission, deduping identical prompts inside a single admission
+        wave.  Two moves, both exact (the cache only runs with fixed taus):
+
+        * pages this request has fully written swap to their cached twins
+          — the content is bit-identical by construction, so the private
+          copy is freed immediately;
+        * cached pages covering positions NOT yet prefilled are linked and
+          prefill skips ahead; the boundary page (the next write lands in
+          it) is forked copy-on-write first, so no shared page is written.
+        """
+        if self.prefix_cache is None or req.slot is None or req.ready:
+            return
+        table = req.tables.get("full")
+        if not table:
+            return
+        if req._prefix_keys is None:
+            req._prefix_keys = self.prefix_cache.chain_keys(req.prompt)
+        pages = self.prefix_cache.lookup_keys(req._prefix_keys)
+        if not pages:
+            return
+        alloc = self.allocators["full"]
+        p = self.page_size
+        relinked = 0
+
+        def swap(i: int) -> int:
+            if table[i] == pages[i]:
+                return 0
+            alloc.share(req.rid, [pages[i]])
+            alloc.release(req.rid, table[i])
+            table[i] = pages[i]
+            return 1
+
+        cur = req.prefill_pos // p
+        # fully-written pages: never written again (full tables are
+        # append-only), so swapping to the cached twin is unconditionally safe
+        for i in range(min(len(pages), cur, len(table))):
+            relinked += swap(i)
+        # skip-ahead: cached pages covering unprefilled positions.  A fresh
+        # request still recomputes its LAST prompt token (the engine needs
+        # its logits for the first generated token), mirroring admission.
+        cap = len(req.replay) if req.generated else len(req.prompt) - 1
+        new_pos = min(len(pages) * p, cap)
+        if new_pos > req.prefill_pos:
+            bp = new_pos // p  # boundary page: the next write lands here
+            # pin the chain segment about to be linked/copied: the fork
+            # allocation below may reclaim prefix-cache entries under pool
+            # pressure, and a reclaimed entry of THIS chain would otherwise
+            # free the very pages we hold only by lookup
+            pinned = pages[cur : min(bp + 1, len(pages))]
+            for pg in pinned:
+                alloc.retain(pg)
+            try:
+                if bp < len(pages) and bp < len(table):
+                    # it must carry the cached content up to ``new_pos`` but
+                    # will be written from there on: fork, don't share
+                    fresh = self._alloc_pages("full", req.rid, 1)
+                    if fresh is None:  # pool dry: keep prefilling normally
+                        return
+                    self.pending_copies.append((pages[bp], fresh[0]))
+                    alloc.release(req.rid, table[bp])
+                    table[bp] = fresh[0]
+                    relinked += 1
+                for i in range(cur, min(bp, len(table))):
+                    relinked += swap(i)
+            finally:
+                for pg in pinned:
+                    alloc.drop(pg)
+                if relinked:
+                    self.prefix_cache.relinked_pages += relinked
+                    relinked = 0
+            req.prefill_pos = new_pos
+            req.cache_len = new_pos
+            req.shared_tokens = max(req.shared_tokens, new_pos)
+            req.ready = new_pos >= len(req.replay)
+            if req.ready:  # fully-cached replay: resume decode directly
+                req.pending_token = req.generated[-1]
+        if relinked:
+            self.prefix_cache.relinked_pages += relinked
 
     def prefill_candidates(self) -> list[Request]:
         """Active requests with replay tokens left to cache, oldest first —

@@ -179,13 +179,19 @@ def simulate_engine_step(s: ContinuousScheduler, req: Request, draw_tokens=None)
     """Drive one request the way the engine does: prefill chunks until the
     replay is cached (registering the prompt prefix), then grow + decode."""
     if not req.ready:
+        # incremental sharing, as the engine does it: re-check the cache
+        # mid-prefill (may swap/link pages or skip ahead), then register
+        # complete prompt pages as each chunk fills them
+        s.refresh_prefix(req)
+        if req.ready:
+            return
         assert_write_range_private(s, req)
         took = min(4, len(req.replay) - req.prefill_pos)
         req.prefill_pos += took
         req.cache_len = req.prefill_pos
+        s.register_prefix(req)
         if req.prefill_pos >= len(req.replay):
             req.ready = True
-            s.register_prefix(req)
             if not req.generated:
                 req.generated.append(draw_tokens() if draw_tokens else 1)
     else:

@@ -316,6 +316,97 @@ class TestPrefixCache:
         )
         assert cfg.ssm_state and not eng.prefix_caching and eng.prefix_cache is None
 
+    def test_same_wave_burst_dedupes_mid_prefill(self, setup):
+        """A COLD same-tick burst of identical prompts: pages register as
+        each fills and peers relink them mid-prefill (vLLM-style), so the
+        wave holds fewer pages at prefill completion than the uncached run
+        while emitting identical tokens."""
+        cfg, params, _ = setup
+        rng = np.random.default_rng(7)
+        system = rng.integers(1, cfg.vocab, size=16).tolist()  # 4 full pages
+        tails = [rng.integers(1, cfg.vocab, size=2).tolist() for _ in range(4)]
+        runs = {}
+        for caching in (False, True):
+            eng = make_engine(cfg, params, slots=4, prefix_caching=caching)
+            reqs = [eng.submit(system + t, max_new_tokens=4) for t in tails]
+            at_ready = None
+            for _ in range(10_000):
+                if all(r.done for r in reqs):
+                    break
+                eng.step()
+                if at_ready is None and all(r.ready or r.done for r in reqs):
+                    a = eng.allocators["full"]
+                    at_ready = a.num_pages - 1 - a.free_pages
+            runs[caching] = ([r.generated for r in reqs], at_ready, eng)
+        assert runs[True][0] == runs[False][0]
+        assert runs[True][1] < runs[False][1]
+        assert runs[True][2].metrics()["prefix_cache"]["relinked_pages"] > 0
+
+    def test_refresh_skip_ahead_forks_boundary_page(self, setup):
+        """Scheduler-level anchor for ``refresh_prefix``: a mid-prefill
+        request whose whole (page-aligned) prompt got cached by a peer
+        links the chain, skips prefill to the last prompt token, and forks
+        the boundary page (device copy queued) instead of sharing it."""
+        from repro.models.kvcache import PageAllocator, PrefixCache
+        from repro.serve.scheduler import ContinuousScheduler, Request
+
+        alloc = PageAllocator(8, PAGE)
+        cache = PrefixCache(alloc)
+        s = ContinuousScheduler(2, {"full": alloc}, {"full": 8}, 64, prefix_cache=cache)
+        prompt = list(range(100, 108))  # exactly 2 pages
+        chain = alloc.alloc(99, 2)
+        cache.insert(prompt, chain)
+        alloc.free(99)  # peer finished; pages survive via retention refs
+        req = Request(rid=1, prompt=prompt, max_new_tokens=1)
+        s.submit(req)
+        assert s.admit_ready() == [req]  # links the chain at admission...
+        s.evict(req)
+        cache_before = cache.cached_pages
+        # ...so rebuild a mid-prefill request that MISSED the cache: fresh
+        # pages, prefill_pos 0, as if admitted before the peer registered
+        req2 = Request(rid=2, prompt=prompt, max_new_tokens=1)
+        req2.slot = 0
+        s.active[0] = req2
+        req2.tables["full"] = alloc.alloc(2, 3)
+        s.refresh_prefix(req2)
+        assert req2.prefill_pos == len(prompt) - 1  # skipped to the last token
+        assert req2.tables["full"][0] == chain[0]  # linked page 0
+        assert req2.tables["full"][1] != chain[1]  # boundary page forked
+        assert (chain[1], req2.tables["full"][1]) in s.pending_copies
+        assert all(src != dst for src, dst in s.pending_copies)
+        assert cache.cached_pages == cache_before  # fork never consumed the chain
+
+    def test_refresh_fork_under_pool_pressure_aborts_cleanly(self, setup):
+        """Pool dry at the boundary fork: the chain segment is PINNED while
+        ``_alloc_pages`` reclaims cache entries, so reclaim can never free
+        (or hand out as the fork destination) a page refresh is about to
+        link or copy from — the skip aborts, books stay balanced."""
+        from repro.models.kvcache import PageAllocator, PrefixCache
+        from repro.serve.scheduler import ContinuousScheduler, Request
+
+        alloc = PageAllocator(7, PAGE)  # trash + 6 usable
+        cache = PrefixCache(alloc)
+        s = ContinuousScheduler(2, {"full": alloc}, {"full": 8}, 64, prefix_cache=cache)
+        prompt = list(range(100, 108))
+        chain = alloc.alloc(99, 2)
+        cache.insert(prompt, chain)
+        alloc.free(99)
+        req = Request(rid=1, prompt=prompt, max_new_tokens=1)
+        req.slot = 0
+        s.active[0] = req
+        req.tables["full"] = alloc.alloc(1, 3)
+        alloc.alloc(2, alloc.free_pages)  # a peer holds every remaining page
+        assert alloc.free_pages == 0
+        s.refresh_prefix(req)
+        # the fork could not allocate: no skip, prefill continues normally,
+        # and nothing points at a freed page
+        assert req.prefill_pos == 0 and not req.ready
+        assert all(src != dst for src, dst in s.pending_copies)
+        owned = set(req.tables["full"])
+        assert all(alloc.refcount(pg) >= 1 for pg in owned)
+        # conservation: every page is either free or has a live reference
+        assert len(alloc.allocated) + alloc.free_pages == alloc.num_pages - 1
+
     def test_int8_pages_are_shareable(self, setup):
         """int8 quantisation is per-position, so quantised prefix pages are
         still a pure function of the token prefix — shareable, and token
