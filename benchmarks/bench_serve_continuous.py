@@ -295,6 +295,101 @@ def _run_prefix_section(quick: bool) -> dict:
     }
 
 
+def _run_families_section(quick: bool) -> dict:
+    """The DecodeState-registry families (ISSUE 5): rwkv6 decodes through
+    pure slot-dense recurrent state (no pages at all — state bytes flat in
+    max_len, asserted) and whisper serves with slot-dense encoder cross-KV
+    plus paged decoder self-KV.  Both must emit tokens identical to their
+    dense-state replay; rwkv6 tokens/s is additionally gated as a ratio vs
+    the same run's slot-granularity engine."""
+    from repro import configs as cfg_registry
+    from repro.models import whisper as whisper_mod
+
+    out = {}
+
+    # --- rwkv6: slot-dense recurrent state ---------------------------------
+    cfg = cfg_registry.get_smoke("rwkv6-7b")
+    params = zoo.init_params(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(5)
+    n_req = 6 if quick else 16
+    new_tokens = 12 if quick else 24
+    requests = [(rng.integers(1, cfg.vocab, size=8).tolist(), new_tokens) for _ in range(n_req)]
+    useful = sum(new for _, new in requests)
+
+    base1 = ServeEngine(cfg, params, ServeConfig(slots=1, max_len=96))
+    want = [base1.generate([p], max_new_tokens=new)[0] for p, new in requests[:3]]
+    eng1 = ContinuousServeEngine(
+        cfg, params, ContinuousServeConfig(slots=1, max_len=96, page_size=8, prefill_chunk=1)
+    )
+    got = [eng1.generate([p], max_new_tokens=new)[0] for p, new in requests[:3]]
+    rwkv_match = want == got
+
+    slot_eng = ServeEngine(cfg, params, ServeConfig(slots=4, max_len=96))
+    slot_eng.generate([p for p, _ in requests[:4]], max_new_tokens=2)  # jit warmup
+    _, _, slot_wall = _run_baseline(slot_eng, requests, slots=4)
+
+    eng = ContinuousServeEngine(
+        cfg, params, ContinuousServeConfig(slots=4, max_len=96, page_size=8, prefill_chunk=8)
+    )
+    eng.generate([p for p, _ in requests[:4]], max_new_tokens=2)  # jit warmup
+    eng.clear_history()
+    t0 = time.perf_counter()
+    for p, new in requests:
+        eng.submit(p, max_new_tokens=new)
+    eng.run_until_complete()
+    wall = time.perf_counter() - t0
+
+    # the O(1)-per-slot memory claim: no pages, slot bytes flat in max_len
+    small = ContinuousServeEngine(cfg, params, ContinuousServeConfig(slots=4, max_len=96, page_size=8))
+    large = ContinuousServeEngine(cfg, params, ContinuousServeConfig(slots=4, max_len=768, page_size=8))
+    flat = small.state_bytes() == large.state_bytes() and small.state_bytes()["paged"] == 0
+    out["rwkv6"] = {
+        "tokens_match_dense": rwkv_match,
+        "state_bytes_flat_in_max_len": flat,
+        "state_bytes": small.state_bytes(),
+        "tok_per_s": useful / wall,
+        "slot_tok_per_s": useful / slot_wall,
+    }
+
+    # --- whisper: slot-dense cross-KV + paged self-KV ----------------------
+    wcfg = cfg_registry.get_smoke("whisper-tiny")
+    wparams = zoo.init_params(jax.random.PRNGKey(6), wcfg)
+    wrng = np.random.default_rng(6)
+    w_req = [(wrng.integers(1, wcfg.vocab, size=8).tolist(), new_tokens) for _ in range(n_req)]
+    frames = [
+        wrng.standard_normal((wcfg.encoder_frames, wcfg.d_model)).astype(np.float32)
+        for _ in w_req
+    ]
+
+    w_want = [
+        whisper_mod.dense_reference_decode(wparams, wcfg, p, f, new, 96)
+        for (p, new), f in zip(w_req[:3], frames[:3])
+    ]
+    weng1 = ContinuousServeEngine(
+        wcfg, wparams, ContinuousServeConfig(slots=1, max_len=96, page_size=8, prefill_chunk=1)
+    )
+    w_got = weng1.generate(
+        [p for p, _ in w_req[:3]], max_new_tokens=new_tokens,
+        inputs=[{"frames": f} for f in frames[:3]],
+    )
+    weng = ContinuousServeEngine(
+        wcfg, wparams, ContinuousServeConfig(slots=4, max_len=96, page_size=8, prefill_chunk=8)
+    )
+    t0 = time.perf_counter()
+    reqs = [weng.submit(p, max_new_tokens=new, inputs={"frames": f})
+            for (p, new), f in zip(w_req, frames)]
+    weng.run_until_complete()
+    w_wall = time.perf_counter() - t0
+    out["whisper"] = {
+        "tokens_match_dense": w_got == w_want,
+        "allocator_drained": all(a.free_pages == a.num_pages - 1 for a in weng.allocators.values()),
+        "state_bytes": weng.state_bytes(),
+        "tok_per_s": sum(new for _, new in w_req) / w_wall,
+    }
+    assert all(len(r.generated) == new_tokens for r in reqs)
+    return out
+
+
 def _request_mix(n: int, prompt_len: int, short_new: int, long_new: int, rng) -> list[tuple[list[int], int]]:
     """75% short / 25% long generations, shuffled so waves mix both."""
     reqs = []
@@ -382,12 +477,14 @@ def run(quick: bool = False) -> dict:
     ring = _run_ring_section(quick)
     prefix = _run_prefix_section(quick)
     tp = _run_tp_section(quick)
+    families = _run_families_section(quick)
 
     speedup = (useful / c_wall) / (useful / b_wall)
     result = {
         "ring": ring,
         "prefix_cache": prefix,
         "tp": tp,
+        "families": families,
         "requests": n_req,
         "useful_tokens": useful,
         "baseline": {
@@ -441,6 +538,19 @@ def run(quick: bool = False) -> dict:
             for s in tp["scaling"]
         )
         print(f"  tp         : bitwise {tp['bitwise_identical_tp']} | {scale_str}")
+    rw, wh = families["rwkv6"], families["whisper"]
+    print(
+        f"  rwkv6      : {rw['tok_per_s']:7.1f} tok/s (slot engine {rw['slot_tok_per_s']:.1f}) | "
+        f"tokens match dense: {rw['tokens_match_dense']} | "
+        f"state bytes flat in max_len: {rw['state_bytes_flat_in_max_len']} "
+        f"({rw['state_bytes']['slot'] / 1e3:.1f} kB slot-dense, 0 paged)"
+    )
+    print(
+        f"  whisper    : {wh['tok_per_s']:7.1f} tok/s | tokens match dense: {wh['tokens_match_dense']} | "
+        f"drained: {wh['allocator_drained']} | "
+        f"cross-KV {wh['state_bytes']['slot'] / 1e3:.1f} kB slot-dense + "
+        f"{wh['state_bytes']['paged'] / 1e3:.1f} kB paged self-KV"
+    )
     save("serve_continuous", result)
     if not bitwise:
         raise AssertionError("paged decode diverged from dense-KV reference at rho=0")
@@ -469,6 +579,14 @@ def run(quick: bool = False) -> dict:
         for s in tp["scaling"]:
             if not s["shard_bytes_exact"]:
                 raise AssertionError(f"tp={s['tp']}: per-shard pool bytes != total/N")
+    if not rw["tokens_match_dense"]:
+        raise AssertionError("rwkv6 continuous decode diverged from the dense-state replay")
+    if not rw["state_bytes_flat_in_max_len"]:
+        raise AssertionError("rwkv6 decode-state bytes grew with max_len — slot-dense state is not O(1)/slot")
+    if not wh["tokens_match_dense"]:
+        raise AssertionError("whisper continuous decode diverged from the dense-state replay")
+    if not wh["allocator_drained"]:
+        raise AssertionError("whisper allocator did not drain after run_until_complete")
     if not quick and speedup < 1.5:
         raise AssertionError(f"continuous batching speedup {speedup:.2f}x < 1.5x target")
     return result

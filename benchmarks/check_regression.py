@@ -40,6 +40,11 @@ PARITY_FLAGS = [
     ("prefix_tokens_identical", ("prefix_cache", "tokens_identical_to_uncached")),
     ("prefix_drained", ("prefix_cache", "allocator_drained_at_shutdown")),
     ("burst_tokens_identical", ("prefix_cache", "burst_tokens_identical")),
+    # DecodeState families (ISSUE 5): slot-dense state correctness claims
+    ("rwkv6_tokens_match_dense", ("families", "rwkv6", "tokens_match_dense")),
+    ("rwkv6_state_bytes_flat", ("families", "rwkv6", "state_bytes_flat_in_max_len")),
+    ("whisper_tokens_match_dense", ("families", "whisper", "tokens_match_dense")),
+    ("whisper_drained", ("families", "whisper", "allocator_drained")),
 ]
 
 
@@ -66,6 +71,12 @@ def throughput_ratios(result: dict) -> dict:
         out["prefix_vs_slot"] = prefix / base
     for s in _get(result, ("tp", "scaling"), ()) or ():
         out[f"tp{s['tp']}_vs_slot"] = s["tok_per_s"] / base
+    # rwkv6 normalises against ITS OWN slot-granularity run (a different
+    # model than the main section's engine pair)
+    rwkv = _get(result, ("families", "rwkv6", "tok_per_s"))
+    rwkv_slot = _get(result, ("families", "rwkv6", "slot_tok_per_s"))
+    if rwkv and rwkv_slot:
+        out["rwkv6_vs_slot"] = rwkv / rwkv_slot
     return {k: v for k, v in out.items() if v is not None}
 
 

@@ -29,9 +29,39 @@ from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine, Ser
 from repro.serve.sampling import SamplingParams
 
 
+def _continuous_supported() -> list[str]:
+    """Archs the continuous engine serves, derived from the decode-state
+    registry (a family is supported iff its module declares a state
+    bundle) — never a hand-maintained list."""
+    out = []
+    for arch in configs.list_archs():
+        try:
+            zoo.check_serve_support(configs.get_smoke(arch))
+            out.append(arch)
+        except NotImplementedError:
+            pass
+    return out
+
+
+def _synth_inputs(cfg, bundle, rng) -> dict:
+    """Synthesize the per-request inputs the state bundle declares (the
+    smoke CLI has no real frontend, mirroring the random prompts)."""
+    ins = {}
+    for name in bundle.required_inputs:
+        if name == "frames":
+            ins[name] = rng.standard_normal((cfg.encoder_frames, cfg.d_model)).astype(np.float32)
+        else:
+            raise SystemExit(f"serve CLI cannot synthesize required input '{name}'")
+    return ins
+
+
 def main() -> None:
+    supported = _continuous_supported()
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument(
+        "--arch", required=True, choices=configs.list_archs(),
+        help=f"model architecture (continuous serving covers: {', '.join(supported)})",
+    )
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -54,8 +84,16 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
-    if cfg.family in ("vlm", "audio"):
-        raise SystemExit(f"{args.arch}: serve CLI drives the LM path; use examples/ for frontend stubs")
+    try:
+        zoo.check_serve_support(cfg)
+    except NotImplementedError as e:
+        raise SystemExit(f"{args.arch}: {e} (supported here: {', '.join(supported)})")
+    bundle = zoo.serve_module(cfg).serve_state_bundle(cfg)
+    if bundle.required_inputs and not args.continuous:
+        raise SystemExit(
+            f"{args.arch}: its state bundle needs per-request inputs "
+            f"{list(bundle.required_inputs)} — serve it with --continuous"
+        )
     if args.kv_cache:
         import dataclasses
 
@@ -68,22 +106,26 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab, size=args.prompt_len).tolist() for _ in range(args.prompts)]
+    req_inputs = [_synth_inputs(cfg, bundle, rng) for _ in range(args.prompts)]
     t0 = time.perf_counter()
     if args.continuous:
-        engine = ContinuousServeEngine(
-            cfg,
-            params,
-            ContinuousServeConfig(
-                slots=min(args.slots, args.prompts),
-                max_len=args.max_len,
-                page_size=args.page_size,
-                prefill_chunk=args.prefill_chunk,
-                prefix_caching=not args.no_prefix_cache,
-                target_rho=args.target_rho,
-                adaptive_rho=args.adaptive_rho,
-                tp=args.tp,
-            ),
-        )
+        try:
+            engine = ContinuousServeEngine(
+                cfg,
+                params,
+                ContinuousServeConfig(
+                    slots=min(args.slots, args.prompts),
+                    max_len=args.max_len,
+                    page_size=args.page_size,
+                    prefill_chunk=args.prefill_chunk,
+                    prefix_caching=not args.no_prefix_cache,
+                    target_rho=args.target_rho,
+                    adaptive_rho=args.adaptive_rho,
+                    tp=args.tp,
+                ),
+            )
+        except NotImplementedError as e:  # e.g. --tp on a slot-dense-only family
+            raise SystemExit(f"{args.arch}: {e}")
         if args.tp > 1:
             m0 = engine.metrics()
             print(
@@ -91,7 +133,7 @@ def main() -> None:
                 f"{m0['cache_bytes'] / 1e6:.2f} MB pool, "
                 f"{m0['cache_bytes_per_shard'] / 1e6:.2f} MB/shard"
             )
-        handles = [engine.submit(p, sampling=sampling) for p in prompts]
+        handles = [engine.submit(p, sampling=sampling, inputs=ins) for p, ins in zip(prompts, req_inputs)]
         if args.stream:
             print("[serve] streaming request 0: ", end="", flush=True)
             for tok in handles[0].tokens():

@@ -459,6 +459,24 @@ def paged_pool_shardings(pools: Any, mesh: Mesh, axis: str = "model") -> Any:
     )
 
 
+def state_shardings(kind: Any, tree: Any, mesh: Mesh, axis: str = "model") -> Any:
+    """Mesh placement for ONE decode-state component, derived from the
+    state-kind registry (``repro.models.kvcache.STATE_KINDS``): kinds with
+    ``tp == "kv_heads"`` (page pools) shard per KV head on ``axis``; kinds
+    with ``tp == "replicated"`` (slot-dense SSM / rwkv / cross-KV state)
+    ride whole on every shard.  ``kind`` is a ``StateKind`` or its registry
+    name.  New state kinds get TP placement here, not in the engine."""
+    if isinstance(kind, str):
+        from repro.models.kvcache import STATE_KINDS  # function-level: models imports this module
+
+        kind = STATE_KINDS[kind]
+    if kind.tp == "kv_heads":
+        return paged_pool_shardings(tree, mesh, axis)
+    if kind.tp == "replicated":
+        return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+    raise ValueError(f"state kind {kind.name!r}: unknown tp spec {kind.tp!r}")
+
+
 def logits_sharding(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int | None, strategy: Strategy | None = None) -> NamedSharding:
     S = strategy or make_strategy("tp_sp", mesh)
     rules = _act_rules(S)

@@ -63,6 +63,118 @@ def cache_bytes(layers: int, batch: int, max_len: int, n_kv: int, head_dim: int,
 
 
 # ---------------------------------------------------------------------------
+# Decode-state KINDS: the registry behind the serving stack's DecodeState
+# abstraction.  Every per-sequence quantity a model carries between decode
+# steps is an instance of one registered kind, and the serve layers (engine,
+# scheduler, TP sharding, CLI) iterate over a model's declared *bundle* of
+# kinds instead of hard-coding "page pools + optional SSM side-state".
+#
+# A kind answers the four questions the serving stack asks of any state:
+#
+# * alloc/release (host side) — ``paged`` kinds are backed by a
+#   ``PageAllocator`` + per-request page tables (``page_kind`` names the
+#   allocator: "full" or "ring"); slot-dense kinds are allocated by slot
+#   assignment itself (the scheduler's slot IS the allocation, O(1)/seq).
+# * scatter/gather (jitted) — paged kinds route through the entry_* pool
+#   ops below; slot-dense kinds index their dense per-slot arrays directly
+#   inside the family's paged_decode_step / paged_prefill_chunk.
+# * share? (``shareable``) — prefix-cache eligibility: is the state a pure
+#   per-position function of the token prefix?  Full-attention pages (bf16
+#   AND int8 — quantisation is per-position) are; ring pages (content
+#   depends on the write cursor), recurrent SSM state, and encoder cross-KV
+#   (depends on per-request frames) are not.  The engine enables prefix
+#   caching only when EVERY kind in the bundle is shareable.
+# * shard_spec (TP) — how the kind's device arrays shard over the mesh
+#   "model" axis: "kv_heads" (page pools split per KV head, page ids
+#   shard-invariant) or "replicated" (slot-dense state is tiny and rides
+#   whole on every shard).  launch/sharding.py maps this to PartitionSpecs.
+#
+# Adding a state kind (MoE expert caches, multimodal encoder caches, ...)
+# is a registry entry plus a family bundle declaration — not an engine
+# rewrite.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StateKind:
+    """One registered kind of per-sequence decode state."""
+
+    name: str
+    paged: bool  # PageAllocator-backed (vs slot-dense)
+    shareable: bool  # prefix-cache eligible (pure function of the prefix)
+    tp: str  # "kv_heads" | "replicated" — launch/sharding.py maps to specs
+    page_kind: str | None = None  # allocator key for paged kinds
+
+
+STATE_KINDS: dict[str, StateKind] = {}
+
+
+def register_state_kind(kind: StateKind) -> StateKind:
+    if kind.paged and kind.page_kind is None:
+        raise ValueError(f"paged state kind {kind.name!r} needs a page_kind")
+    STATE_KINDS[kind.name] = kind
+    return kind
+
+
+register_state_kind(StateKind("paged-full", paged=True, shareable=True, tp="kv_heads", page_kind="full"))
+register_state_kind(StateKind("paged-int8", paged=True, shareable=True, tp="kv_heads", page_kind="full"))
+register_state_kind(StateKind("paged-ring", paged=True, shareable=False, tp="kv_heads", page_kind="ring"))
+# slot-dense recurrent state: hymba's Mamba side-state and rwkv6's
+# wkv/token-shift state — O(1) per sequence, reset/replayed at admission
+register_state_kind(StateKind("slot-ssm", paged=False, shareable=False, tp="replicated"))
+# slot-dense encoder cross-attention KV (whisper): computed ONCE at
+# admission from the request's frames, read-only thereafter
+register_state_kind(StateKind("slot-cross", paged=False, shareable=False, tp="replicated"))
+
+
+@dataclasses.dataclass(frozen=True)
+class StateComponent:
+    """One named component of a model's decode state (name keys the device
+    pytree; kind keys the registry)."""
+
+    name: str
+    kind: str
+
+    @property
+    def state_kind(self) -> StateKind:
+        return STATE_KINDS[self.kind]
+
+
+@dataclasses.dataclass(frozen=True)
+class StateBundle:
+    """A model family's declared per-sequence decode state: what the serve
+    stack iterates over instead of hard-coding storage classes.
+
+    ``required_inputs`` names per-request inputs beyond the prompt (e.g.
+    whisper's encoder ``frames``); ``admit_compute`` marks bundles whose
+    slot-dense state is computed once at admission (the engine runs the
+    family's ``admit_slot`` hook for every admitted request).
+    """
+
+    components: tuple[StateComponent, ...]
+    required_inputs: tuple[str, ...] = ()
+    admit_compute: bool = False
+
+    def kinds(self) -> list[StateKind]:
+        return [c.state_kind for c in self.components]
+
+    @property
+    def paged(self) -> bool:
+        return any(k.paged for k in self.kinds())
+
+    @property
+    def shareable(self) -> bool:
+        """Prefix-cache eligibility of the WHOLE bundle: there must be
+        shareable pages to link, and no component may carry per-sequence
+        state a cached page cannot reproduce."""
+        kinds = self.kinds()
+        return any(k.paged for k in kinds) and all(k.shareable for k in kinds)
+
+    def describe(self) -> str:
+        return " + ".join(c.kind for c in self.components)
+
+
+# ---------------------------------------------------------------------------
 # Paged KV cache: fixed-size pages, free-list allocator, per-sequence page
 # tables.  Sequences share one global pool, so total memory scales with live
 # tokens instead of slots * max_len — the structural requirement for

@@ -211,7 +211,26 @@ def wkv_chunked(
     return out.astype(r.dtype), s_fin
 
 
-def time_mix(tm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None):
+def _last_valid(x: Array, prev: Array | None, n_valid: Array | None) -> Array:
+    """Token-shift carry after a (possibly right-padded) chunk: x at each
+    row's last VALID position; rows with n_valid == 0 keep ``prev``.  With
+    ``n_valid=None`` (train / dense decode) this is plain ``x[:, -1]``."""
+    if n_valid is None:
+        return x[:, -1]
+    last = jnp.maximum(n_valid - 1, 0)
+    picked = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    if prev is None:
+        prev = jnp.zeros_like(picked)
+    return jnp.where((n_valid > 0)[:, None], picked, prev)
+
+
+def time_mix(tm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None, n_valid: Array | None = None):
+    """``n_valid`` [B] (serving prefill chunks, right-padded): padded
+    positions become identity wkv updates (w=1, k=0) and the token-shift
+    carry ends at the last valid position, so the returned state is exactly
+    the state after n_valid real tokens — rows with n_valid == 0 pass their
+    state through untouched.  Serving chunks run the SEQUENTIAL recurrence
+    (the decode oracle), so chunked prefill replays decode op-for-op."""
     B, S, D = x.shape
     H, N = cfg.heads, cfg.hd
     xprev = _shift(x, None if state is None else state["x_tm"])
@@ -224,8 +243,13 @@ def time_mix(tm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None
         "w_lora2"
     ].astype(jnp.float32)
     w = jnp.exp(-jnp.exp(dec)).reshape(B, S, H, N)  # in (0,1), data-dependent
+    if n_valid is not None:
+        # S_t = diag(w_t) S + k_t v_t^T: w=1, k=0 is the identity update
+        vmask = (jnp.arange(S)[None, :] < n_valid[:, None])[:, :, None, None]
+        w = jnp.where(vmask, w, 1.0)
+        k = jnp.where(vmask, k, 0.0)
     s0 = None if state is None else state["s"]
-    if S > 1:
+    if S > 1 and n_valid is None:
         out, s_new = wkv_chunked(r, k, v, w, tm["u"], s0)
     else:
         out, s_new = wkv_sequential(r, k, v, w, tm["u"], s0)
@@ -236,11 +260,11 @@ def time_mix(tm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None
     out = (mu.reshape(B, S, D) * tm["gn"]["scale"] + tm["gn"]["bias"]).astype(x.dtype)
     out = out * g
     out = site_prune(out, "attn_out", cfg.sparsity, taus)
-    new_state = {"x_tm": x[:, -1], "s": s_new}
+    new_state = {"x_tm": _last_valid(x, None if state is None else state["x_tm"], n_valid), "s": s_new}
     return out @ tm["wo"].astype(x.dtype), new_state
 
 
-def channel_mix(cm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None):
+def channel_mix(cm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None, n_valid: Array | None = None):
     xprev = _shift(x, None if state is None else state["x_cm"])
     xx = xprev - x
     xk = (x + xx * cm["mu_k"]).astype(x.dtype)
@@ -248,7 +272,7 @@ def channel_mix(cm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=N
     k = jnp.square(jax.nn.relu(xk @ cm["wk"].astype(x.dtype)))
     k = site_prune(k, "ffn_act", cfg.sparsity, taus)
     out = jax.nn.sigmoid(xr @ cm["wr"].astype(x.dtype)) * (k @ cm["wv"].astype(x.dtype))
-    return out, {"x_cm": x[:, -1]}
+    return out, {"x_cm": _last_valid(x, None if state is None else state["x_cm"], n_valid)}
 
 
 def forward(params: dict, cfg: ModelConfig, tokens: Array, *, taus=None, last_only: bool = False, **_unused) -> tuple[Array, dict]:
@@ -314,3 +338,127 @@ def decode_step(params: dict, cfg: ModelConfig, state, tokens: Array, *, taus=No
     logits = (h @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
     new_state = DecodeState(k=None, v=None, ssm={"x_tm": x_tm, "x_cm": x_cm, "s": s}, length=state.length + 1)
     return logits[:, 0], new_state
+
+
+# ---------------------------------------------------------------------------
+# Continuous-serving protocol: rwkv6 is attention-free, so its whole decode
+# state is ONE slot-dense component — the per-layer wkv matrix + token-shift
+# carries, O(1) per sequence regardless of context length.  No pages, no
+# allocators; admission/evict/cancel/replay ride the scheduler's slot paths,
+# and eviction replay is exact because prefill replays the decode recurrence
+# op-for-op (sequential wkv, fresh-reset state).
+# ---------------------------------------------------------------------------
+
+
+def serve_state_bundle(cfg: ModelConfig, layout=None):
+    from .kvcache import StateBundle, StateComponent
+
+    return StateBundle((StateComponent("rwkv", "slot-ssm"),))
+
+
+def serve_layout(cfg: ModelConfig, max_len: int, page_size: int, lookahead: int = 1):
+    return None  # no paged components
+
+
+def init_paged_state(cfg: ModelConfig, layout, num_pages, dtype=jnp.bfloat16):
+    return None
+
+
+def init_slot_state(cfg: ModelConfig, slots: int, dtype=jnp.bfloat16) -> dict:
+    L, D, H, N = cfg.layers, cfg.d_model, cfg.heads, cfg.hd
+    return {
+        "x_tm": jnp.zeros((L, slots, D), dtype),
+        "x_cm": jnp.zeros((L, slots, D), dtype),
+        "s": jnp.zeros((L, slots, H, N, N), jnp.float32),
+    }
+
+
+def paged_decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    layout,
+    pools,
+    tables,
+    length: Array,
+    tokens: Array,  # [B, 1]
+    *,
+    ssm: dict,
+    live: Array | None = None,
+    taus=None,
+    use_pallas: bool = False,
+    tp=None,
+):
+    """One serve step on the slot-dense state.  ``live`` masks the state
+    update to rows with a decoding request — without it a decode tick would
+    corrupt the recurrent state of a slot still mid-prefill (the same
+    hazard hymba's side-state has; there is no trash-page sink for
+    slot-dense state).  Ops match ``decode_step`` exactly, so engine decode
+    is bitwise-identical to the dense-state replay."""
+    h = layer_norm(params["ln_in"], params["embed"][tokens])  # [B,1,D]
+
+    def body(h, xs):
+        p, x_tm, x_cm, s = xs
+        a, st_tm = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, taus)
+        h = h + a
+        c, st_cm = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, taus)
+        h = h + c
+        nx_tm, nx_cm, ns = st_tm["x_tm"], st_cm["x_cm"], st_tm["s"]
+        if live is not None:
+            nx_tm = jnp.where(live[:, None], nx_tm, x_tm)
+            nx_cm = jnp.where(live[:, None], nx_cm, x_cm)
+            ns = jnp.where(live[:, None, None, None], ns, s)
+        return h, (nx_tm, nx_cm, ns)
+
+    xs = (params["blocks"], ssm["x_tm"], ssm["x_cm"], ssm["s"])
+    h, (x_tm, x_cm, s) = jax.lax.scan(body, h, xs)
+    h = layer_norm(params["final_norm"], h)
+    logits = (h @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    return logits[:, 0], pools, {"x_tm": x_tm, "x_cm": x_cm, "s": s}
+
+
+def paged_prefill_chunk(
+    params: dict,
+    cfg: ModelConfig,
+    layout,
+    pools,
+    tables,
+    start_len: Array,  # [B]
+    tokens: Array,  # [B, C] right-padded chunk
+    n_valid: Array,  # [B] real tokens per row (0 = inactive row)
+    *,
+    ssm: dict,
+    fresh: Array | None = None,  # [B] rows (re)starting prefill: state zeroed
+    taus=None,
+    tp=None,
+):
+    """Batched chunk prefill on the slot-dense state: padded positions are
+    identity state updates (w=1, k=0; token-shift carry ends at the last
+    valid token), rows with n_valid == 0 pass their state through, and the
+    wkv recurrence runs SEQUENTIALLY so any chunk size replays per-token
+    decode op-for-op.  Returns next-token logits at each row's last valid
+    position."""
+    h = layer_norm(params["ln_in"], params["embed"][tokens])  # [B,C,D]
+
+    def body(h, xs):
+        p, x_tm, x_cm, s = xs
+        if fresh is not None:
+            x_tm = jnp.where(fresh[:, None], jnp.zeros_like(x_tm), x_tm)
+            x_cm = jnp.where(fresh[:, None], jnp.zeros_like(x_cm), x_cm)
+            s = jnp.where(fresh[:, None, None, None], jnp.zeros_like(s), s)
+        a, st_tm = time_mix(
+            p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, taus, n_valid=n_valid
+        )
+        h = h + a
+        c, st_cm = channel_mix(
+            p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, taus, n_valid=n_valid
+        )
+        h = h + c
+        return h, (st_tm["x_tm"], st_cm["x_cm"], st_tm["s"])
+
+    xs = (params["blocks"], ssm["x_tm"], ssm["x_cm"], ssm["s"])
+    h, (x_tm, x_cm, s) = jax.lax.scan(body, h, xs)
+    last = jnp.maximum(n_valid - 1, 0)[:, None, None]  # [B,1,1]
+    h = jnp.take_along_axis(h, last, axis=1)  # last valid position per row
+    h = layer_norm(params["final_norm"], h)
+    logits = (h @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    return logits[:, 0], pools, {"x_tm": x_tm, "x_cm": x_cm, "s": s}

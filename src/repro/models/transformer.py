@@ -31,6 +31,8 @@ from .kvcache import (
     DecodeState,
     PagedKV,
     PagedLayout,
+    StateBundle,
+    StateComponent,
     entry_copy_pages,
     entry_gather,
     entry_gather_ring,
@@ -395,11 +397,42 @@ def decode_step(
 
 
 def check_paged_support(cfg: ModelConfig) -> None:
-    if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
+    """Serve support is a registry property: does the family declare a
+    decode-state bundle?  (Kept under its historical name; delegates to the
+    zoo-level check so every caller sees the same registry.)"""
+    from repro.models import zoo
+
+    zoo.check_serve_support(cfg)
+
+
+def serve_state_bundle(cfg: ModelConfig, layout: PagedLayout | None = None) -> StateBundle:
+    """The transformer families' declared decode state: one paged component
+    per page kind in the layout (int8 pools are their own registered kind),
+    plus slot-dense SSM side-state for hybrid models.  With ``layout=None``
+    (support checks, before a serving shape exists) kinds are derived from
+    the attention pattern alone."""
+    if cfg.family == "vlm":
         raise NotImplementedError(
-            f"paged KV: family '{cfg.family}' has no paged decode path "
-            "(pure-SSM and encoder-decoder states are not paged)"
+            "serve: vlm decode needs per-step patch embeds / 3-D M-RoPE "
+            "positions, which the paged step does not thread yet"
         )
+    if layout is not None:
+        kinds = layout.kinds
+    else:
+        pattern_kinds = {
+            "ring" if (p == "sliding" and cfg.window) else "full" for p in cfg.attention_pattern
+        }
+        kinds = tuple(k for k in ("full", "ring") if k in pattern_kinds)
+    quant = cfg.kv_cache_dtype == "int8"
+    comps = []
+    for kind in kinds:
+        if kind == "ring":
+            comps.append(StateComponent("kv-ring", "paged-ring"))
+        else:
+            comps.append(StateComponent("kv", "paged-int8" if quant else "paged-full"))
+    if cfg.ssm_state:
+        comps.append(StateComponent("ssm", "slot-ssm"))
+    return StateBundle(tuple(comps))
 
 
 # --- tensor parallelism over the KV-head dim --------------------------------
@@ -450,6 +483,11 @@ def paged_layout(cfg: ModelConfig, max_len: int, page_size: int, lookahead: int 
     return PagedLayout.for_config(cfg, max_len, page_size, lookahead)
 
 
+# serve-protocol aliases (the engine drives every family through the same
+# names; see zoo.serve_module)
+serve_layout = paged_layout
+
+
 def init_paged_state(
     cfg: ModelConfig, layout: PagedLayout, num_pages: dict[str, int] | int, dtype=jnp.bfloat16
 ) -> PagedKV:
@@ -473,6 +511,11 @@ def init_paged_ssm(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
         )
         for i in range(cfg.pattern_len)
     }
+
+
+# the transformer families' slot-dense state is the hybrid SSM side-state
+# (the "slot-ssm" kind of the bundle); None for pure-attention models
+init_slot_state = init_paged_ssm
 
 
 def paged_copy_pages(layout: PagedLayout, pools: PagedKV, kind: str, src: Array, dst: Array) -> PagedKV:

@@ -21,7 +21,17 @@ from repro.configs.base import ModelConfig
 from repro.launch.sharding import constrain
 from repro.core.dynatran import site_prune
 from . import attention as attn
-from .kvcache import DecodeState
+from .kvcache import (
+    DecodeState,
+    PagedKV,
+    PagedLayout,
+    StateBundle,
+    StateComponent,
+    entry_gather,
+    entry_scatter_chunk,
+    entry_scatter_token,
+    init_paged_pools,
+)
 from .layers import dense_init, embed_init, gelu, layer_norm, layer_norm_init, sinusoidal_positions
 
 Array = jax.Array
@@ -215,3 +225,190 @@ def decode_step(params: dict, cfg: ModelConfig, state: DecodeState, tokens: Arra
         length=length + 1,
     )
     return logits[:, 0], new_state
+
+
+# ---------------------------------------------------------------------------
+# Continuous-serving protocol: the decoder's self-attention KV pages like
+# any full-attention cache; the encoder cross-attention KV is a slot-dense
+# component computed ONCE at admission (the engine's admit hook runs the
+# encoder on the request's frames and writes the slot row) and read-only
+# thereafter.  Cross-KV — and therefore every self-KV page — depends on the
+# request's frames, not the token prefix alone, so the bundle is not
+# prefix-shareable (the "slot-cross" kind says so).
+# ---------------------------------------------------------------------------
+
+
+def serve_state_bundle(cfg: ModelConfig, layout=None) -> StateBundle:
+    quant = cfg.kv_cache_dtype == "int8"
+    return StateBundle(
+        (
+            StateComponent("kv", "paged-int8" if quant else "paged-full"),
+            StateComponent("cross", "slot-cross"),
+        ),
+        required_inputs=("frames",),
+        admit_compute=True,
+    )
+
+
+def serve_layout(cfg: ModelConfig, max_len: int, page_size: int, lookahead: int = 1) -> PagedLayout:
+    return PagedLayout(page_size=page_size, max_len=max_len, slot_kinds=("full",), lookahead=lookahead)
+
+
+def init_paged_state(cfg: ModelConfig, layout: PagedLayout, num_pages, dtype=jnp.bfloat16) -> PagedKV:
+    # decoder layers are stacked [L, ...] (no pattern cycling): one "full"
+    # pool slot with n_cycles = layers
+    return init_paged_pools(
+        layout, cfg.layers, num_pages, cfg.heads, cfg.hd, dtype,
+        quant=cfg.kv_cache_dtype == "int8",
+    )
+
+
+def init_slot_state(cfg: ModelConfig, slots: int, dtype=jnp.bfloat16) -> dict:
+    L, H, hd, F = cfg.layers, cfg.heads, cfg.hd, cfg.encoder_frames
+    return {
+        "k": jnp.zeros((L, slots, F, H, hd), dtype),
+        "v": jnp.zeros((L, slots, F, H, hd), dtype),
+    }
+
+
+def dense_reference_decode(
+    params: dict, cfg: ModelConfig, prompt: list[int], frames, new_tokens: int, max_len: int
+) -> list[int]:
+    """Greedy reference through the DENSE decode path — the oracle the
+    continuous engine's whisper serving is asserted bitwise against (bench
+    + tests): encoder cross-KV via ``prefill_cross``, then per-token decode
+    replay of the prompt followed by ``new_tokens`` greedy steps.  Host
+    loop over single-token decode calls; B=1, test/bench scale only."""
+    state = init_decode_state(cfg, 1, max_len)
+    state = prefill_cross(params, cfg, state, jnp.asarray(frames)[None])
+    cur, out = None, []
+    for t in range(len(prompt) + new_tokens - 1):
+        tok = prompt[t] if t < len(prompt) else cur
+        logits, state = decode_step(params, cfg, state, jnp.asarray([[tok]], jnp.int32))
+        if t >= len(prompt) - 1:
+            cur = int(jnp.argmax(logits[0, : cfg.vocab]))
+            out.append(cur)
+    return out
+
+
+def admit_slot(params: dict, cfg: ModelConfig, state: dict, slot, *, frames: Array, taus=None) -> dict:
+    """The admission hook: run the encoder ONCE for this request's frames
+    [1, F, D] and write its cross-attention K/V into the request's engine
+    slot.  Re-admission after eviction recomputes the same bits (the
+    encoder is deterministic), so evict + replay stays exact."""
+    enc = encode(params, cfg, frames, taus)  # [1, F, D]
+
+    def per_layer(p):
+        k = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wk"].astype(enc.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wv"].astype(enc.dtype))
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["dec_blocks"])  # [L, 1, F, H, hd]
+    return {
+        "k": jax.lax.dynamic_update_slice(state["k"], ks.astype(state["k"].dtype), (0, slot, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(state["v"], vs.astype(state["v"].dtype), (0, slot, 0, 0, 0)),
+    }
+
+
+def paged_decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    layout: PagedLayout,
+    pools: PagedKV,
+    tables: dict,
+    length: Array,  # [B] tokens already cached per row
+    tokens: Array,  # [B, 1]
+    *,
+    ssm: dict,  # slot-dense cross-KV (read-only here)
+    live: Array | None = None,  # cross-KV is never written in decode: no mask needed
+    taus=None,
+    use_pallas: bool = False,
+    tp=None,
+):
+    """One decoder step: paged self-attention KV + slot-dense cross-KV.
+    Ops mirror ``decode_step`` exactly (the paged gather reproduces the
+    dense cache's values and masks the same positions), so engine decode is
+    bitwise-identical to the dense-state replay."""
+    table = tables["full"]
+    P = params["pos_embed"].shape[0]
+    h = params["embed"][tokens] + params["pos_embed"][length[:, None] % P]
+
+    def body(h, xs):
+        p, kc, vc, ck, cv = xs
+        x = layer_norm(p["ln1"], h)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wq"].astype(x.dtype))
+        k1 = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wk"].astype(x.dtype))
+        v1 = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wv"].astype(x.dtype))
+        kcache = entry_scatter_token(kc, table, length, k1[:, 0], ring=False)
+        vcache = entry_scatter_token(vc, table, length, v1[:, 0], ring=False)
+        k_read = entry_gather(kcache, table)
+        v_read = entry_gather(vcache, table)
+        ao = attn.decode_attention(q, k_read, v_read, length + 1)
+        h = h + jnp.einsum("bshk,hkd->bsd", ao, p["self_attn"]["wo"].astype(x.dtype))
+        # cross attention against the slot's fixed encoder cache
+        x2 = layer_norm(p["ln2"], h)
+        q2 = jnp.einsum("bsd,dhk->bshk", x2, p["cross_attn"]["wq"].astype(x2.dtype))
+        ao2 = attn.decode_attention(q2, ck, cv, ck.shape[1])
+        h = h + jnp.einsum("bshk,hkd->bsd", ao2, p["cross_attn"]["wo"].astype(x2.dtype))
+        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), cfg, taus)
+        return h, (kcache, vcache)
+
+    xs = (params["dec_blocks"], pools.k["0"], pools.v["0"], ssm["k"], ssm["v"])
+    h, (ks, vs) = jax.lax.scan(body, h, xs)
+    h = layer_norm(params["dec_ln_post"], h)
+    logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
+    return logits[:, 0], PagedKV(k={"0": ks}, v={"0": vs}), ssm
+
+
+def paged_prefill_chunk(
+    params: dict,
+    cfg: ModelConfig,
+    layout: PagedLayout,
+    pools: PagedKV,
+    tables: dict,
+    start_len: Array,  # [B]
+    tokens: Array,  # [B, C] right-padded chunk of decoder (prompt) tokens
+    n_valid: Array,  # [B] real tokens per row (0 = inactive row)
+    *,
+    ssm: dict,
+    fresh: Array | None = None,  # cross-KV is rewritten by the admit hook: nothing to reset
+    taus=None,
+    tp=None,
+):
+    """Batched decoder prefill: causal self-attention over cached context +
+    the chunk, full (non-causal) cross-attention over the slot's encoder
+    frames.  C == 1 is op-for-op the decode step."""
+    table = tables["full"]
+    b, c = tokens.shape
+    P = params["pos_embed"].shape[0]
+    positions = start_len[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    h = params["embed"][tokens] + params["pos_embed"][positions % P]
+    valid = jnp.arange(c)[None, :] < n_valid[:, None]  # [B, C]
+    enc_len = jnp.full((b,), ssm["k"].shape[2], jnp.int32)  # every frame visible
+
+    def body(h, xs):
+        p, kc, vc, ck, cv = xs
+        x = layer_norm(p["ln1"], h)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wq"].astype(x.dtype))
+        k1 = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wk"].astype(x.dtype))
+        v1 = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wv"].astype(x.dtype))
+        kcache = entry_scatter_chunk(kc, table, start_len, k1, valid, ring=False)
+        vcache = entry_scatter_chunk(vc, table, start_len, v1, valid, ring=False)
+        k_read = entry_gather(kcache, table)
+        v_read = entry_gather(vcache, table)
+        ao = attn.chunk_decode_attention(q, k_read, v_read, start_len)
+        h = h + jnp.einsum("bshk,hkd->bsd", ao, p["self_attn"]["wo"].astype(x.dtype))
+        x2 = layer_norm(p["ln2"], h)
+        q2 = jnp.einsum("bsd,dhk->bshk", x2, p["cross_attn"]["wq"].astype(x2.dtype))
+        ao2 = attn.chunk_decode_attention(q2, ck, cv, enc_len)
+        h = h + jnp.einsum("bshk,hkd->bsd", ao2, p["cross_attn"]["wo"].astype(x2.dtype))
+        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), cfg, taus)
+        return h, (kcache, vcache)
+
+    xs = (params["dec_blocks"], pools.k["0"], pools.v["0"], ssm["k"], ssm["v"])
+    h, (ks, vs) = jax.lax.scan(body, h, xs)
+    last = jnp.maximum(n_valid - 1, 0)[:, None, None]  # [B,1,1]
+    h = jnp.take_along_axis(h, last, axis=1)  # last valid position per row
+    h = layer_norm(params["dec_ln_post"], h)
+    logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
+    return logits[:, 0], PagedKV(k={"0": ks}, v={"0": vs}), ssm

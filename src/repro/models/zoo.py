@@ -32,6 +32,57 @@ def module_for(cfg: ModelConfig):
     return _FAMILIES[cfg.family]
 
 
+# --- serving dispatch -------------------------------------------------------
+#
+# A family serves through the continuous engine iff its module declares a
+# decode-state bundle (``serve_state_bundle``): a tuple of registered state
+# KINDS (models/kvcache.py) the engine/scheduler/TP layers iterate over.
+# Support is therefore a registry property, not a hard-coded family list.
+
+
+def serve_supported_families() -> list[str]:
+    """Families whose module declares a decode-state bundle AND whose
+    declaration accepts the family at all (vlm's bundle declaration rejects
+    itself — per-step M-RoPE inputs are unthreaded — so it must not be
+    advertised).  Probed through the declaration itself, so this list can
+    never drift from what the engine actually accepts."""
+    from repro.configs.base import ModelConfig
+
+    out = []
+    for family, m in sorted(_FAMILIES.items()):
+        if not hasattr(m, "serve_state_bundle"):
+            continue
+        probe = ModelConfig(name="probe", family=family, layers=1, d_model=8,
+                            heads=1, kv_heads=1, d_ff=8, vocab=8)
+        try:
+            m.serve_state_bundle(probe)
+            out.append(family)
+        except NotImplementedError:
+            pass
+    return out
+
+
+def check_serve_support(cfg: ModelConfig) -> None:
+    """Raise NotImplementedError unless ``cfg``'s family declares a
+    decode-state bundle (and the bundle declaration accepts this config)."""
+    m = _FAMILIES.get(cfg.family)
+    if m is None or not hasattr(m, "serve_state_bundle"):
+        raise NotImplementedError(
+            f"serve: family '{cfg.family}' declares no decode-state bundle "
+            f"(families with bundles: {', '.join(serve_supported_families())})"
+        )
+    m.serve_state_bundle(cfg)  # may reject specific configs with a reason
+
+
+def serve_module(cfg: ModelConfig):
+    """The family module implementing the serve protocol for ``cfg``:
+    ``serve_state_bundle`` / ``serve_layout`` / ``init_paged_state`` /
+    ``init_slot_state`` / ``paged_decode_step`` / ``paged_prefill_chunk``
+    (+ optional ``admit_slot`` and the TP hooks)."""
+    check_serve_support(cfg)
+    return _FAMILIES[cfg.family]
+
+
 def init_params(key: Array, cfg: ModelConfig):
     return module_for(cfg).init_params(key, cfg)
 

@@ -218,10 +218,12 @@ class ContinuousServeEngine:
     """Token-granularity continuous batching: every step either decodes one
     token for all ready rows or prefills one chunk for EVERY admitted
     prompt (batched prefill), and the scheduler re-fills freed slots/pages
-    immediately.  Sliding-window layers page into fixed-budget ring tables
-    (memory scales with the window), int8-quantised caches page into
-    int8 + scale pools, and hybrid models carry their SSM side-state per
-    slot — the full transformer model zoo serves through this engine.
+    immediately.  Per-sequence decode state is whatever the family's
+    declared ``StateBundle`` says it is (models/kvcache.py state-kind
+    registry): full/ring/int8 page pools, slot-dense SSM or rwkv recurrent
+    state, slot-dense encoder cross-KV — the engine iterates the bundle,
+    so every family in the zoo that declares one (dense, moe, hybrid,
+    pure-SSM rwkv6, encoder-decoder whisper) serves through this engine.
 
     Request lifecycle: ``submit()`` carries per-request ``SamplingParams``
     and returns a handle; ``handle.tokens()`` streams tokens as engine
@@ -246,62 +248,79 @@ class ContinuousServeEngine:
         scfg: ContinuousServeConfig,
         calculator: Optional[ThresholdCalculator] = None,
     ):
-        tfm.check_paged_support(cfg)
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
-        self.layout = tfm.paged_layout(cfg, scfg.max_len, scfg.page_size, lookahead=scfg.decode_window)
-        if "ring" in self.layout.kinds and scfg.prefill_chunk > self.layout.ring_capacity:
+        # family serve protocol + declared decode-state bundle: everything
+        # below iterates over the bundle's registered state KINDS instead of
+        # hard-coding "page pools + optional SSM side-state"
+        self.fam = zoo.serve_module(cfg)
+        self.layout = self.fam.serve_layout(cfg, scfg.max_len, scfg.page_size, lookahead=scfg.decode_window)
+        self.bundle = self.fam.serve_state_bundle(cfg, self.layout)
+        kinds = self.layout.kinds if self.layout is not None else ()
+        if "ring" in kinds and scfg.prefill_chunk > self.layout.ring_capacity:
             # a chunk longer than the ring would scatter two laps into one
             # .at[].set — duplicate indices with unspecified resolution order
             raise ValueError(
                 f"prefill_chunk={scfg.prefill_chunk} exceeds the ring capacity "
                 f"{self.layout.ring_capacity} (window {self.layout.window}, page {scfg.page_size})"
             )
-        self.budgets = {k: self.layout.budget(k) for k in self.layout.kinds}
+        self.budgets = {k: self.layout.budget(k) for k in kinds}
         num_pages = {}
-        for kind in self.layout.kinds:
+        for kind in kinds:
             configured = scfg.num_pages if kind == "full" else scfg.num_pages_ring
             num_pages[kind] = configured or scfg.slots * self.budgets[kind] + 1
-        self.allocators = {k: PageAllocator(num_pages[k], scfg.page_size) for k in self.layout.kinds}
-        # prefix sharing needs every page to be a pure function of the token
-        # prefix: all-"full" layouts only, no per-slot SSM side-state, and no
-        # ADAPTIVE rho — K/V depend on the DynaTran taus, so pages filled at
-        # one rho must not be linked by a request arriving at another (a
-        # FIXED rho keeps taus constant for the engine's lifetime, which
-        # keeps cached pages consistent)
+        self.allocators = {k: PageAllocator(num_pages[k], scfg.page_size) for k in kinds}
+        # prefix sharing is a property of the declared state kinds: every
+        # component must be a pure per-position function of the token prefix
+        # (``StateBundle.shareable`` — full bf16/int8 pages are, ring pages /
+        # SSM state / encoder cross-KV are not), and additionally no ADAPTIVE
+        # rho — K/V depend on the DynaTran taus, so pages filled at one rho
+        # must not be linked by a request arriving at another (a FIXED rho
+        # keeps taus constant for the engine's lifetime, which keeps cached
+        # pages consistent)
         self.prefix_caching = bool(
             scfg.prefix_caching
-            and self.layout.kinds == ("full",)
-            and not cfg.ssm_state
+            and self.bundle.shareable
             and not (cfg.sparsity.mode == "dynatran" and scfg.adaptive_rho)
         )
         self.prefix_cache = PrefixCache(self.allocators["full"]) if self.prefix_caching else None
         self.sched = ContinuousScheduler(
-            scfg.slots, self.allocators, self.budgets, scfg.max_len, prefix_cache=self.prefix_cache
+            scfg.slots, self.allocators, self.budgets, scfg.max_len,
+            prefix_cache=self.prefix_cache, page_size=scfg.page_size,
         )
-        self.pools = tfm.init_paged_state(cfg, self.layout, num_pages)
-        self.ssm = tfm.init_paged_ssm(cfg, scfg.slots)
+        self.pools = self.fam.init_paged_state(cfg, self.layout, num_pages) if kinds else None
+        # slot-dense components (hybrid SSM side-state, rwkv6 recurrent
+        # state, whisper cross-KV) ride per engine slot
+        self.slot_state = self.fam.init_slot_state(cfg, scfg.slots)
 
         # tensor parallelism: pools live KV-head-sharded on the mesh, the
         # jitted steps route through shard_map wrappers; everything host-side
-        # (allocators, page tables, prefix cache, scheduler) is untouched
+        # (allocators, page tables, prefix cache, scheduler) is untouched.
+        # Mesh placement per component comes from the state-kind registry.
         self.mesh = None
         self._tp_fns = None
         if scfg.tp > 1 or scfg.mesh is not None:
+            if not hasattr(self.fam, "make_tp_paged_fns"):
+                raise NotImplementedError(
+                    f"tensor parallelism: family '{cfg.family}' has no TP paged step yet"
+                )
             from repro.launch.mesh import make_serve_mesh
-            from repro.launch.sharding import paged_pool_shardings
+            from repro.launch.sharding import state_shardings
 
             self.mesh = scfg.mesh if scfg.mesh is not None else make_serve_mesh(scfg.tp)
-            tfm.check_tp_support(cfg, self.mesh.shape["model"])
-            self._tp_fns = tfm.make_tp_paged_fns(
+            self.fam.check_tp_support(cfg, self.mesh.shape["model"])
+            self._tp_fns = self.fam.make_tp_paged_fns(
                 cfg, self.layout, self.mesh, use_pallas=scfg.use_pallas
             )
-            self.pools = jax.device_put(self.pools, paged_pool_shardings(self.pools, self.mesh))
-            if self.ssm is not None:  # hybrid side-state: replicated on the mesh
-                from jax.sharding import NamedSharding, PartitionSpec
-
-                self.ssm = jax.device_put(self.ssm, NamedSharding(self.mesh, PartitionSpec()))
+            if self.pools is not None:
+                paged_kind = next(k for k in self.bundle.kinds() if k.paged)
+                self.pools = jax.device_put(self.pools, state_shardings(paged_kind, self.pools, self.mesh))
+            if self.slot_state is not None:
+                slot_kind = next(k for k in self.bundle.kinds() if not k.paged)
+                self.slot_state = jax.device_put(
+                    self.slot_state, state_shardings(slot_kind, self.slot_state, self.mesh)
+                )
 
         sp: SparsityConfig = cfg.sparsity
         self._dynatran = sp.mode == "dynatran"
@@ -325,6 +344,7 @@ class ContinuousServeEngine:
         self._decode = jax.jit(self._decode_impl, donate_argnums=(0, 1), static_argnames=("sample",))
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0, 1), static_argnames=("sample",))
         self._copy = jax.jit(self._copy_impl, donate_argnums=(0,))
+        self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._rid = 0
         self._tick = 0
         self._peak_pages_in_use = 0
@@ -360,7 +380,7 @@ class ContinuousServeEngine:
         """One model step: the shard_map-wrapped TP path or the plain one."""
         if self._tp_fns is not None:
             return self._tp_fns["decode"](self.params, pools, tables, lengths, tokens, ssm, live, taus)
-        return tfm.paged_decode_step(
+        return self.fam.paged_decode_step(
             self.params, self.cfg, self.layout, pools, tables, lengths, tokens,
             ssm=ssm, live=live, taus=taus, use_pallas=self.scfg.use_pallas,
         )
@@ -368,10 +388,16 @@ class ContinuousServeEngine:
     def _step_prefill(self, pools, ssm, tables, start, tokens, n_valid, fresh, taus):
         if self._tp_fns is not None:
             return self._tp_fns["prefill"](self.params, pools, tables, start, tokens, n_valid, ssm, fresh, taus)
-        return tfm.paged_prefill_chunk(
+        return self.fam.paged_prefill_chunk(
             self.params, self.cfg, self.layout, pools, tables, start, tokens, n_valid,
             ssm=ssm, fresh=fresh, taus=taus,
         )
+
+    def _admit_impl(self, slot_state, slot, inputs, taus):
+        """Admission-computed slot state (whisper: encoder cross-KV) — the
+        family hook writes one slot row; ``slot`` is a traced scalar so
+        every slot shares one trace."""
+        return self.fam.admit_slot(self.params, self.cfg, slot_state, slot, taus=taus, **inputs)
 
     def _prefill_impl(
         self, pools, ssm, tables, start, tokens, n_valid, fresh, taus,
@@ -388,7 +414,17 @@ class ContinuousServeEngine:
     def _copy_impl(self, pools, src, dst):
         if self._tp_fns is not None:
             return self._tp_fns["copy"](pools, "full", src, dst)
-        return tfm.paged_copy_pages(self.layout, pools, "full", src, dst)
+        return tfm.paged_copy_pages(self.layout, pools, "full", src, dst)  # layout-generic
+
+    # --- decode-state plumbing --------------------------------------------
+    def state_bytes(self) -> dict:
+        """Device bytes per storage class of the bundle: paged pool bytes
+        (scale with live tokens / window) and slot-dense bytes (flat in
+        max_len — the O(1)/slot claim for rwkv6 and whisper cross-KV)."""
+        slot = sum(
+            x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(self.slot_state)
+        )
+        return {"paged": self.pools.bytes() if self.pools is not None else 0, "slot": slot}
 
     # --- runtime DynaTran knob -------------------------------------------
     def _current_taus(self) -> Optional[dict]:
@@ -410,16 +446,27 @@ class ContinuousServeEngine:
         eos_id: Optional[int] = None,
         slo_s: Optional[float] = None,
         sampling: Optional[SamplingParams] = None,
+        inputs: Optional[dict] = None,
     ) -> Request:
         """Queue one request and return its handle.  ``sampling`` carries
         the per-request decode policy; the legacy ``max_new_tokens`` /
-        ``eos_id`` aliases override/extend it when passed.  The handle
-        streams (``.tokens()``) and cancels (``.cancel()``)."""
+        ``eos_id`` aliases override/extend it when passed.  ``inputs``
+        carries per-request inputs the model's state bundle declares beyond
+        the prompt (whisper: ``frames`` [F, D]).  The handle streams
+        (``.tokens()``) and cancels (``.cancel()``)."""
         assert prompt, "empty prompt"
+        inputs = dict(inputs or {})
+        missing = [k for k in self.bundle.required_inputs if k not in inputs]
+        if missing:
+            raise ValueError(
+                f"family '{self.cfg.family}' requests need inputs {missing} "
+                f"(declared by its state bundle: {self.bundle.describe()})"
+            )
         req = Request(
             rid=self._rid, prompt=list(prompt), slo_s=slo_s,
             submit_time=time.perf_counter(),
             params=_resolve_params(sampling, max_new_tokens, eos_id),
+            inputs=inputs,
             _engine=self,
         )
         self._rid += 1
@@ -444,8 +491,15 @@ class ContinuousServeEngine:
         both are pending).  Returns newly finished requests."""
         self._tick += 1
         self._drain_copies()  # forks queued since the last jitted call
-        self.sched.admit_ready()
+        admitted = self.sched.admit_ready()
         taus = self._current_taus()
+        if self.bundle.admit_compute:
+            # admission-computed slot state (whisper cross-KV): one encoder
+            # run per admitted request, writing its slot row.  Re-admission
+            # after eviction recomputes the same bits, so replay is exact.
+            for req in admitted:
+                dev_inputs = {k: jnp.asarray(v)[None] for k, v in req.inputs.items()}
+                self.slot_state = self._admit(self.slot_state, np.int32(req.slot), dev_inputs, taus)
         prefill_reqs = self.sched.prefill_candidates()
         ready = self.sched.decode_rows()
         finished: list[Request] = []
@@ -471,14 +525,20 @@ class ContinuousServeEngine:
         max_new_tokens: Optional[int] = None,
         eos_id: int = -1,
         sampling: Optional[SamplingParams] = None,
+        inputs: Optional[list[dict]] = None,
     ) -> list[list[int]]:
         """Baseline-compatible API: submit all prompts, run to completion,
         return generated token lists in submission order.  An explicit
         ``max_new_tokens`` overrides the sampling params'; omitted,
-        ``sampling.max_new_tokens`` (default 32) governs."""
+        ``sampling.max_new_tokens`` (default 32) governs.  ``inputs`` is an
+        optional per-prompt list of bundle-required input dicts."""
         if max_new_tokens is None and sampling is None:
             max_new_tokens = 32
-        reqs = [self.submit(p, max_new_tokens, eos_id, sampling=sampling) for p in prompts]
+        reqs = [
+            self.submit(p, max_new_tokens, eos_id, sampling=sampling,
+                        inputs=inputs[i] if inputs else None)
+            for i, p in enumerate(prompts)
+        ]
         self.run_until_complete()
         return [r.generated for r in reqs]
 
@@ -495,8 +555,9 @@ class ContinuousServeEngine:
         out["pages_in_use"] = {k: a.num_pages - 1 - a.free_pages for k, a in self.allocators.items()}
         out["peak_pages_in_use"] = self._peak_pages_in_use
         out["prefix_cache"] = self.prefix_cache.stats() if self.prefix_cache else None
-        out["cache_bytes"] = self.pools.bytes()
-        out["cache_bytes_per_shard"] = self.pools.shard_bytes()
+        out["cache_bytes"] = self.pools.bytes() if self.pools is not None else 0
+        out["cache_bytes_per_shard"] = self.pools.shard_bytes() if self.pools is not None else 0
+        out["state_bytes"] = self.state_bytes()
         out["tp"] = self.mesh.shape["model"] if self.mesh is not None else 1
         out["queue_depth"] = self.sched.queue_depth
         return out
@@ -532,10 +593,11 @@ class ContinuousServeEngine:
 
     def _tables_for(self, reqs: list[Request]) -> dict[str, jnp.ndarray]:
         """Full-width [slots, budget(kind)] page tables: rows without a
-        scheduled request point at the trash page."""
+        scheduled request point at the trash page.  Empty for bundles with
+        no paged component (rwkv6)."""
         out = {
             kind: np.zeros((self.scfg.slots, self.budgets[kind]), np.int32)
-            for kind in self.layout.kinds
+            for kind in self.budgets
         }
         for req in reqs:
             for kind, row in self.sched.page_tables(req).items():
@@ -572,8 +634,8 @@ class ContinuousServeEngine:
                 fill_row(st, req.slot, req.params, 0)
                 sample |= req.params.temperature > 0
         self._drain_copies()
-        self.pools, self.ssm, next_tok = self._prefill(
-            self.pools, self.ssm, self._tables_for(reqs), jnp.asarray(starts),
+        self.pools, self.slot_state, next_tok = self._prefill(
+            self.pools, self.slot_state, self._tables_for(reqs), jnp.asarray(starts),
             jnp.asarray(toks), jnp.asarray(nv), jnp.asarray(fresh), taus,
             st["temps"], st["top_ks"], st["top_ps"], st["seeds"], sample=sample,
         )
@@ -620,8 +682,8 @@ class ContinuousServeEngine:
             fill_row(st, req.slot, req.params, len(req.generated))
             sample |= req.params.temperature > 0
         self._drain_copies()
-        self.pools, self.ssm, win_tok = self._decode(
-            self.pools, self.ssm, self._tables_for(rows), jnp.asarray(lens), jnp.asarray(toks),
+        self.pools, self.slot_state, win_tok = self._decode(
+            self.pools, self.slot_state, self._tables_for(rows), jnp.asarray(lens), jnp.asarray(toks),
             jnp.asarray(live), taus,
             st["temps"], st["top_ks"], st["top_ps"], st["seeds"], jnp.asarray(st["steps"]),
             sample=sample,

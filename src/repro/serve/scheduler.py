@@ -11,7 +11,10 @@ in microseconds:
   page that slid fully out of the window is released to the allocator and a
   fresh page is linked into its table slot), and a youngest-first eviction
   policy (the oldest admitted request is never evicted, so admission order
-  is starvation-free).
+  is starvation-free).  Slot-dense state kinds (rwkv6's recurrent state,
+  whisper's cross-KV) need no page bookkeeping at all: the same
+  admit/evict/cancel/replay paths run with an empty allocator dict, and
+  slot assignment itself is the allocation.
 * ``RhoController``      — the paper's accuracy/throughput trade-off closed
   at runtime: queue depth maps monotonically onto DynaTran's target
   sparsity rho (paper §III-A transfer curves make the knob nearly free), so
@@ -47,6 +50,10 @@ class Request:
     slo_s: Optional[float] = None  # end-to-end latency objective
     submit_time: float = 0.0
     params: Optional[SamplingParams] = None
+    # per-request inputs beyond the prompt, named by the model's state
+    # bundle (``StateBundle.required_inputs``): e.g. whisper's encoder
+    # ``frames`` — consumed by the engine's admission hook
+    inputs: dict = dataclasses.field(default_factory=dict)
 
     generated: list[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
@@ -166,12 +173,15 @@ class ContinuousScheduler:
         budgets: dict[str, int],
         max_len: int,
         prefix_cache: Optional[PrefixCache] = None,
+        page_size: Optional[int] = None,
     ):
         self.slots = slots
         self.allocators = allocators
         self.budgets = budgets
         self.max_len = max_len
-        self.page_size = next(iter(allocators.values())).page_size
+        # slot-dense-only bundles (rwkv6) have no allocators: slot
+        # assignment is the allocation, and page bookkeeping is vacuous
+        self.page_size = page_size or (next(iter(allocators.values())).page_size if allocators else 1)
         self.prefix_cache = prefix_cache
         self.pending_copies: list[tuple[int, int]] = []  # "full"-kind (src, dst) COW forks
         self.queue: deque[Request] = deque()

@@ -150,6 +150,72 @@ def test_ring_recycling_conservation(budget, spare, total_tokens, step):
     assert alloc.free_pages == alloc.num_pages - 1
 
 
+# --- slot-dense bundles: no allocators, slot conservation -------------------
+#
+# A bundle with no paged components (rwkv6's slot-dense recurrent state)
+# drives the SAME scheduler paths with an empty allocator dict: admission is
+# slot-bound only, page bookkeeping is vacuous, and every admission must be
+# balanced by exactly one slot release on finish/cancel/evict.
+
+
+@settings(max_examples=75, deadline=None)
+@given(
+    slots=st.integers(1, 3),
+    arrivals=st.lists(st.tuples(st.integers(1, 12), st.integers(1, 8)), min_size=1, max_size=8),
+    data=st.data(),
+)
+def test_slot_dense_scheduler_churn_conserves_slots(slots, arrivals, data):
+    s = ContinuousScheduler(slots, {}, {}, 64, page_size=4)
+    reqs = []
+    for rid, (plen, new) in enumerate(arrivals):
+        r = Request(rid=rid, prompt=list(range(1, plen + 1)), max_new_tokens=new)
+        s.submit(r)
+        reqs.append(r)
+    for _ in range(300):
+        s.admit_ready()
+        active = list(s.active.values())
+        if not active and not s.queue:
+            break
+        for r in active:
+            if r.slot is None:
+                continue
+            action = data.draw(st.sampled_from(["step", "step", "finish", "cancel", "evict"]),
+                               label=f"rid={r.rid}")
+            if action == "step":
+                if not r.ready:
+                    r.prefill_pos = min(r.prefill_pos + 4, len(r.replay))
+                    r.cache_len = r.prefill_pos
+                    if r.prefill_pos >= len(r.replay):
+                        r.ready = True
+                        if not r.generated:
+                            r.generated.append(1)
+                else:
+                    assert s.grow(r, 1) is True  # no pools: growth never contends
+                    r.cache_len += 1
+                    r.generated.append(1)
+                    if len(r.generated) >= r.max_new_tokens:
+                        s.finish(r)
+                        r.finish_time = 1.0
+            elif action == "finish":
+                s.finish(r)
+                r.finish_time = 1.0
+            elif action == "cancel":
+                r.cancelled = True
+                s.cancel(r)
+                r.finish_time = 1.0
+            else:
+                s.evict(r)
+        # slot conservation at every tick: active + free tiles the slots
+        assert len(s.active) + len(s._free_slots) == slots
+        assert all(r.tables == {} for r in reqs), "slot-dense request grew a page table"
+    for r in list(s.active.values()):
+        s.finish(r)
+    for r in list(s.queue):
+        r.cancelled = True
+        s.cancel(r)
+    assert not s.active and len(s._free_slots) == slots
+
+
 # --- shared-prefix admit/cancel/evict interleavings (refcounts + COW) -------
 
 PAGE = 4

@@ -410,14 +410,24 @@ class TestPagedPrefill:
             assert int(np.argmax(done_logits[i])) == int(np.argmax(ref_logits[i]))
 
     def test_supported_and_unsupported_configs(self):
-        # sliding-window and int8 are now first-class paged citizens
+        # support is now "does the family declare a decode-state bundle":
+        # sliding-window, int8, pure-SSM (rwkv6) and encoder-decoder
+        # (whisper) all do; a family with no bundle is rejected with the
+        # registry-derived list
+        from repro.configs import get_smoke
+
         tfm.check_paged_support(tiny_cfg(kv_cache_dtype="int8"))
         tfm.check_paged_support(tiny_cfg(attention_pattern=("full", "sliding"), window=8))
-        with pytest.raises(NotImplementedError):
+        tfm.check_paged_support(get_smoke("rwkv6-7b"))
+        tfm.check_paged_support(get_smoke("whisper-tiny"))
+        with pytest.raises(NotImplementedError, match="decode-state bundle"):
             tfm.check_paged_support(
-                ModelConfig(name="r", family="ssm", layers=2, d_model=64, heads=2, kv_heads=2,
+                ModelConfig(name="b", family="encoder", layers=2, d_model=64, heads=2, kv_heads=2,
                             d_ff=128, vocab=128)
             )
+        with pytest.raises(NotImplementedError, match="M-RoPE"):
+            # vlm decode needs per-step inputs the paged step does not thread
+            tfm.check_paged_support(get_smoke("qwen2-vl-7b"))
 
 
 class TestEvictionCorrectness:

@@ -1,0 +1,302 @@
+"""Unified DecodeState families: rwkv6 (pure slot-dense recurrent state)
+and whisper (slot-dense encoder cross-KV + paged decoder self-KV) serve
+end-to-end through the continuous engine — submit/stream/cancel and
+evict+replay ride the same scheduler paths as paged requests, decode is
+bitwise-identical to the dense-state replay, and support/prefix-sharing/TP
+placement all derive from the state-kind registry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ModelConfig
+from repro.models import whisper, zoo
+from repro.models.kvcache import STATE_KINDS
+from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine
+
+MAX_LEN = 64
+
+
+def drained(engine) -> bool:
+    return all(a.free_pages == a.num_pages - 1 for a in engine.allocators.values())
+
+
+def make_engine(cfg, params, **kw):
+    defaults = dict(slots=2, max_len=MAX_LEN, page_size=4, prefill_chunk=1)
+    defaults.update(kw)
+    return ContinuousServeEngine(cfg, params, ContinuousServeConfig(**defaults))
+
+
+def force_evict_then_finish(eng, reqs):
+    """Run until some request is decoding with tokens in hand, evict it
+    through the scheduler (slot-dense bundles never hit page pressure, so
+    eviction is forced explicitly), then run to completion."""
+    victim = None
+    for _ in range(300):
+        eng.step()
+        victim = next((r for r in reqs if r.slot is not None and r.ready and len(r.generated) >= 2), None)
+        if victim is not None:
+            break
+    assert victim is not None, "no request ever reached decode"
+    eng.sched.evict(victim)
+    assert victim.slot is None and victim.evictions == 1
+    eng.run_until_complete()
+    return victim
+
+
+# ---------------------------------------------------------------------------
+# registry / bundle properties
+# ---------------------------------------------------------------------------
+
+
+class TestStateKindRegistry:
+    def test_registered_kinds(self):
+        for name, paged, shareable in [
+            ("paged-full", True, True),
+            ("paged-int8", True, True),
+            ("paged-ring", True, False),
+            ("slot-ssm", False, False),
+            ("slot-cross", False, False),
+        ]:
+            k = STATE_KINDS[name]
+            assert (k.paged, k.shareable) == (paged, shareable), name
+            assert k.tp == ("kv_heads" if paged else "replicated")
+
+    def test_family_bundles(self):
+        """Shareability is a per-kind property of the declared bundle, not
+        a hard-coded family check: full bf16/int8 pages share, ring pages
+        and every slot-dense kind disable sharing."""
+        dense = ModelConfig(name="d", family="dense", layers=2, d_model=64, heads=2, kv_heads=2,
+                            d_ff=128, vocab=128)
+        assert zoo.serve_module(dense).serve_state_bundle(dense).shareable
+        int8 = dataclasses.replace(dense, kv_cache_dtype="int8")
+        assert zoo.serve_module(int8).serve_state_bundle(int8).shareable
+        ring = dataclasses.replace(dense, attention_pattern=("sliding",), window=8)
+        assert not zoo.serve_module(ring).serve_state_bundle(ring).shareable
+        hymba = get_smoke("hymba-1.5b")
+        assert not zoo.serve_module(hymba).serve_state_bundle(hymba).shareable
+        rwkv = get_smoke("rwkv6-7b")
+        bundle = zoo.serve_module(rwkv).serve_state_bundle(rwkv)
+        assert not bundle.paged and not bundle.shareable
+        wsp = get_smoke("whisper-tiny")
+        bundle = zoo.serve_module(wsp).serve_state_bundle(wsp)
+        assert bundle.paged and not bundle.shareable
+        assert bundle.required_inputs == ("frames",) and bundle.admit_compute
+
+    def test_unsupported_family_lists_registry(self):
+        bad = ModelConfig(name="b", family="encoder", layers=2, d_model=64, heads=2, kv_heads=2,
+                          d_ff=128, vocab=128)
+        with pytest.raises(NotImplementedError, match="ssm"):
+            zoo.check_serve_support(bad)
+
+    def test_tp_placement_from_registry(self):
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.launch.sharding import state_shardings
+
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        pool = jnp.zeros((2, 4, 4, 2, 8))
+        sh = state_shardings("paged-full", pool, mesh)
+        assert sh.spec == P(None, None, None, "model", None)
+        slot = {"s": jnp.zeros((2, 2, 4, 4))}
+        sh = state_shardings(STATE_KINDS["slot-ssm"], slot, mesh)
+        assert sh["s"].spec == P()
+
+    def test_tp_unsupported_families_rejected_up_front(self):
+        for arch in ("rwkv6-7b", "whisper-tiny"):
+            cfg = get_smoke(arch)
+            params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+            with pytest.raises(NotImplementedError, match="tensor parallelism"):
+                make_engine(cfg, params, tp=2)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6: pure slot-dense recurrent state
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def rwkv_setup():
+    cfg = get_smoke("rwkv6-7b")
+    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab, size=n).tolist() for n in (10, 5, 12, 7)]
+    base = ServeEngine(cfg, params, ServeConfig(slots=1, max_len=MAX_LEN))
+    want = [base.generate([p], max_new_tokens=8)[0] for p in prompts]
+    return cfg, params, prompts, want
+
+
+class TestRwkv6Serves:
+    def test_check_paged_support_accepts(self, rwkv_setup):
+        cfg, *_ = rwkv_setup
+        zoo.check_serve_support(cfg)  # does not raise
+
+    def test_bitwise_vs_dense_replay(self, rwkv_setup):
+        """Continuous-engine decode == the dense-state ServeEngine replay
+        (which itself replays forward()'s recurrence token by token) at
+        prefill_chunk=1 — op-for-op the same wkv recurrence."""
+        cfg, params, prompts, want = rwkv_setup
+        eng = make_engine(cfg, params)
+        assert eng.pools is None and eng.allocators == {}
+        got = eng.generate(prompts, max_new_tokens=8)
+        assert got == want
+
+    def test_chunked_prefill_matches_replay(self, rwkv_setup):
+        """Serving chunks run the SEQUENTIAL wkv recurrence with identity
+        updates at padded positions, so chunked prefill replays per-token
+        decode exactly."""
+        cfg, params, prompts, want = rwkv_setup
+        eng = make_engine(cfg, params, prefill_chunk=3)
+        assert eng.generate(prompts, max_new_tokens=8) == want
+
+    def test_mixed_lengths_interleave_prefill_decode(self, rwkv_setup):
+        """The live-mask regression for slot-dense state: decode ticks must
+        not advance the recurrent state of slots still mid-prefill."""
+        cfg, params, prompts, _ = rwkv_setup
+        news = [12, 4, 10, 6]
+        base = ServeEngine(cfg, params, ServeConfig(slots=1, max_len=MAX_LEN))
+        want = [base.generate([p], max_new_tokens=n)[0] for p, n in zip(prompts, news)]
+        eng = make_engine(cfg, params, prefill_chunk=2)
+        got = [eng.submit(p, max_new_tokens=n) for p, n in zip(prompts, news)]
+        eng.run_until_complete()
+        assert [r.generated for r in got] == want
+
+    def test_decode_window_multi_step(self, rwkv_setup):
+        cfg, params, prompts, want = rwkv_setup
+        eng = make_engine(cfg, params, decode_window=3)
+        assert eng.generate(prompts, max_new_tokens=8) == want
+
+    def test_evict_replay_bitwise(self, rwkv_setup):
+        """Evict + replay through the same scheduler path as pages: the
+        fresh-reset prefill replays prompt + generated tokens into the slot
+        state and decoding resumes bit-exactly."""
+        cfg, params, prompts, want = rwkv_setup
+        eng = make_engine(cfg, params)
+        reqs = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        victim = force_evict_then_finish(eng, reqs)
+        assert victim.evictions == 1
+        assert [r.generated for r in reqs] == want
+
+    def test_stream_and_cancel_release_slot(self, rwkv_setup):
+        cfg, params, prompts, want = rwkv_setup
+        eng = make_engine(cfg, params)
+        h1 = eng.submit(prompts[0], max_new_tokens=8)
+        h2 = eng.submit(prompts[1], max_new_tokens=4)
+        got = []
+        for t in h1.tokens():
+            got.append(t)
+            if len(got) == 3:
+                h1.cancel()
+        assert h1.cancelled and h1.done and len(got) <= 4
+        eng.run_until_complete()
+        assert h2.generated == want[1][:4]  # peer unaffected
+        assert not eng.sched.active and len(eng.sched._free_slots) == eng.scfg.slots
+
+    def test_state_bytes_flat_in_max_len(self, rwkv_setup):
+        """The O(1)-per-slot claim: rwkv6 decode state is independent of
+        the token budget (no pages at all)."""
+        cfg, params, *_ = rwkv_setup
+        small = make_engine(cfg, params, max_len=64)
+        large = make_engine(cfg, params, max_len=512)
+        assert small.state_bytes() == large.state_bytes()
+        assert small.state_bytes()["paged"] == 0
+
+    def test_prefix_cache_disabled(self, rwkv_setup):
+        cfg, params, *_ = rwkv_setup
+        eng = make_engine(cfg, params)
+        assert not eng.prefix_caching and eng.prefix_cache is None
+        assert eng.metrics()["prefix_cache"] is None
+
+
+# ---------------------------------------------------------------------------
+# whisper: slot-dense cross-KV (computed at admission) + paged self-KV
+# ---------------------------------------------------------------------------
+
+
+def whisper_dense_ref(cfg, params, prompt, frames, new):
+    """Greedy reference through the dense decode oracle (shared with the
+    bench so the two can never assert against diverging replicas)."""
+    return whisper.dense_reference_decode(params, cfg, prompt, frames, new, MAX_LEN)
+
+
+@pytest.fixture(scope="module")
+def whisper_setup():
+    cfg = get_smoke("whisper-tiny")
+    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab, size=n).tolist() for n in (10, 5, 12)]
+    frames = [rng.standard_normal((cfg.encoder_frames, cfg.d_model)).astype(np.float32) for _ in prompts]
+    want = [whisper_dense_ref(cfg, params, p, f, 8) for p, f in zip(prompts, frames)]
+    return cfg, params, prompts, frames, want
+
+
+class TestWhisperServes:
+    def test_check_paged_support_accepts(self, whisper_setup):
+        cfg, *_ = whisper_setup
+        zoo.check_serve_support(cfg)
+
+    def test_bitwise_vs_dense_replay(self, whisper_setup):
+        """Paged self-KV + slot-dense cross-KV decode == the dense decode
+        replay, bitwise, at prefill_chunk=1."""
+        cfg, params, prompts, frames, want = whisper_setup
+        eng = make_engine(cfg, params)
+        got = eng.generate(prompts, max_new_tokens=8, inputs=[{"frames": f} for f in frames])
+        assert got == want
+        assert drained(eng)
+
+    def test_chunked_prefill_matches_replay(self, whisper_setup):
+        cfg, params, prompts, frames, want = whisper_setup
+        eng = make_engine(cfg, params, prefill_chunk=4)
+        got = eng.generate(prompts, max_new_tokens=8, inputs=[{"frames": f} for f in frames])
+        assert got == want
+
+    def test_requires_frames(self, whisper_setup):
+        cfg, params, prompts, *_ = whisper_setup
+        eng = make_engine(cfg, params)
+        with pytest.raises(ValueError, match="frames"):
+            eng.submit(prompts[0], max_new_tokens=4)
+
+    def test_evict_replay_recomputes_cross_kv(self, whisper_setup):
+        """Eviction drops the pages; re-admission reruns the encoder into
+        the (possibly different) slot and replays the decoder — tokens stay
+        bit-identical to the uninterrupted run."""
+        cfg, params, prompts, frames, want = whisper_setup
+        eng = make_engine(cfg, params)
+        reqs = [eng.submit(p, max_new_tokens=8, inputs={"frames": f})
+                for p, f in zip(prompts, frames)]
+        victim = force_evict_then_finish(eng, reqs)
+        assert victim.evictions == 1
+        assert [r.generated for r in reqs] == want
+        assert drained(eng)
+
+    def test_cancel_mid_prefill_releases_pages(self, whisper_setup):
+        cfg, params, prompts, frames, _ = whisper_setup
+        eng = make_engine(cfg, params, prefill_chunk=2)
+        h = eng.submit(prompts[0], max_new_tokens=4, inputs={"frames": frames[0]})
+        eng.step()  # admission (encoder runs) + first prefill chunk
+        assert h.slot is not None and not h.ready
+        h.cancel()
+        assert drained(eng)
+        eng.run_until_complete()
+
+    def test_per_slot_cross_kv_isolated(self, whisper_setup):
+        """Two requests with the SAME prompt but different frames decode
+        against their own slot's cross-KV — outputs match their own dense
+        references, not each other's."""
+        cfg, params, prompts, frames, _ = whisper_setup
+        prompt = prompts[0]
+        want = [whisper_dense_ref(cfg, params, prompt, f, 6) for f in frames[:2]]
+        eng = make_engine(cfg, params)
+        reqs = [eng.submit(prompt, max_new_tokens=6, inputs={"frames": f}) for f in frames[:2]]
+        eng.run_until_complete()
+        assert [r.generated for r in reqs] == want
+
+    def test_prefix_cache_disabled(self, whisper_setup):
+        """Self-KV pages are a function of (prompt, frames), not the token
+        prefix alone — the slot-cross kind disables sharing."""
+        cfg, params, *_ = whisper_setup
+        eng = make_engine(cfg, params)
+        assert not eng.prefix_caching and eng.prefix_cache is None

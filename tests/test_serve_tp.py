@@ -243,13 +243,19 @@ class TestRegressionGateLogic:
                              "burst_tokens_identical": True, "burst_relinked_pages": 5,
                              "tok_per_s": 150.0},
             "tp": {"skipped": "needs >= 2 devices, have 1"},
+            "families": {
+                "rwkv6": {"tokens_match_dense": True, "state_bytes_flat_in_max_len": True,
+                          "tok_per_s": 300.0, "slot_tok_per_s": 100.0},
+                "whisper": {"tokens_match_dense": True, "allocator_drained": True,
+                            "tok_per_s": 80.0},
+            },
         }
         result.update(over)
         return result
 
     def baseline(self):
         return {"throughput_ratios": {"speedup": 1.0, "ring_vs_slot": 1.0,
-                                      "tp2_vs_slot": 0.5}}
+                                      "tp2_vs_slot": 0.5, "rwkv6_vs_slot": 1.0}}
 
     def test_tp_skipped_fresh_run_passes(self):
         from benchmarks.check_regression import check_parity, check_throughput
@@ -278,6 +284,18 @@ class TestRegressionGateLogic:
         fresh = self.fresh(speedup=0.5)
         failures, _ = check_throughput(fresh, self.baseline(), 0.25)
         assert any("speedup regressed" in f for f in failures)
+
+    def test_family_parity_flip_fails(self):
+        """The DecodeState families' correctness claims are zero-tolerance
+        parity flags: a flipped rwkv6/whisper flag fails the gate."""
+        from benchmarks.check_regression import check_parity
+
+        fresh = self.fresh()
+        fresh["families"]["rwkv6"]["tokens_match_dense"] = False
+        assert any("rwkv6_tokens_match_dense" in f for f in check_parity(fresh))
+        fresh = self.fresh()
+        del fresh["families"]["whisper"]["allocator_drained"]
+        assert any("whisper_drained" in f for f in check_parity(fresh))
 
 
 @needs_mesh
