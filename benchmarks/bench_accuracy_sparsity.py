@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import KernelPolicy
 from repro.core import dynatran as dt
 from repro.data.pipeline import ClsDataConfig, ClassificationBatches
 from repro.models import bert
@@ -48,10 +49,10 @@ def _train_classifier(cfg, data, steps=400, lr=1e-3, seed=0):
     return params
 
 
-def _accuracy(params, cfg, eval_set, sparsity=None, taus=None):
+def _accuracy(params, cfg, eval_set, policy=None):
     correct = total = 0
     for b in eval_set:
-        logits = bert.forward(params, cfg, jnp.asarray(b["tokens"]), sparsity=sparsity, taus=taus)
+        logits = bert.forward(params, cfg, jnp.asarray(b["tokens"]), policy=policy)
         pred = np.asarray(jnp.argmax(logits, -1))
         correct += int((pred == b["labels"]).sum())
         total += len(b["labels"])
@@ -83,7 +84,7 @@ def run(quick: bool = False) -> dict:
     for tau in taus:
         sp = dt.SparsityConfig(mode="dynatran", sites=("attn_probs", "ffn_act", "attn_out"))
         t = {"attn_probs": tau, "ffn_act": tau, "attn_out": tau}
-        acc = _accuracy(params, cfg, eval_set, sparsity=sp, taus=t)
+        acc = _accuracy(params, cfg, eval_set, policy=KernelPolicy.from_config(sp, t))
         rho = _act_sparsity(params, cfg, eval_set, tau)
         dyn_rows.append({"tau": tau, "accuracy": acc, "act_sparsity": rho})
 

@@ -25,16 +25,26 @@ decode must be bitwise-identical to the single-device engine for every
 page kind (full / ring / int8), per-shard pool bytes must equal total/N,
 and tokens/s is reported per shard count.  Skipped (reported, not failed)
 when only one device is visible.
+
+The sparsity section measures the tiled DynaTran datapath (KernelPolicy
+``skip``): the tile-skipping engine must emit tokens identical to its
+masked-reference twin at the same taus, tokens/s must RISE with target
+rho (the "sparsity pays" claim, gated as the rho=0.5 / rho=0 ratio), and
+the fused Pallas decode kernel's per-row page-visit counters must fall
+strictly as rho rises.
 """
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.dynatran import SparsityConfig, ThresholdCalculator, TransferCurve
 from repro.models import zoo
 from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine
 from repro.serve.scheduler import pct as _pct
@@ -390,6 +400,179 @@ def _run_families_section(quick: bool) -> dict:
     return out
 
 
+def _sparse_cfg() -> ModelConfig:
+    # attention-heavy tiny model (long KV read per decoded token, small FFN)
+    # so skipped KV pages move the wall clock; "kv" occupancy is opt-in
+    return ModelConfig(
+        name="bench-serve-sparse", family="dense", layers=2, d_model=256, heads=8, kv_heads=8,
+        d_ff=128, vocab=512, remat="none",
+        sparsity=SparsityConfig(mode="dynatran", sites=("ffn_act", "attn_out", "kv"), block=16),
+    )
+
+
+def _profiled_calculator(eng: ContinuousServeEngine) -> ThresholdCalculator:
+    """Transfer curves for the sparsity section.  The "kv" curve is profiled
+    from the probe engine's own filled pools — tau at rho r is the
+    r-quantile of the per-position max|k| magnitudes, so ``target_rho``
+    maps onto a real dead fraction of the cache regardless of the model's
+    activation scale.  The activation sites get modest linear ramps."""
+    mags = []
+    for i in range(len(eng.layout.slot_kinds)):
+        pool = np.asarray(jax.tree_util.tree_leaves(eng.pools.k[str(i)])[0])
+        # pool is [n_cycles, num_pages, P, Hkv, D]: per-position max|k| is the
+        # max over the trailing (Hkv, D) axes — the occupancy_bit reduction
+        m = np.abs(pool).max(axis=(-2, -1)).ravel()
+        mags.append(m[m > 0])  # unwritten pool slots are exactly zero
+    mags = np.concatenate(mags)
+    rhos = np.linspace(0.0, 1.0, 9)
+    kv_taus = np.quantile(mags, rhos)
+    kv_taus[0] = 0.0  # curve contract: taus[0] == 0 (rho=0 kills nothing)
+    return ThresholdCalculator({
+        "kv": TransferCurve(taus=jnp.asarray(kv_taus, jnp.float32), rhos=jnp.asarray(rhos, jnp.float32)),
+        "ffn_act": TransferCurve(taus=jnp.linspace(0.0, 0.2, 9), rhos=jnp.asarray(rhos, jnp.float32)),
+        "attn_out": TransferCurve(taus=jnp.linspace(0.0, 0.05, 9), rhos=jnp.asarray(rhos, jnp.float32)),
+    })
+
+
+def _pallas_visit_counts() -> dict:
+    """The fused paged decode kernel's page-visit counters under interpret
+    mode: with nested dead-page sets growing with rho, the visited-page
+    total must fall STRICTLY as rho rises (the kernel-level skip claim,
+    deterministic — no wall clock involved)."""
+    from repro.kernels.paged_attention import paged_decode_attention
+
+    rng = np.random.default_rng(7)
+    b, maxp, p, hkv, g, d = 2, 6, 4, 2, 2, 16
+    num_pages = b * maxp + 1
+    pool_k = jnp.asarray(rng.normal(size=(num_pages, p, hkv, d)), jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(num_pages, p, hkv, d)), jnp.float32)
+    table = jnp.arange(1, num_pages, dtype=jnp.int32).reshape(b, maxp)
+    q = jnp.asarray(rng.normal(size=(b, 1, hkv * g, d)), jnp.float32)
+    lengths = jnp.asarray([maxp * p, maxp * p], jnp.int32)
+
+    rhos, visits = (0.0, 0.25, 0.5, 0.75), []
+    for rho in rhos:
+        # kill the first ceil(rho * (maxp-1)) pages of every row outright:
+        # dead sets are nested, so visits must fall strictly with rho (the
+        # query's own page is the LAST page and stays live)
+        occ = np.ones((num_pages, p), bool)
+        dead = int(np.ceil(rho * (maxp - 1)))
+        if dead:
+            occ[np.asarray(table)[:, :dead].ravel()] = False
+        _, n = paged_decode_attention(
+            q, pool_k, pool_v, table, lengths,
+            occupancy=jnp.asarray(occ), skip=True, with_visits=True, interpret=True,
+        )
+        visits.append(int(np.asarray(n).sum()))
+    dec = all(a > b_ for a, b_ in zip(visits, visits[1:]))
+    return {"rhos": list(rhos), "pages_visited": visits, "strictly_decreasing": dec}
+
+
+def _run_sparsity_section(quick: bool) -> dict:
+    """Tile-skipping on the serve path: (1) the skipping engine's tokens are
+    IDENTICAL to its masked-reference twin at the same taus (the masked twin
+    runs the same tiled datapath without skipping, so any divergence is a
+    skip bug, not numerics); (2) tokens/s RISES with target rho — the
+    "sparsity pays" claim, gated downstream as the rho=0.5 / rho=0 ratio;
+    (3) Pallas visit counters fall strictly with rho."""
+    cfg = _sparse_cfg()
+    params = zoo.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    prompt_len = 256
+    new_tokens = 64
+    n_req = 2 if quick else 4
+    max_len = 336
+    # the rho=0.5 / rho=0 ratio is HARD-floored at 1.0 downstream (same-run,
+    # machine-independent), so the sweep shape maximises the attention share
+    # of a decode step (long context -> many skippable pages, one-chunk
+    # prefill so the identical-across-engines prefill cost doesn't dilute
+    # the ratio) and the repeats are INTERLEAVED across rho values, so
+    # monotonic machine drift cannot bias one rho's wall
+    repeats = 5
+    prompts = [rng.integers(1, cfg.vocab, size=prompt_len).tolist() for _ in range(n_req)]
+    useful = n_req * new_tokens
+
+    def build(tile_skip, rho, calculator=None):
+        # page_size=1 makes every dead position a skippable page, so the page
+        # skip fraction tracks rho directly; slots=1 keeps decode B=1 where
+        # the per-token KV read dominates the step; decode_window=8 amortises
+        # the per-step host dispatch that would otherwise dilute the ratio
+        return ContinuousServeEngine(
+            cfg, params,
+            ContinuousServeConfig(slots=1, max_len=max_len, page_size=1, prefill_chunk=64,
+                                  decode_window=8, target_rho=rho, tile_skip=tile_skip),
+            calculator=calculator,
+        )
+
+    # profile the kv transfer curve off a short legacy-datapath run
+    probe = build(None, 0.0)
+    probe.generate(prompts[:1], max_new_tokens=4)
+    calc = _profiled_calculator(probe)
+    del probe
+
+    rho_grid = (0.0, 0.5) if quick else (0.0, 0.25, 0.5, 0.75)
+    parity_rho = 0.5
+    skip_engines = {rho: build(True, rho, calc) for rho in rho_grid}
+
+    # 1) engine-pair parity at a mid-range rho (greedy: token identity is
+    # the engine-level exactness claim)
+    mask_eng = build(False, parity_rho, calc)
+    want = mask_eng.generate(prompts, max_new_tokens=new_tokens)
+    got = skip_engines[parity_rho].generate(prompts, max_new_tokens=new_tokens)
+    tile_skip_exact = want == got
+
+    # 2) rho sweep: tokens/s and pool live fraction per target rho, repeats
+    # interleaved (rho0 rep1, rho0.5 rep1, rho0 rep2, ...) so host-load drift
+    # hits every rho equally
+    for rho in rho_grid:
+        skip_engines[rho].generate(prompts[:1], max_new_tokens=2)  # jit warmup
+        skip_engines[rho].clear_history()
+    walls = {rho: float("inf") for rho in rho_grid}
+    round_ratios = []  # per-round paired wall(rho0) / wall(rho0.5)
+
+    def sweep_round():
+        w = {}
+        for rho in rho_grid:
+            eng = skip_engines[rho]
+            t0 = time.perf_counter()
+            for prompt in prompts:
+                eng.submit(prompt, max_new_tokens=new_tokens)
+            eng.run_until_complete()
+            w[rho] = time.perf_counter() - t0
+            walls[rho] = min(walls[rho], w[rho])
+        round_ratios.append(w[0.0] / w[0.5])
+
+    for _ in range(repeats):
+        sweep_round()
+    # the gated ratio is the MEDIAN of per-round PAIRED ratios: each round
+    # times rho=0 and rho=0.5 back-to-back, so a sustained machine stall
+    # multiplies both walls of that round and cancels in the quotient, and
+    # the median discards rounds where a transient spike hit only one side.
+    # (min-wall tok/s can't do this — it may compare walls from different
+    # load epochs.)  when the median still sits near the hard floor, keep
+    # sampling rather than gate on a noisy draw
+    for _ in range(2):
+        if statistics.median(round_ratios) > 1.02:
+            break
+        for _ in range(repeats):
+            sweep_round()
+    sweep = []
+    for rho in rho_grid:
+        m = skip_engines[rho].metrics()
+        skip_engines[rho].clear_history()
+        sweep.append({"rho": rho, "tok_per_s": useful / walls[rho],
+                      "kv_live_frac": m["kv_occupancy_live"]})
+
+    return {
+        "tile_skip_exact": tile_skip_exact,
+        "parity_rho": parity_rho,
+        "rho_sweep": sweep,
+        "rho05_vs_rho0": statistics.median(round_ratios),
+        "rho05_round_ratios": [round(r, 4) for r in round_ratios],
+        "pallas_visits": _pallas_visit_counts(),
+    }
+
+
 def _request_mix(n: int, prompt_len: int, short_new: int, long_new: int, rng) -> list[tuple[list[int], int]]:
     """75% short / 25% long generations, shuffled so waves mix both."""
     reqs = []
@@ -478,9 +661,11 @@ def run(quick: bool = False) -> dict:
     prefix = _run_prefix_section(quick)
     tp = _run_tp_section(quick)
     families = _run_families_section(quick)
+    sparsity = _run_sparsity_section(quick)
 
     speedup = (useful / c_wall) / (useful / b_wall)
     result = {
+        "sparsity": sparsity,
         "ring": ring,
         "prefix_cache": prefix,
         "tp": tp,
@@ -551,7 +736,29 @@ def run(quick: bool = False) -> dict:
         f"cross-KV {wh['state_bytes']['slot'] / 1e3:.1f} kB slot-dense + "
         f"{wh['state_bytes']['paged'] / 1e3:.1f} kB paged self-KV"
     )
+    sweep_str = ", ".join(
+        f"rho={s['rho']:.2f}: {s['tok_per_s']:.1f} tok/s (live {s['kv_live_frac']:.2f})"
+        for s in sparsity["rho_sweep"]
+    )
+    pv = sparsity["pallas_visits"]
+    print(
+        f"  sparsity   : skip == mask tokens @ rho={sparsity['parity_rho']}: {sparsity['tile_skip_exact']} | "
+        f"{sweep_str} | rho0.5/rho0 {sparsity['rho05_vs_rho0']:.2f}x"
+    )
+    print(
+        f"               pallas pages visited over rho {pv['rhos']}: {pv['pages_visited']} "
+        f"(strictly decreasing: {pv['strictly_decreasing']})"
+    )
     save("serve_continuous", result)
+    if not sparsity["tile_skip_exact"]:
+        raise AssertionError("tile-skipped decode diverged from its masked-reference twin")
+    if not pv["strictly_decreasing"]:
+        raise AssertionError("Pallas page-visit counts did not fall strictly with rho")
+    if not quick and sparsity["rho05_vs_rho0"] <= 1.0:
+        raise AssertionError(
+            f"tile skipping did not pay: rho=0.5 vs rho=0 tokens/s ratio "
+            f"{sparsity['rho05_vs_rho0']:.3f} <= 1.0"
+        )
     if not bitwise:
         raise AssertionError("paged decode diverged from dense-KV reference at rho=0")
     if not ring["bitwise_identical_rho0"]:

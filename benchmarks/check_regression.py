@@ -13,8 +13,12 @@ Two gate classes:
   hold: paged-vs-dense bitwise at rho=0, ring bitwise + window-bound
   memory, prefix-cache token identity (warm and cold-burst), allocator
   drain, TP bitwise parity per page kind and the per-shard = total/N
-  memory split (when a multi-device mesh was available).  Any false flag
-  fails the gate outright — no tolerance.
+  memory split (when a multi-device mesh was available), tile-skip vs
+  masked-twin token identity and strictly-falling Pallas page-visit
+  counts.  Any false flag fails the gate outright — no tolerance.  The
+  sparsity section's rho=0.5 / rho=0 tokens/s ratio is also parity-class:
+  it is a same-run, machine-independent ratio with a HARD floor of 1.0 —
+  tile skipping that does not pay fails the gate.
 * **Throughput** — tokens/s ratios must not regress more than
   ``tolerance`` (default 25%) below the baseline.  Gated on MACHINE-
   INDEPENDENT ratios (each engine's tokens/s normalised by the same run's
@@ -45,6 +49,18 @@ PARITY_FLAGS = [
     ("rwkv6_state_bytes_flat", ("families", "rwkv6", "state_bytes_flat_in_max_len")),
     ("whisper_tokens_match_dense", ("families", "whisper", "tokens_match_dense")),
     ("whisper_drained", ("families", "whisper", "allocator_drained")),
+    # tiled DynaTran datapath (ISSUE 6): skipping must be invisible in the
+    # tokens and visible in the visit counters — both zero-tolerance
+    ("tile_skip_exact", ("sparsity", "tile_skip_exact")),
+    ("sparsity_visits_decreasing", ("sparsity", "pallas_visits", "strictly_decreasing")),
+]
+
+# same-run tokens/s ratio floors (machine-independent, so no tolerance):
+# the whole point of tile skipping is throughput — a ratio at or below the
+# floor means sparsity stopped paying, which is a regression even when every
+# exactness flag holds
+RATIO_FLOORS = [
+    ("rho05_vs_rho0", ("sparsity", "rho05_vs_rho0"), 1.0),
 ]
 
 
@@ -77,6 +93,9 @@ def throughput_ratios(result: dict) -> dict:
     rwkv_slot = _get(result, ("families", "rwkv6", "slot_tok_per_s"))
     if rwkv and rwkv_slot:
         out["rwkv6_vs_slot"] = rwkv / rwkv_slot
+    # already a same-run ratio (and floored hard in check_parity); tracked
+    # here so the trajectory shows how much sparsity pays over time
+    out["rho05_vs_rho0"] = _get(result, ("sparsity", "rho05_vs_rho0"))
     return {k: v for k, v in out.items() if v is not None}
 
 
@@ -96,6 +115,13 @@ def check_parity(result: dict) -> list[str]:
         for s in tp.get("scaling", ()):
             if s.get("shard_bytes_exact") is not True:
                 failures.append(f"parity: tp={s['tp']} per-shard pool bytes != total/N")
+    for name, path, floor in RATIO_FLOORS:
+        val = _get(result, path)
+        if not (isinstance(val, (int, float)) and val > floor):
+            failures.append(
+                f"parity: {name} is {val!r} (hard floor > {floor} — "
+                "tile skipping must RAISE tokens/s)"
+            )
     return failures
 
 

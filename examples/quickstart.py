@@ -8,6 +8,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy import KernelPolicy
 from repro.configs import get_smoke
 from repro.core.dynatran import SparsityConfig, ThresholdCalculator, profile_curve, sparsity
 from repro.models import zoo
@@ -33,7 +34,10 @@ def main():
     sp = SparsityConfig(mode="dynatran", target_rho=0.5)
     cfg_sparse = dataclasses.replace(cfg, sparsity=sp)
     taus = calc.taus(sp)
-    logits_sp, _ = zoo.forward(params, cfg_sparse, tokens, taus=taus)
+    logits_sp, _ = zoo.forward(
+        params, cfg_sparse, tokens,
+        policy=KernelPolicy.from_config(cfg_sparse.sparsity, taus),
+    )
     drift = float(jnp.mean(jnp.abs(logits_sp - logits)))
     print(f"dynatran rho=0.5: taus={ {k: round(float(v),4) for k,v in taus.items()} }")
     print(f"mean logit drift vs dense: {drift:.4f}")

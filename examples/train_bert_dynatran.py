@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import KernelPolicy
 from repro.configs.base import ModelConfig
 from repro.core import dynatran as dt
 from repro.data.pipeline import LMBatches, LMDataConfig
@@ -37,10 +38,11 @@ def lm_small() -> ModelConfig:
 
 
 def eval_ce(params, cfg, data, taus=None, steps=4, offset=50_000):
+    policy = KernelPolicy.from_config(cfg.sparsity, taus)
     tot = 0.0
     for i in range(steps):
         b = {k: jnp.asarray(v) for k, v in data.batch(offset + i).items()}
-        loss, _ = zoo.loss_fn(params, cfg, b, taus)
+        loss, _ = zoo.loss_fn(params, cfg, b, policy=policy)
         tot += float(loss)
     return tot / steps
 

@@ -154,7 +154,11 @@ def profile_curve(samples: Sequence[Array], taus: Array | None = None) -> Transf
 
 
 # Tensor classes ("sites") that DynaTran prunes — mirrors Table I operands.
-SITES = ("ffn_act", "attn_probs", "attn_out", "block_out", "weights")
+# "kv" is the scatter-time KV-cache site: a cached position whose key has
+# max|k| < tau_kv is marked *dead* in the per-kind occupancy side array
+# (models/kvcache.py) and its page can be skipped outright by the paged
+# decode attention kernels — zero gather traffic, not multiplied zeros.
+SITES = ("ffn_act", "attn_probs", "attn_out", "block_out", "weights", "kv")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,23 +22,39 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK = (128, 128, 128)  # bm, bk, bn — MXU 128-aligned
 
 
-def _kernel(x_mask_ref, w_mask_ref, x_ref, w_ref, o_ref, *, k_index):
+def _kernel(x_mask_ref, w_mask_ref, x_ref, w_ref, *out_refs, k_index, skip, visits):
+    o_ref = out_refs[0]
+    visits_ref = out_refs[1] if visits else None
     k = pl.program_id(k_index)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
+    if visits:
+        first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0) & (pl.program_id(2) == 0)
+
+        @pl.when(first)
+        def _init_visits():
+            visits_ref[0] = 0
+
     live = jnp.logical_and(x_mask_ref[0, 0], w_mask_ref[0, 0])
+    if not skip:
+        # mask-only reference: a runtime-true predicate keeps the lowering
+        # identical to the skipping path while executing every tile — exact
+        # parity holds when dead tiles hold zeros (pruned operands)
+        live = jnp.logical_or(live, jnp.logical_or(x_mask_ref[0, 0], ~x_mask_ref[0, 0]))
 
     @pl.when(live)
     def _mac():
         o_ref[...] += jnp.dot(
             x_ref[...], w_ref[...], preferred_element_type=jnp.float32
         ).astype(o_ref.dtype)
+        if visits:
+            visits_ref[0] += 1
 
 
-@functools.partial(jax.jit, static_argnames=("block", "dataflow", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "dataflow", "skip", "with_visits", "interpret"))
 def block_sparse_matmul(
     x: jax.Array,  # [M, K]
     w: jax.Array,  # [K, N]
@@ -47,8 +63,10 @@ def block_sparse_matmul(
     *,
     block: tuple[int, int, int] = DEFAULT_BLOCK,
     dataflow: str = "ijk",  # "ijk" (k innermost, paper's [b,i,j,k]) | "kij"
+    skip: bool = True,  # False = execute every tile (mask-only exact reference)
+    with_visits: bool = False,  # also return the number of tile MACs issued
     interpret: bool = True,
-) -> jax.Array:
+) -> jax.Array | tuple[jax.Array, jax.Array]:
     m, k = x.shape
     k2, n = w.shape
     assert k == k2
@@ -78,8 +96,13 @@ def block_sparse_matmul(
     else:
         raise ValueError(f"unknown dataflow {dataflow!r}")
 
+    out_specs = pl.BlockSpec((bm, bn), out_map)
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    if with_visits:
+        out_specs = (out_specs, pl.BlockSpec((1,), lambda *_: (0,)))
+        out_shape = (out_shape, jax.ShapeDtypeStruct((1,), jnp.int32))
     return pl.pallas_call(
-        functools.partial(_kernel, k_index=k_index),
+        functools.partial(_kernel, k_index=k_index, skip=skip, visits=with_visits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), ixw),
@@ -87,7 +110,7 @@ def block_sparse_matmul(
             pl.BlockSpec((bm, bk), ixw),
             pl.BlockSpec((bk, bn), www),
         ],
-        out_specs=pl.BlockSpec((bm, bn), out_map),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(x_tile_mask, w_tile_mask, x, w)

@@ -127,7 +127,7 @@ def paged_scatter(
 # ---------------------------------------------------------------------------
 
 
-def _attn_kernel(pt_ref, len_ref, q_ref, *refs, page_size, logit_cap, window, quant):
+def _attn_kernel(pt_ref, len_ref, q_ref, *refs, page_size, logit_cap, window, quant, occupancy, skip, visits):
     """Online-softmax decode attention over live pages.
 
     ``quant``: k/v pools are int8 with parallel bf16 scale pools
@@ -135,10 +135,23 @@ def _attn_kernel(pt_ref, len_ref, q_ref, *refs, page_size, logit_cap, window, qu
     ``window``: ring table — a table of C = maxp * P logical ring slots
     holding the trailing ``window`` positions; page slot offsets are mapped
     back to absolute positions and masked to the window.
+    ``occupancy``: a DynaTran "kv" occupancy pool [num_pages, P] rides along;
+    dead positions mask to NEG_INF, and with ``skip`` a page whose every
+    in-range position is dead is jumped over via ``@pl.when`` — no gather,
+    no MACs.  Skipping is EXACT, not approximate: an all-dead page is an
+    online-softmax no-op (its probs underflow to 0.0 once any live position
+    has been seen, and a leading dead page's pollution is wiped by
+    corr = exp(NEG_INF - m) == 0.0), and the query's own position is always
+    kept live so at least one live position exists.
+    ``visits``: emit a per-row int32 count of pages actually processed — the
+    bench's tile-traffic meter.
     """
-    out_ref = refs[-1]
+    n_in = 2 + (2 if quant else 0) + (1 if occupancy else 0)
     kpool_ref, vpool_ref = refs[0], refs[1]
     ks_ref, vs_ref = (refs[2], refs[3]) if quant else (None, None)
+    occ_ref = refs[n_in - 1] if occupancy else None
+    out_ref = refs[n_in]
+    visits_ref = refs[n_in + 1] if visits else None
     b = pl.program_id(0)
     hkv, g, d = q_ref.shape[1:]
     q = q_ref[0].astype(jnp.float32)  # [Hkv, G, D], pre-scaled
@@ -147,6 +160,8 @@ def _attn_kernel(pt_ref, len_ref, q_ref, *refs, page_size, logit_cap, window, qu
     n_live = jnp.minimum((length + page_size - 1) // page_size, maxp)
     if window is not None:
         capacity = maxp * page_size
+    if visits:
+        visits_ref[0] = 0
 
     def load(pool_ref, scale_ref, page):
         x = pl.load(pool_ref, (pl.dslice(page, 1),))[0]  # [P, Hkv, D]
@@ -161,27 +176,50 @@ def _attn_kernel(pt_ref, len_ref, q_ref, *refs, page_size, logit_cap, window, qu
     def body(p, carry):
         m, lsum, acc = carry
         page = pt_ref[b, p]
-        k = load(kpool_ref, ks_ref, page)
-        v = load(vpool_ref, vs_ref, page)
-        s = jnp.einsum("ngd,tnd->ngt", q, k)  # [Hkv, G, P]
-        if logit_cap is not None and logit_cap > 0:
-            s = logit_cap * jnp.tanh(s / logit_cap)
         off = p * page_size + jnp.arange(page_size)
         if window is None:
+            pos = off  # absolute position held by each slot
             valid = off < length
         else:
             # ring slot `off` holds the largest absolute position a <= L
             # with a % C == off (L = length - 1, the query's position);
             # shared window convention: valid iff a > L - window and a >= 0
-            a = (length - 1) - ((length - 1 - off) % capacity)
-            valid = (a >= 0) & (a > length - 1 - window)
-        s = jnp.where(valid[None, None, :], s, NEG_INF)
-        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
-        probs = jnp.exp(s - m_new)
-        corr = jnp.exp(m - m_new)
-        lsum_new = lsum * corr + probs.sum(-1, keepdims=True)
-        acc_new = acc * corr + jnp.einsum("ngt,tnd->ngd", probs, v)
-        return m_new, lsum_new, acc_new
+            pos = (length - 1) - ((length - 1 - off) % capacity)
+            valid = (pos >= 0) & (pos > length - 1 - window)
+        if occupancy:
+            occ = pl.load(occ_ref, (pl.dslice(page, 1),))[0]  # [P] bool
+            # the query's own position is always live: guarantees >= 1 live
+            # position per row, which is what makes page-skipping exact
+            valid = valid & (occ | (pos == length - 1))
+
+        def compute(carry):
+            m, lsum, acc = carry
+            k = load(kpool_ref, ks_ref, page)
+            v = load(vpool_ref, vs_ref, page)
+            s = jnp.einsum("ngd,tnd->ngt", q, k)  # [Hkv, G, P]
+            if logit_cap is not None and logit_cap > 0:
+                s = logit_cap * jnp.tanh(s / logit_cap)
+            s = jnp.where(valid[None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            probs = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            lsum_new = lsum * corr + probs.sum(-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum("ngt,tnd->ngd", probs, v)
+            if visits:
+                visits_ref[0] += 1
+            return m_new, lsum_new, acc_new
+
+        if occupancy:
+            # both modes route through the same lax.cond so their lowering
+            # (and therefore their floats) is IDENTICAL; the mask-only
+            # reference just uses a runtime-true predicate, so the only
+            # difference skip=True makes is not executing all-dead pages —
+            # which is an exact no-op (see docstring)
+            page_live = jnp.any(valid)
+            if not skip:
+                page_live = jnp.logical_or(page_live, length >= 0)
+            return jax.lax.cond(page_live, compute, lambda c: c, carry)
+        return compute(carry)
 
     m0 = jnp.full((hkv, g, 1), NEG_INF, jnp.float32)
     lsum0 = jnp.zeros((hkv, g, 1), jnp.float32)
@@ -190,7 +228,9 @@ def _attn_kernel(pt_ref, len_ref, q_ref, *refs, page_size, logit_cap, window, qu
     out_ref[0] = (acc / jnp.maximum(lsum, 1e-30)).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "logit_cap", "scale", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("window", "logit_cap", "scale", "skip", "with_visits", "interpret")
+)
 def paged_decode_attention(
     q: jax.Array,  # [B, 1, H, D]
     k_pool: jax.Array,  # [num_pages, P, Hkv, D] (bf16/f32, or int8 with scales)
@@ -200,11 +240,14 @@ def paged_decode_attention(
     *,
     k_scale: jax.Array | None = None,  # [num_pages, P, Hkv] bf16 — int8 absmax scales
     v_scale: jax.Array | None = None,
+    occupancy: jax.Array | None = None,  # [num_pages, P] bool — DynaTran "kv" liveness
     window: int | None = None,  # set for ring tables: mask to the sliding window
     logit_cap: float | None = None,
     scale: float | None = None,
+    skip: bool = True,  # skip all-dead pages (False = mask-only exact reference)
+    with_visits: bool = False,  # also return per-row processed-page counts
     interpret: bool = True,
-) -> jax.Array:
+) -> jax.Array | tuple[jax.Array, jax.Array]:
     """One query per row against its paged cache; reads ceil(len/P) pages
     (clamped to the table width for ring tables).
 
@@ -214,10 +257,18 @@ def paged_decode_attention(
     pass ``window`` and a table whose C = maxp * P ring slots hold the
     trailing window (position t at slot t % C).
 
+    ``occupancy`` (from the "kv-occupancy" side array of the page pools)
+    masks DynaTran-dead positions; ``skip=True`` additionally jumps all-dead
+    pages — with ``with_visits=True`` the second return value counts pages
+    actually processed per row, which the bench asserts falls as rho rises.
+    ``skip=True`` and ``skip=False`` are exactly equal (see ``_attn_kernel``).
+
     Under tensor parallelism, call with the shard-local pools and the
     matching q head block (H/n query heads against Hkv/n pool heads): all
     shapes derive from the operands and no reduction crosses KV heads, so
-    the kernel is oblivious to running inside a ``shard_map``.
+    the kernel is oblivious to running inside a ``shard_map``.  Occupancy is
+    per-position, so the SAME (replicated) occupancy array goes to every
+    shard.
     """
     b, _, h, d = q.shape
     _, page_size, hkv, _ = k_pool.shape
@@ -226,23 +277,35 @@ def paged_decode_attention(
     scale = scale if scale is not None else d**-0.5
     qg = (q[:, 0].astype(jnp.float32) * scale).reshape(b, hkv, g, d)
     any_spec = pl.BlockSpec(memory_space=pl.ANY)
+    n_any = (4 if quant else 2) + (1 if occupancy is not None else 0)
+    out_specs = pl.BlockSpec((1, hkv, g, d), lambda i, pt, ln: (i, 0, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32)
+    if with_visits:
+        out_specs = (out_specs, pl.BlockSpec((1,), lambda i, pt, ln: (i,)))
+        out_shape = (out_shape, jax.ShapeDtypeStruct((b,), jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b,),
         in_specs=[pl.BlockSpec((1, hkv, g, d), lambda i, pt, ln: (i, 0, 0, 0))]
-        + [any_spec] * (4 if quant else 2),
-        out_specs=pl.BlockSpec((1, hkv, g, d), lambda i, pt, ln: (i, 0, 0, 0)),
+        + [any_spec] * n_any,
+        out_specs=out_specs,
     )
     kernel = functools.partial(
-        _attn_kernel, page_size=page_size, logit_cap=logit_cap, window=window, quant=quant
+        _attn_kernel, page_size=page_size, logit_cap=logit_cap, window=window, quant=quant,
+        occupancy=occupancy is not None, skip=skip, visits=with_visits,
     )
     operands = (page_table, lengths, qg, k_pool, v_pool)
     if quant:
         operands += (k_scale, v_scale)
+    if occupancy is not None:
+        operands += (occupancy,)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)
+    if with_visits:
+        out, visits = out
+        return out.reshape(b, 1, h, d).astype(q.dtype), visits
     return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -37,8 +37,10 @@ def block_sparse_matmul_ref(x, w, x_tile_mask=None, w_tile_mask=None, *, block=(
     return xz @ wz
 
 
-def flash_attention_ref(q, k, v, *, causal=True, window=None, logit_cap=None):
-    return reference_attention(q, k, v, causal=causal, window=window, logit_cap=logit_cap)
+def flash_attention_ref(q, k, v, *, causal=True, window=None, logit_cap=None, policy=None):
+    return reference_attention(
+        q, k, v, causal=causal, window=window, logit_cap=logit_cap, policy=policy
+    )
 
 
 def wkv6_ref(r, k, v, w, u):

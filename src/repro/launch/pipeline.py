@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import KernelPolicy
 from repro.launch.sharding import SHARD_MAP_NO_CHECK as _SHARD_MAP_NO_CHECK, shard_map as _shard_map
 from repro.models import transformer, zoo
 
@@ -37,7 +38,8 @@ def stage_fn(cfg: ModelConfig, blocks: Any, h: Array, positions: Array) -> Array
     def body(hh, cycle_params):
         for i, pat in enumerate(cfg.attention_pattern):
             hh, _ = transformer.block_apply(
-                cycle_params[str(i)], cfg, pat, hh, positions, None, cfg.sparsity, None
+                cycle_params[str(i)], cfg, pat, hh, positions, None,
+                KernelPolicy.from_config(cfg.sparsity),
             )
         return hh, ()
 

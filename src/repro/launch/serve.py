@@ -78,6 +78,13 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16, help="[continuous] tokens per KV page")
     ap.add_argument("--prefill-chunk", type=int, default=16, help="[continuous] prompt tokens per prefill call")
     ap.add_argument("--tp", type=int, default=1, help="[continuous] tensor-parallel shards over the mesh 'model' axis")
+    ap.add_argument("--use-pallas", action="store_true", help="[continuous] fused Pallas kernels (interpret mode off-TPU)")
+    ap.add_argument(
+        "--tile-skip", default=None, choices=["on", "off"],
+        help="[continuous] tiled DynaTran datapath: 'on' skips all-dead KV/FFN "
+             "tiles, 'off' runs the identical tiled path without skipping "
+             "(parity twin); omit for the legacy dense datapath",
+    )
     ap.add_argument("--adaptive-rho", action="store_true", help="[continuous] close the rho loop over queue depth")
     ap.add_argument("--no-prefix-cache", action="store_true", help="[continuous] disable shared-prefix page caching")
     ap.add_argument("--kv-cache", default=None, choices=["bfloat16", "int8"], help="KV cache dtype override")
@@ -122,6 +129,8 @@ def main() -> None:
                     target_rho=args.target_rho,
                     adaptive_rho=args.adaptive_rho,
                     tp=args.tp,
+                    use_pallas=args.use_pallas,
+                    tile_skip=None if args.tile_skip is None else args.tile_skip == "on",
                 ),
             )
         except NotImplementedError as e:  # e.g. --tp on a slot-dense-only family

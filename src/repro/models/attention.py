@@ -8,11 +8,18 @@ GQA (H a multiple of Hkv) handled by logical head grouping — no materialised
 K/V repetition, the einsum carries the group axis, which is also what the
 TPU wants (smaller KV tiles, fewer HBM bytes).
 
-DynaTran hooks: ``sparsity`` + ``taus`` thread through so attention
-probabilities (site "attn_probs") can be threshold-pruned — exactly on the
+DynaTran hooks: a ``KernelPolicy`` (``policy=``) says whether attention
+probabilities (site "attn_probs") are threshold-pruned — exactly on the
 reference path; on the chunked path pruning is applied to chunk-local
 normalised probabilities (documented approximation; conservative for the
-running-max chunks).
+running-max chunks).  The legacy ``sparsity=``/``taus=`` kwargs still work
+through the ``resolve_policy`` deprecation adapter.
+
+``paged_skip_decode_attention`` is the reference twin of the fused Pallas
+paged kernel for DynaTran "kv" occupancy: a page-major online-softmax scan
+that *skips* all-dead pages through ``lax.cond`` — on CPU XLA executes only
+the taken branch, so dead pages cost neither gather nor MACs, and the
+skipped result is exactly equal to the mask-only reference.
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dynatran import SparsityConfig, site_prune
+from repro.core.policy import KernelPolicy, resolve_policy
 from repro.core.topk import topk_attention_probs
 from .layers import softcap as _softcap
 
@@ -52,9 +60,11 @@ def reference_attention(
     logit_cap: float | None = None,
     scale: float | None = None,
     bias: Array | None = None,
-    sparsity: SparsityConfig | None = None,
-    taus=None,
+    policy: KernelPolicy | None = None,
+    sparsity: SparsityConfig | None = None,  # deprecated: pass policy=
+    taus=None,  # deprecated: pass policy=
 ) -> Array:
+    pol = resolve_policy(policy, sparsity=sparsity, taus=taus)
     b, sq, h, d = q.shape
     _, skv, hkv, _ = k.shape
     g = h // hkv
@@ -72,11 +82,11 @@ def reference_attention(
     if window is not None and window > 0:
         mask &= kpos > qpos + (skv - sq) - window
     scores = jnp.where(mask, scores, NEG_INF)
-    if sparsity is not None and sparsity.mode == "topk":
-        scores = topk_attention_probs(scores, sparsity.topk_k)
+    if pol.mode == "topk":
+        scores = topk_attention_probs(scores, pol.topk_k)
     probs = jax.nn.softmax(scores, axis=-1)
-    if sparsity is not None and sparsity.mode == "dynatran" and taus is not None and "attn_probs" in sparsity.sites:
-        probs = site_prune(probs, "attn_probs", sparsity, taus)
+    if pol.wants("attn_probs"):
+        probs = pol.prune(probs, "attn_probs")
         probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)  # renormalise survivors
     out = jnp.einsum("bngst,btnd->bsngd", probs.astype(v.dtype), v)
     return out.reshape(b, sq, h, d)
@@ -100,13 +110,15 @@ def chunked_attention(
     scale: float | None = None,
     chunk_q: int = 512,
     chunk_k: int = 512,
-    sparsity: SparsityConfig | None = None,
-    taus=None,
+    policy: KernelPolicy | None = None,
+    sparsity: SparsityConfig | None = None,  # deprecated: pass policy=
+    taus=None,  # deprecated: pass policy=
 ) -> Array:
     """Double-scan flash attention: outer scan over q chunks, inner scan over
     kv chunks with online softmax; both bodies checkpointed so backward
     recomputes chunk-locally (peak memory O(chunk^2), not O(S^2) or
     O(S x chunk x layers)).  Supports causal + sliding-window masking."""
+    pol = resolve_policy(policy, sparsity=sparsity, taus=taus)
     b, sq, h, d = q.shape
     _, skv, hkv, _ = k.shape
     g = h // hkv
@@ -141,9 +153,9 @@ def chunked_attention(
         s = jnp.where(valid[None, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
-        if sparsity is not None and sparsity.mode == "dynatran" and taus is not None and "attn_probs" in sparsity.sites:
+        if pol.wants("attn_probs"):
             p_norm = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-9)
-            p = jnp.where(jnp.abs(p_norm) >= taus["attn_probs"], p, 0.0)
+            p = jnp.where(jnp.abs(p_norm) >= pol.tau("attn_probs"), p, 0.0)
         corr = jnp.exp(m - m_new)
         l = l * corr + p.sum(-1)
         acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
@@ -186,9 +198,11 @@ def sliding_window_attention(
     window: int,
     logit_cap: float | None = None,
     scale: float | None = None,
-    sparsity: SparsityConfig | None = None,
-    taus=None,
+    policy: KernelPolicy | None = None,
+    sparsity: SparsityConfig | None = None,  # deprecated: pass policy=
+    taus=None,  # deprecated: pass policy=
 ) -> Array:
+    pol = resolve_policy(policy, sparsity=sparsity, taus=taus)
     b, s, h, d = q.shape
     _, skv, hkv, _ = k.shape
     if s != skv:
@@ -219,8 +233,8 @@ def sliding_window_attention(
     mask = inband[None] & valid_prev  # [nb, w, 2w]
     scores = jnp.where(mask[None, :, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
-    if sparsity is not None and sparsity.mode == "dynatran" and taus is not None and "attn_probs" in sparsity.sites:
-        probs = site_prune(probs, "attn_probs", sparsity, taus)
+    if pol.wants("attn_probs"):
+        probs = pol.prune(probs, "attn_probs")
         probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
     out = jnp.einsum("bcngst,bctnd->bcsngd", probs, v2.astype(jnp.float32))
     out = out.reshape(b, nb * w, h, d)[:, :s]
@@ -341,3 +355,142 @@ def ring_chunk_attention(
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bngst,btnd->bsngd", probs, vals.astype(jnp.float32))
     return out.reshape(b, c, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# DynaTran "kv"-occupancy decode attention: page-major online softmax that
+# SKIPS all-dead pages — the reference-backend twin of the fused Pallas
+# ``paged_decode_attention(..., occupancy=...)`` kernel.
+# ---------------------------------------------------------------------------
+
+
+def _gather_page(entry, ids: Array) -> Array:
+    """Gather one page per batch row from a pool entry, dequantising int8
+    pools exactly like ``kvcache.dequantize_kv`` (same ops, same dtypes)."""
+    if isinstance(entry, dict):
+        return entry["q"][ids].astype(jnp.bfloat16) * entry["scale"][ids][..., None]
+    return entry[ids]
+
+
+def paged_skip_decode_pooled(
+    q: Array,  # [B, 1, H, D]
+    k_entry,  # pool entry [N, P, Hkv, D], or {"q": int8, "scale": bf16} for int8 pools
+    v_entry,
+    occ_pool: Array,  # [N, P] bool — DynaTran "kv" occupancy (True = live)
+    table: Array,  # [B, maxp] int32 page ids
+    lengths: Array,  # [B] int32 — tokens in the cache INCLUDING the current one
+    *,
+    window: int | None = None,  # set for ring tables (capacity = maxp * P)
+    logit_cap: float | None = None,
+    scale: float | None = None,
+    skip: bool = True,  # False = mask-only exact reference
+) -> Array:
+    """Online-softmax decode straight off the page POOL with DynaTran page
+    skipping.
+
+    Mirrors the Pallas ``_attn_kernel`` op-for-op (same masking, same m0,
+    same accumulate order) but scans ALL table pages with a scalar
+    ``lax.cond`` per page, and — crucially — the table gather (plus int8
+    dequantisation) happens INSIDE the taken branch: a page that is dead
+    across the whole batch costs neither pool reads nor FLOPs (XLA's
+    conditional runs only the taken branch), which is what makes the bench's
+    rho-vs-tokens/s curve rise.  Pre-gathering the whole table and skipping
+    only the arithmetic would leave the dominant per-page cost — the memory
+    traffic — unskipped.  The predicate ANDs liveness over the batch, so a
+    page one row still needs is processed for all rows; dead rows just mask
+    to NEG_INF, which is the exact same computation as the mask-only
+    reference.
+
+    Exactness (``skip=True`` == ``skip=False``, bitwise up to +/-0.0): the
+    query's own position is always kept live, so every row sees >= 1 live
+    key; an all-dead page processed by the mask path is an online-softmax
+    no-op — before any live page its pollution is wiped by
+    ``corr = exp(NEG_INF - m) == 0.0``, after one its probs underflow to
+    exactly 0.0.  Both modes route through the same ``lax.cond`` (the mask
+    path with a runtime-true predicate) so their lowering is identical.
+    """
+    b, _, h, d = q.shape
+    maxp = table.shape[1]
+    p = occ_pool.shape[1]
+    hkv = (k_entry["q"] if isinstance(k_entry, dict) else k_entry).shape[-2]
+    g = h // hkv
+    scale = scale if scale is not None else d**-0.5
+    qg = _group_heads(q, hkv)[:, 0].astype(jnp.float32) * scale  # [B,Hkv,G,D]
+    capacity = maxp * p
+    last = (lengths - 1)[:, None, None]  # [B,1,1] — the query's own absolute position
+
+    # the page-validity predicate is computed VECTORISED up front (one fused
+    # [B, maxp, P] bool pipeline + one [maxp] reduction), not per scan step:
+    # the serial scan must stay cheap for DEAD pages, or the per-iteration
+    # predicate math would eat the very time skipping is supposed to save
+    off = jnp.arange(capacity).reshape(maxp, p)  # [maxp, P] slot offsets
+    if window is None:
+        pos = jnp.broadcast_to(off[None], (b, maxp, p))
+        base = off[None] < lengths[:, None, None]
+    else:
+        pos = last - ((last - off[None]) % capacity)  # ring slot -> absolute
+        base = (pos >= 0) & (pos > last - window)
+    valid_all = base & (occ_pool[table] | (pos == last))  # [B, maxp, P]
+    live_all = jnp.any(valid_all, axis=(0, 2))  # [maxp]
+    if not skip:
+        live_all = jnp.logical_or(live_all, lengths[0] >= 0)  # runtime-true
+
+    def body(carry, xs):
+        ids, valid, page_live = xs  # ids [B]; valid [B,P]; page_live scalar
+
+        def compute(c):
+            m, l, acc = c
+            kb = _gather_page(k_entry, ids)  # [B,P,Hkv,D] — only for live pages
+            vb = _gather_page(v_entry, ids)
+            s = jnp.einsum("bngd,btnd->bngt", qg, kb.astype(jnp.float32))  # [B,Hkv,G,P]
+            if logit_cap is not None and logit_cap > 0:
+                s = logit_cap * jnp.tanh(s / logit_cap)
+            s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            probs = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + probs.sum(-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum("bngt,btnd->bngd", probs, vb.astype(jnp.float32))
+            return m_new, l_new, acc_new
+
+        return jax.lax.cond(page_live, compute, lambda c: c, carry), None
+
+    m0 = jnp.full((b, hkv, g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, d), jnp.float32)
+    xs = (jnp.moveaxis(table, 1, 0), jnp.moveaxis(valid_all, 1, 0), live_all)
+    (_, lsum, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(lsum, 1e-30)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def paged_skip_decode_attention(
+    q: Array,  # [B, 1, H, D]
+    k_pages: Array,  # [B, maxp, P, Hkv, D] — page-major table-gathered (dequantised) cache
+    v_pages: Array,
+    occ_pages: Array,  # [B, maxp, P] bool — DynaTran "kv" occupancy (True = live)
+    lengths: Array,  # [B] int32 — tokens in the cache INCLUDING the current one
+    *,
+    window: int | None = None,  # set for ring tables (capacity = maxp * P)
+    logit_cap: float | None = None,
+    scale: float | None = None,
+    skip: bool = True,  # False = mask-only exact reference
+) -> Array:
+    """Array-level view of ``paged_skip_decode_pooled`` for pre-gathered
+    page-major caches: the [B, maxp] page grid becomes a trivial pool with
+    an identity table (same gather elements, same einsums, same accumulate
+    order — identical numerics)."""
+    b, maxp, p, hkv, d = k_pages.shape
+    table = jnp.arange(b * maxp, dtype=jnp.int32).reshape(b, maxp)
+    return paged_skip_decode_pooled(
+        q,
+        k_pages.reshape(b * maxp, p, hkv, d),
+        v_pages.reshape(b * maxp, p, hkv, d),
+        occ_pages.reshape(b * maxp, p),
+        table,
+        lengths,
+        window=window,
+        logit_cap=logit_cap,
+        scale=scale,
+        skip=skip,
+    )

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.dynatran import SparsityConfig, site_prune
+from repro.core.dynatran import SparsityConfig
+from repro.core.policy import KernelPolicy, resolve_policy
 from .attention import reference_attention
 from .layers import dense_init, embed_init, gelu, layer_norm, layer_norm_init
 
@@ -63,11 +64,12 @@ def forward(
     cfg: ModelConfig,
     tokens: Array,
     *,
-    taus=None,
-    sparsity: SparsityConfig | None = None,
+    policy: KernelPolicy | None = None,
+    taus=None,  # deprecated: pass policy=
+    sparsity: SparsityConfig | None = None,  # deprecated: pass policy=
 ) -> Array:
     """Returns pooled classification logits [B, n_classes]."""
-    sp = sparsity if sparsity is not None else cfg.sparsity
+    pol = resolve_policy(policy, sparsity=sparsity, taus=taus, default_sparsity=cfg.sparsity)
     B, S = tokens.shape
     h = params["embed"][tokens] + params["pos_embed"][jnp.arange(S)]
     h = layer_norm(params["ln_embed"], h)
@@ -77,11 +79,11 @@ def forward(
         q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
         k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
         v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
-        ao = reference_attention(q, k, v, causal=False, sparsity=sp, taus=taus)
-        ao = site_prune(ao, "attn_out", sp, taus)
+        ao = reference_attention(q, k, v, causal=False, policy=pol)
+        ao = pol.prune(ao, "attn_out")
         h = layer_norm(p["ln1"], h + jnp.einsum("bshk,hkd->bsd", ao, p["wo"]))
         mid = gelu(h @ p["mlp"]["w_up"])
-        mid = site_prune(mid, "ffn_act", sp, taus)
+        mid = pol.prune(mid, "ffn_act")
         h = layer_norm(p["ln2"], h + mid @ p["mlp"]["w_down"])
         return h, ()
 

@@ -104,6 +104,9 @@ class StateKind:
     shareable: bool  # prefix-cache eligible (pure function of the prefix)
     tp: str  # "kv_heads" | "replicated" — launch/sharding.py maps to specs
     page_kind: str | None = None  # allocator key for paged kinds
+    # side-array kind emitted at scatter time (DynaTran "kv" occupancy bits
+    # riding the parent kind's page ids; see init_occupancy below)
+    occupancy_kind: str | None = None
 
 
 STATE_KINDS: dict[str, StateKind] = {}
@@ -116,9 +119,16 @@ def register_state_kind(kind: StateKind) -> StateKind:
     return kind
 
 
-register_state_kind(StateKind("paged-full", paged=True, shareable=True, tp="kv_heads", page_kind="full"))
-register_state_kind(StateKind("paged-int8", paged=True, shareable=True, tp="kv_heads", page_kind="full"))
-register_state_kind(StateKind("paged-ring", paged=True, shareable=False, tp="kv_heads", page_kind="ring"))
+# DynaTran KV occupancy: one bit per cached position, 1 = live.  A "kv"-site
+# policy marks a position dead at scatter time when max|k| < tau_kv; the
+# paged decode attention then masks dead positions and SKIPS all-dead pages
+# outright.  Occupancy is per-POSITION (not per-KV-head), so under TP it is
+# replicated while its parent pools shard on the head axis.
+register_state_kind(StateKind("kv-occupancy", paged=False, shareable=True, tp="replicated"))
+
+register_state_kind(StateKind("paged-full", paged=True, shareable=True, tp="kv_heads", page_kind="full", occupancy_kind="kv-occupancy"))
+register_state_kind(StateKind("paged-int8", paged=True, shareable=True, tp="kv_heads", page_kind="full", occupancy_kind="kv-occupancy"))
+register_state_kind(StateKind("paged-ring", paged=True, shareable=False, tp="kv_heads", page_kind="ring", occupancy_kind="kv-occupancy"))
 # slot-dense recurrent state: hymba's Mamba side-state and rwkv6's
 # wkv/token-shift state — O(1) per sequence, reset/replayed at admission
 register_state_kind(StateKind("slot-ssm", paged=False, shareable=False, tp="replicated"))
@@ -594,6 +604,32 @@ def init_paged_pools(
     k = {str(i): entry(kind) for i, kind in enumerate(layout.slot_kinds)}
     v = {str(i): entry(kind) for i, kind in enumerate(layout.slot_kinds)}
     return PagedKV(k=k, v=v)
+
+
+def init_occupancy(layout: PagedLayout, n_cycles: int, num_pages: dict[str, int] | int) -> dict[str, Any]:
+    """The "kv-occupancy" side arrays: per slot, bool [n_cycles, num_pages, P]
+    with 1 = live, mirroring the parent pools' page axes (same page ids, no
+    head/feature dims).  Initialised ALL-LIVE so with the "kv" site inactive
+    (or tau_kv == 0) every dense-parity invariant holds with zero changes —
+    bits only turn dead when a policy marks them at scatter time."""
+    if isinstance(num_pages, int):
+        num_pages = {k: num_pages for k in layout.kinds}
+    return {
+        str(i): jnp.ones((n_cycles, num_pages[kind], layout.page_size), jnp.bool_)
+        for i, kind in enumerate(layout.slot_kinds)
+    }
+
+
+def occupancy_bit(k_new: Array, tau) -> Array:
+    """Scatter-time DynaTran "kv" site: a cached position is *live* iff any
+    key element survives the threshold (max over (Hkv, D) of |k| >= tau) —
+    the per-position analogue of ``dynatran_prune``'s any(keep) tile mask.
+
+    Must be computed from the FULL key (before any TP head slicing) so every
+    shard agrees on the replicated bit.  ``k_new`` is [..., Hkv, D]; the
+    result drops the last two axes."""
+    mag = jnp.max(jnp.abs(k_new.astype(jnp.float32)), axis=(-2, -1))
+    return mag >= tau
 
 
 # ---------------------------------------------------------------------------

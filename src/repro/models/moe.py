@@ -24,7 +24,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.dynatran import SparsityConfig, site_prune
+from repro.core.dynatran import SparsityConfig
+from repro.core.policy import KernelPolicy, resolve_policy
 from repro.launch.sharding import constrain
 from .layers import ACTIVATIONS, dense_init
 
@@ -55,10 +56,12 @@ def moe_ffn(
     glu: bool = True,
     capacity_factor: float = 1.25,
     group_size: int = GROUP_SIZE,
-    sparsity: SparsityConfig | None = None,
-    taus: Any = None,
+    policy: KernelPolicy | None = None,
+    sparsity: SparsityConfig | None = None,  # deprecated: pass policy=
+    taus: Any = None,  # deprecated: pass policy=
 ) -> tuple[Array, dict]:
     """Returns (output [B,S,D], aux metrics incl. load-balancing loss)."""
+    pol = resolve_policy(policy, sparsity=sparsity, taus=taus)
     B, S, D = x.shape
     T = B * S
     E, K = n_experts, top_k
@@ -119,8 +122,7 @@ def moe_ffn(
         h = act_fn(gate) * up
     else:
         h = act_fn(up)
-    if sparsity is not None:
-        h = site_prune(h, "ffn_act", sparsity, taus)
+    h = pol.prune(h, "ffn_act")
     y = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))  # [G, E, C, D]
     y = constrain(y, "experts")
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.dynatran import site_prune
+from repro.core.policy import KernelPolicy, resolve_policy
 from repro.launch.sharding import constrain
 from .layers import dense_init, embed_init, layer_norm, layer_norm_init
 
@@ -224,7 +224,7 @@ def _last_valid(x: Array, prev: Array | None, n_valid: Array | None) -> Array:
     return jnp.where((n_valid > 0)[:, None], picked, prev)
 
 
-def time_mix(tm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None, n_valid: Array | None = None):
+def time_mix(tm: dict, cfg: ModelConfig, x: Array, state: dict | None, pol: KernelPolicy | None = None, n_valid: Array | None = None):
     """``n_valid`` [B] (serving prefill chunks, right-padded): padded
     positions become identity wkv updates (w=1, k=0) and the token-shift
     carry ends at the last valid position, so the returned state is exactly
@@ -259,41 +259,44 @@ def time_mix(tm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None
     mu = (mu - mu.mean(-1, keepdims=True)) * jax.lax.rsqrt(mu.var(-1, keepdims=True) + 1e-5)
     out = (mu.reshape(B, S, D) * tm["gn"]["scale"] + tm["gn"]["bias"]).astype(x.dtype)
     out = out * g
-    out = site_prune(out, "attn_out", cfg.sparsity, taus)
+    if pol is not None:
+        out = pol.prune(out, "attn_out")
     new_state = {"x_tm": _last_valid(x, None if state is None else state["x_tm"], n_valid), "s": s_new}
     return out @ tm["wo"].astype(x.dtype), new_state
 
 
-def channel_mix(cm: dict, cfg: ModelConfig, x: Array, state: dict | None, taus=None, n_valid: Array | None = None):
+def channel_mix(cm: dict, cfg: ModelConfig, x: Array, state: dict | None, pol: KernelPolicy | None = None, n_valid: Array | None = None):
     xprev = _shift(x, None if state is None else state["x_cm"])
     xx = xprev - x
     xk = (x + xx * cm["mu_k"]).astype(x.dtype)
     xr = (x + xx * cm["mu_r"]).astype(x.dtype)
     k = jnp.square(jax.nn.relu(xk @ cm["wk"].astype(x.dtype)))
-    k = site_prune(k, "ffn_act", cfg.sparsity, taus)
+    if pol is not None:
+        k = pol.prune(k, "ffn_act")
     out = jax.nn.sigmoid(xr @ cm["wr"].astype(x.dtype)) * (k @ cm["wv"].astype(x.dtype))
     return out, {"x_cm": _last_valid(x, None if state is None else state["x_cm"], n_valid)}
 
 
-def forward(params: dict, cfg: ModelConfig, tokens: Array, *, taus=None, last_only: bool = False, **_unused) -> tuple[Array, dict]:
+def forward(params: dict, cfg: ModelConfig, tokens: Array, *, policy=None, taus=None, last_only: bool = False, **_unused) -> tuple[Array, dict]:
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     h = constrain(layer_norm(params["ln_in"], params["embed"][tokens]), "residual")
 
     def body(h, p):
-        a, _ = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), None, taus)
+        a, _ = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), None, pol)
         h = h + a
-        c, _ = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), None, taus)
+        c, _ = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), None, pol)
         h = h + c
         return constrain(h, "residual"), ()
 
     if cfg.remat != "none":
         # "full" saves only the carry per layer (the dots-saveable policy
         # stacked 40+ [L,B,S,D] f32 dot outputs: 32 GiB each on rwkv6-7b)
-        policy = (
+        ckpt_policy = (
             jax.checkpoint_policies.dots_with_no_batch_dims_saveable
             if cfg.remat == "save_dots"
             else jax.checkpoint_policies.nothing_saveable
         )
-        body = jax.checkpoint(body, policy=policy, prevent_cse=True)
+        body = jax.checkpoint(body, policy=ckpt_policy, prevent_cse=True)
     h, _ = jax.lax.scan(body, h, params["blocks"])
     if last_only:
         h = h[:, -1:]
@@ -319,16 +322,17 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bflo
     return DecodeState(k=None, v=None, ssm=ssm, length=jnp.zeros((batch,), jnp.int32))
 
 
-def decode_step(params: dict, cfg: ModelConfig, state, tokens: Array, *, taus=None, **_unused):
+def decode_step(params: dict, cfg: ModelConfig, state, tokens: Array, *, policy=None, taus=None, **_unused):
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     from .kvcache import DecodeState
 
     h = layer_norm(params["ln_in"], params["embed"][tokens])  # [B,1,D]
 
     def body(h, xs):
         p, x_tm, x_cm, s = xs
-        a, st_tm = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, taus)
+        a, st_tm = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, pol)
         h = h + a
-        c, st_cm = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, taus)
+        c, st_cm = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, pol)
         h = h + c
         return h, (st_tm["x_tm"], st_cm["x_cm"], st_tm["s"])
 
@@ -382,10 +386,12 @@ def paged_decode_step(
     length: Array,
     tokens: Array,  # [B, 1]
     *,
+    occupancy=None,  # rwkv6 has no paged KV: accepted for protocol uniformity, passed through
     ssm: dict,
     live: Array | None = None,
-    taus=None,
-    use_pallas: bool = False,
+    policy=None,
+    taus=None,  # deprecated: pass policy=
+    use_pallas: bool | None = None,  # deprecated: pass policy=
     tp=None,
 ):
     """One serve step on the slot-dense state.  ``live`` masks the state
@@ -394,13 +400,14 @@ def paged_decode_step(
     hazard hymba's side-state has; there is no trash-page sink for
     slot-dense state).  Ops match ``decode_step`` exactly, so engine decode
     is bitwise-identical to the dense-state replay."""
+    pol = resolve_policy(policy, taus=taus, use_pallas=use_pallas, default_sparsity=cfg.sparsity)
     h = layer_norm(params["ln_in"], params["embed"][tokens])  # [B,1,D]
 
     def body(h, xs):
         p, x_tm, x_cm, s = xs
-        a, st_tm = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, taus)
+        a, st_tm = time_mix(p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, pol)
         h = h + a
-        c, st_cm = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, taus)
+        c, st_cm = channel_mix(p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, pol)
         h = h + c
         nx_tm, nx_cm, ns = st_tm["x_tm"], st_cm["x_cm"], st_tm["s"]
         if live is not None:
@@ -413,7 +420,7 @@ def paged_decode_step(
     h, (x_tm, x_cm, s) = jax.lax.scan(body, h, xs)
     h = layer_norm(params["final_norm"], h)
     logits = (h @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
-    return logits[:, 0], pools, {"x_tm": x_tm, "x_cm": x_cm, "s": s}
+    return logits[:, 0], pools, occupancy, {"x_tm": x_tm, "x_cm": x_cm, "s": s}
 
 
 def paged_prefill_chunk(
@@ -426,9 +433,11 @@ def paged_prefill_chunk(
     tokens: Array,  # [B, C] right-padded chunk
     n_valid: Array,  # [B] real tokens per row (0 = inactive row)
     *,
+    occupancy=None,  # no paged KV: passed through
     ssm: dict,
     fresh: Array | None = None,  # [B] rows (re)starting prefill: state zeroed
-    taus=None,
+    policy=None,
+    taus=None,  # deprecated: pass policy=
     tp=None,
 ):
     """Batched chunk prefill on the slot-dense state: padded positions are
@@ -437,6 +446,7 @@ def paged_prefill_chunk(
     wkv recurrence runs SEQUENTIALLY so any chunk size replays per-token
     decode op-for-op.  Returns next-token logits at each row's last valid
     position."""
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     h = layer_norm(params["ln_in"], params["embed"][tokens])  # [B,C,D]
 
     def body(h, xs):
@@ -446,11 +456,11 @@ def paged_prefill_chunk(
             x_cm = jnp.where(fresh[:, None], jnp.zeros_like(x_cm), x_cm)
             s = jnp.where(fresh[:, None, None, None], jnp.zeros_like(s), s)
         a, st_tm = time_mix(
-            p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, taus, n_valid=n_valid
+            p["tm"], cfg, layer_norm(p["ln1"], h), {"x_tm": x_tm, "s": s}, pol, n_valid=n_valid
         )
         h = h + a
         c, st_cm = channel_mix(
-            p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, taus, n_valid=n_valid
+            p["cm"], cfg, layer_norm(p["ln2"], h), {"x_cm": x_cm}, pol, n_valid=n_valid
         )
         h = h + c
         return h, (st_tm["x_tm"], st_cm["x_cm"], st_tm["s"])
@@ -461,4 +471,4 @@ def paged_prefill_chunk(
     h = jnp.take_along_axis(h, last, axis=1)  # last valid position per row
     h = layer_norm(params["final_norm"], h)
     logits = (h @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
-    return logits[:, 0], pools, {"x_tm": x_tm, "x_cm": x_cm, "s": s}
+    return logits[:, 0], pools, occupancy, {"x_tm": x_tm, "x_cm": x_cm, "s": s}

@@ -17,7 +17,9 @@ Key structural choices (production patterns):
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.dynatran import SparsityConfig, site_prune
+from repro.core.policy import KernelPolicy, resolve_policy
 from repro.launch.sharding import constrain
 from . import attention as attn
 from .kvcache import (
@@ -33,14 +36,21 @@ from .kvcache import (
     PagedLayout,
     StateBundle,
     StateComponent,
+    copy_pool_pages,
     entry_copy_pages,
     entry_gather,
     entry_gather_ring,
     entry_scatter_chunk,
     entry_scatter_token,
+    init_occupancy,
     init_paged_pools,
+    occupancy_bit,
     quantize_kv,
     dequantize_kv,
+    scatter_chunk,
+    scatter_chunk_ring,
+    scatter_token,
+    scatter_token_ring,
 )
 from .layers import ACTIVATIONS, apply_mrope, apply_rope, dense_init, embed_init, make_norm, rms_norm, softcap
 from .moe import moe_ffn, moe_init
@@ -138,7 +148,7 @@ def _qkv(p: dict, cfg: ModelConfig, h: Array, positions: Array, positions_3d: Ar
     return x, q, k, v
 
 
-def _mlp(p: dict, cfg: ModelConfig, x: Array, sparsity: SparsityConfig, taus) -> tuple[Array, dict]:
+def _mlp(p: dict, cfg: ModelConfig, x: Array, pol: KernelPolicy) -> tuple[Array, dict]:
     if cfg.n_experts:
         return moe_ffn(
             p["moe"],
@@ -148,13 +158,21 @@ def _mlp(p: dict, cfg: ModelConfig, x: Array, sparsity: SparsityConfig, taus) ->
             act=cfg.act,
             glu=cfg.glu,
             capacity_factor=cfg.capacity_factor,
-            sparsity=sparsity,
-            taus=taus,
+            policy=pol,
         )
     act = ACTIVATIONS[cfg.act]
     up = x @ p["mlp"]["w_up"].astype(x.dtype)
     hmid = act(x @ p["mlp"]["w_gate"].astype(x.dtype)) * up if cfg.glu else act(up)
-    hmid = site_prune(hmid, "ffn_act", sparsity, taus)
+    if pol.wants("ffn_act"):
+        hmid = pol.prune(hmid, "ffn_act")
+        if pol.tiled:
+            # tile-granular down-projection: dead activation tiles skip the
+            # MAC outright (ops.ffn_block_sparse; skip=False is the bitwise
+            # mask-only twin).  Legacy policies (skip=None) keep the dense
+            # matmul below — old numerics, bit for bit.
+            from repro.kernels.ops import ffn_block_sparse
+
+            return ffn_block_sparse(hmid, p["mlp"]["w_down"], pol), {}
     return hmid @ p["mlp"]["w_down"].astype(x.dtype), {}
 
 
@@ -165,8 +183,7 @@ def block_apply(
     h: Array,
     positions: Array,
     positions_3d: Array | None,
-    sparsity: SparsityConfig,
-    taus,
+    pol: KernelPolicy,
 ) -> tuple[Array, dict]:
     """One transformer block, prefill/train mode."""
     _, norm = make_norm(cfg.norm)
@@ -175,9 +192,9 @@ def block_apply(
     win = cfg.window if (pattern == "sliding" and cfg.window) else None
     ao = attn.chunked_attention(
         q, k, v, causal=True, window=win, logit_cap=cfg.attn_logit_cap,
-        chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k, sparsity=sparsity, taus=taus
+        chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k, policy=pol
     )
-    ao = site_prune(ao, "attn_out", sparsity, taus)
+    ao = pol.prune(ao, "attn_out")
     attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
     if cfg.ssm_state:  # hymba: SSM path in parallel with attention
         ssm_out, _ = ssm_mix(p["ssm"], norm(p["ssm_ln"], h))
@@ -185,11 +202,11 @@ def block_apply(
     if cfg.post_norms:
         attn_out = norm(p["post_attn_norm"], attn_out)
     h = h + attn_out
-    mlp_out, metrics = _mlp(p, cfg, norm(p["ln2"], h), sparsity, taus)
+    mlp_out, metrics = _mlp(p, cfg, norm(p["ln2"], h), pol)
     if cfg.post_norms:
         mlp_out = norm(p["post_mlp_norm"], mlp_out)
     h = h + mlp_out
-    h = site_prune(h, "block_out", sparsity, taus)
+    h = pol.prune(h, "block_out")
     return h, metrics
 
 
@@ -205,14 +222,15 @@ def forward(
     *,
     embeds: Array | None = None,  # [vlm]: precomputed patch/text embeddings
     positions_3d: Array | None = None,
-    taus=None,
+    policy: KernelPolicy | None = None,
+    taus=None,  # deprecated: pass policy=
     last_only: bool = False,
 ) -> tuple[Array, dict]:
     """Returns (logits [B,S,V], metrics).  ``last_only`` slices the final
     hidden state to the last position BEFORE the LM head — serving prefill
     only needs next-token logits, and the full-sequence head matmul is the
     single largest FLOP term of the prefill step (2*B*S*D*V)."""
-    sparsity = cfg.sparsity
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     B, S = tokens.shape
     h = params["embed"][tokens] if embeds is None else embeds.astype(jnp.dtype(cfg.dtype))
     if cfg.embed_scale:
@@ -228,7 +246,7 @@ def forward(
     def cycle_body(carry, cycle_params):
         hh, aux_acc = carry
         for i, pat in enumerate(cfg.attention_pattern):
-            hh, m = block_apply(cycle_params[str(i)], cfg, pat, hh, positions, positions_3d, sparsity, taus)
+            hh, m = block_apply(cycle_params[str(i)], cfg, pat, hh, positions, positions_3d, pol)
             hh = constrain(hh, "residual")
             if "moe_aux_loss" in m:
                 aux_acc = {"moe_aux_loss": aux_acc["moe_aux_loss"] + m["moe_aux_loss"]}
@@ -236,12 +254,12 @@ def forward(
 
     body = cycle_body
     if cfg.remat != "none":
-        policy = (
+        ckpt_policy = (
             jax.checkpoint_policies.dots_with_no_batch_dims_saveable
             if cfg.remat == "save_dots"
             else jax.checkpoint_policies.nothing_saveable
         )
-        body = jax.checkpoint(cycle_body, policy=policy, prevent_cse=True)
+        body = jax.checkpoint(cycle_body, policy=ckpt_policy, prevent_cse=True)
 
     (h, aux), _ = jax.lax.scan(body, (h, aux), params["blocks"])
     _, norm = make_norm(cfg.norm)
@@ -314,10 +332,11 @@ def decode_step(
     tokens: Array,  # [B, 1]
     *,
     positions_3d: Array | None = None,
-    taus=None,
+    policy: KernelPolicy | None = None,
+    taus=None,  # deprecated: pass policy=
 ) -> tuple[Array, DecodeState]:
     """One serve step: logits for the next token + updated caches."""
-    sparsity = cfg.sparsity
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     B = tokens.shape[0]
     h = params["embed"][tokens]
     if cfg.embed_scale:
@@ -353,7 +372,7 @@ def decode_step(
             ao = attn.decode_attention(
                 q, k_read, v_read, eff_len, window=None, logit_cap=cfg.attn_logit_cap
             )
-            ao = site_prune(ao, "attn_out", sparsity, taus)
+            ao = pol.prune(ao, "attn_out")
             attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
             if cfg.ssm_state:
                 ssm_out, s_new = ssm_mix(p["ssm"], norm(p["ssm_ln"], hh), state=ssmc[str(i)])
@@ -362,7 +381,7 @@ def decode_step(
             if cfg.post_norms:
                 attn_out = norm(p["post_attn_norm"], attn_out)
             hh = hh + attn_out
-            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), sparsity, taus)
+            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), pol)
             if cfg.post_norms:
                 mlp_out = norm(p["post_mlp_norm"], mlp_out)
             hh = hh + mlp_out
@@ -518,17 +537,34 @@ def init_paged_ssm(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
 init_slot_state = init_paged_ssm
 
 
-def paged_copy_pages(layout: PagedLayout, pools: PagedKV, kind: str, src: Array, dst: Array) -> PagedKV:
+def init_paged_occupancy(cfg: ModelConfig, layout: PagedLayout, num_pages: dict[str, int] | int):
+    """Per-page DynaTran "kv" occupancy side arrays for this config's paged
+    state (all-live; see ``kvcache.init_occupancy``)."""
+    return init_occupancy(layout, cfg.n_cycles, num_pages)
+
+
+def paged_copy_pages(
+    layout: PagedLayout,
+    pools: PagedKV,
+    kind: str,
+    src: Array,
+    dst: Array,
+    occupancy: dict[str, Array] | None = None,
+) -> tuple[PagedKV, dict[str, Array] | None]:
     """Copy pages ``src[i] -> dst[i]`` in every pool of ``kind`` (all pattern
-    slots, all cycles, K and V, int8 scale pools included) — the device half
-    of the scheduler's copy-on-write fork."""
+    slots, all cycles, K and V, int8 scale pools included, and the occupancy
+    side arrays when present — bits are page content and must fork with the
+    page) — the device half of the scheduler's copy-on-write fork."""
     k, v = dict(pools.k), dict(pools.v)
+    occ = dict(occupancy) if occupancy is not None else None
     for i, slot_kind in enumerate(layout.slot_kinds):
         if slot_kind != kind:
             continue
         k[str(i)] = entry_copy_pages(k[str(i)], src, dst)
         v[str(i)] = entry_copy_pages(v[str(i)], src, dst)
-    return PagedKV(k=k, v=v)
+        if occ is not None:
+            occ[str(i)] = copy_pool_pages(occ[str(i)], src, dst)
+    return PagedKV(k=k, v=v), occ
 
 
 def _ring_ctx_positions(start_len: Array, capacity: int) -> Array:
@@ -550,13 +586,23 @@ def _paged_attention(
     table: Array,
     length: Array,
     *,
-    use_pallas: bool,
+    pol: KernelPolicy,
+    occ: Array | None = None,  # per-cycle occupancy pool [num_pages, P] bool
 ) -> Array:
     """Decode attention for one pattern slot against its (just-written)
-    pools; ``length`` counts tokens cached BEFORE this step."""
+    pools; ``length`` counts tokens cached BEFORE this step.
+
+    When the policy's "kv" site is live AND a tiled datapath is selected
+    (``pol.tiled``), the per-page occupancy bits flow into the attention —
+    ``skip=True`` never gathers all-dead pages (the Pallas kernel ``@pl.when``s
+    past them; the ref path ``lax.cond``s past them), ``skip=False`` masks the
+    same positions through the identical datapath, bit for bit.  Otherwise the
+    historical occupancy-blind paths run unchanged.
+    """
     ring = layout.slot_kinds[i] == "ring"
     eff_len = jnp.minimum(length + 1, layout.window) if ring else length + 1
-    if use_pallas:
+    occ_live = occ is not None and pol.wants("kv") and pol.tiled
+    if pol.use_pallas:
         from repro.kernels.paged_attention import paged_decode_attention
 
         quant = isinstance(kcache, dict)
@@ -570,6 +616,23 @@ def _paged_attention(
             v_scale=vcache["scale"] if quant else None,
             window=layout.window if ring else None,
             logit_cap=cfg.attn_logit_cap,
+            occupancy=occ if occ_live else None,
+            skip=bool(pol.skip) if occ_live else True,
+            interpret=pol.interpret,
+        )
+    if occ_live:
+        # the pooled variant gathers pages INSIDE its per-page lax.cond, so a
+        # dead page costs neither the pool read nor the dequant nor the MACs
+        return attn.paged_skip_decode_pooled(
+            q,
+            kcache,
+            vcache,
+            occ,
+            table,
+            length + 1,
+            window=layout.window if ring else None,
+            logit_cap=cfg.attn_logit_cap,
+            skip=bool(pol.skip),
         )
     if ring:
         k_read = entry_gather_ring(kcache, table, length, layout.window)
@@ -589,14 +652,24 @@ def paged_decode_step(
     length: Array,  # [B] int32 — tokens already cached per row
     tokens: Array,  # [B, 1]
     *,
+    occupancy: dict[str, Array] | None = None,  # slot -> [n_cycles, num_pages, P] bool
     ssm=None,  # hybrid side-state from init_paged_ssm (or None)
     live: Array | None = None,  # [B] bool: rows with a decoding request
-    taus=None,
-    use_pallas: bool = False,
+    policy: KernelPolicy | None = None,
+    taus=None,  # deprecated: pass policy=
+    use_pallas: bool | None = None,  # deprecated: pass policy=
     tp: tuple[str, int] | None = None,  # set when traced inside shard_map (see make_tp_paged_fns)
-) -> tuple[Array, PagedKV, Any]:
-    """One serve step against the paged cache: logits + updated pools (and
-    updated SSM side-state for hybrid models).
+) -> tuple[Array, PagedKV, dict[str, Array] | None, Any]:
+    """One serve step against the paged cache: logits + updated pools, the
+    updated per-page occupancy bits, and updated SSM side-state for hybrid
+    models.
+
+    ``occupancy`` carries the DynaTran "kv" site (see ``init_occupancy``):
+    when the policy enables it, each scattered key also scatters one liveness
+    bit — computed from the FULL key before any TP head slicing — and the
+    decode attention consumes the bits to skip all-dead pages.  ``None`` (or
+    an inactive policy) reproduces the historical occupancy-blind step and
+    returns the occupancy unchanged.
 
     ``live`` masks the SSM state update to rows that actually decode this
     step: K/V writes of idle rows are trash-routed by their page tables,
@@ -608,7 +681,7 @@ def paged_decode_step(
     shard, and all-gathers the per-head attention outputs — bitwise-equal
     to the unsharded step.
     """
-    sparsity = cfg.sparsity
+    pol = resolve_policy(policy, taus=taus, use_pallas=use_pallas, default_sparsity=cfg.sparsity)
     h = params["embed"][tokens]
     if cfg.embed_scale:
         h = h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype)
@@ -617,21 +690,34 @@ def paged_decode_step(
     positions = length[:, None]  # [B,1]
     _, norm = make_norm(cfg.norm)
 
+    kv_site = occupancy is not None and pol.wants("kv") and pol.tiled
+
     def cycle_body(carry, xs):
         hh = carry
-        cycle_params, kc, vc, ssmc = xs
-        new_k, new_v, new_ssm = {}, {}, {}
+        cycle_params, kc, vc, occ_c, ssmc = xs
+        new_k, new_v, new_occ, new_ssm = {}, {}, {}, {}
         for i, _pat in enumerate(cfg.attention_pattern):
             p = cycle_params[str(i)]
             table = tables[layout.slot_kinds[i]]
             ring = layout.slot_kinds[i] == "ring"
             _x, q, k1, v1 = _qkv(p, cfg, hh, positions, None)
+            occ_i = None
+            if kv_site:
+                # liveness bit from the FULL key (pre-TP-slice: every shard
+                # computes the same replicated bit), scattered exactly where
+                # the key lands
+                bit = occupancy_bit(k1[:, 0], pol.tau("kv"))
+                op = scatter_token_ring if ring else scatter_token
+                occ_i = op(occ_c[str(i)], table, length, bit)
+                new_occ[str(i)] = occ_i
+            elif occupancy is not None:
+                new_occ[str(i)] = occ_c[str(i)]
             q, k1, v1 = _tp_slice_heads(tp, q, k1, v1)
             kcache = entry_scatter_token(kc[str(i)], table, length, k1[:, 0], ring=ring)
             vcache = entry_scatter_token(vc[str(i)], table, length, v1[:, 0], ring=ring)
-            ao = _paged_attention(cfg, layout, i, q, kcache, vcache, table, length, use_pallas=use_pallas)
+            ao = _paged_attention(cfg, layout, i, q, kcache, vcache, table, length, pol=pol, occ=occ_i)
             ao = _tp_gather_heads(tp, ao)
-            ao = site_prune(ao, "attn_out", sparsity, taus)
+            ao = pol.prune(ao, "attn_out")
             attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
             if cfg.ssm_state:
                 ssm_out, s_new = ssm_mix(p["ssm"], norm(p["ssm_ln"], hh), state=ssmc[str(i)])
@@ -644,21 +730,26 @@ def paged_decode_step(
             if cfg.post_norms:
                 attn_out = norm(p["post_attn_norm"], attn_out)
             hh = hh + attn_out
-            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), sparsity, taus)
+            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), pol)
             if cfg.post_norms:
                 mlp_out = norm(p["post_mlp_norm"], mlp_out)
             hh = hh + mlp_out
             new_k[str(i)], new_v[str(i)] = kcache, vcache
-        return hh, (new_k, new_v, new_ssm if cfg.ssm_state else None)
+        return hh, (new_k, new_v, new_occ if occupancy is not None else None,
+                    new_ssm if cfg.ssm_state else None)
 
-    xs = (params["blocks"], pools.k, pools.v, ssm if cfg.ssm_state else jnp.zeros((cfg.n_cycles,)))
-    h, (ks, vs, ssms) = jax.lax.scan(cycle_body, h, xs)
+    xs = (params["blocks"], pools.k, pools.v,
+          occupancy if occupancy is not None else jnp.zeros((cfg.n_cycles,)),
+          ssm if cfg.ssm_state else jnp.zeros((cfg.n_cycles,)))
+    h, (ks, vs, occs, ssms) = jax.lax.scan(cycle_body, h, xs)
     h = norm(params["final_norm"], h)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = h @ head.astype(h.dtype)
     logits = softcap(logits.astype(jnp.float32), cfg.final_logit_cap)
     logits = constrain(logits[:, 0], "logits_2d")
-    return logits, PagedKV(k=ks, v=vs), ssms if cfg.ssm_state else None
+    return (logits, PagedKV(k=ks, v=vs),
+            occs if occupancy is not None else None,
+            ssms if cfg.ssm_state else None)
 
 
 def paged_prefill_chunk(
@@ -671,11 +762,13 @@ def paged_prefill_chunk(
     tokens: Array,  # [B, C] — one chunk of prompt tokens per row (right-padded)
     n_valid: Array,  # [B] int32: real tokens in each row's chunk (0 = inactive row)
     *,
+    occupancy: dict[str, Array] | None = None,  # slot -> [n_cycles, num_pages, P] bool
     ssm=None,
     fresh: Array | None = None,  # [B] bool: rows (re)starting prefill — their SSM state is zeroed
-    taus=None,
+    policy: KernelPolicy | None = None,
+    taus=None,  # deprecated: pass policy=
     tp: tuple[str, int] | None = None,  # set when traced inside shard_map (see make_tp_paged_fns)
-) -> tuple[Array, PagedKV, Any]:
+) -> tuple[Array, PagedKV, dict[str, Array] | None, Any]:
     """Batched prefill: one jitted call caches a chunk of C prompt tokens
     for EVERY row of an admission batch (rows live at their engine slots, so
     hybrid SSM state stays aligned).  Returns next-token logits at each
@@ -689,8 +782,12 @@ def paged_prefill_chunk(
     amplify one-ulp hidden-state differences into flipped quantisation
     bins in later layers, so chunked int8 prefill is approximate
     (bounded-divergence; decode remains bitwise).
+
+    When the policy's "kv" site is live, each cached key also records its
+    occupancy bit (see ``paged_decode_step``); prefill only *writes* bits —
+    they are consumed by the decode attention.
     """
-    sparsity = cfg.sparsity
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     b, c = tokens.shape
     h = params["embed"][tokens]  # [B, C, D]
     if cfg.embed_scale:
@@ -701,15 +798,23 @@ def paged_prefill_chunk(
     valid = jnp.arange(c)[None, :] < n_valid[:, None]  # [B, C]
     _, norm = make_norm(cfg.norm)
 
+    kv_site = occupancy is not None and pol.wants("kv") and pol.tiled
+
     def cycle_body(carry, xs):
         hh = carry
-        cycle_params, kc, vc, ssmc = xs
-        new_k, new_v, new_ssm = {}, {}, {}
+        cycle_params, kc, vc, occ_c, ssmc = xs
+        new_k, new_v, new_occ, new_ssm = {}, {}, {}, {}
         for i, _pat in enumerate(cfg.attention_pattern):
             p = cycle_params[str(i)]
             table = tables[layout.slot_kinds[i]]
             ring = layout.slot_kinds[i] == "ring"
             _x, q, k1, v1 = _qkv(p, cfg, hh, positions, None)
+            if kv_site:
+                bit = occupancy_bit(k1, pol.tau("kv"))  # [B, C], full pre-TP key
+                op = scatter_chunk_ring if ring else scatter_chunk
+                new_occ[str(i)] = op(occ_c[str(i)], table, start_len, bit, valid)
+            elif occupancy is not None:
+                new_occ[str(i)] = occ_c[str(i)]
             q, k1, v1 = _tp_slice_heads(tp, q, k1, v1)
             if ring and c > 1:
                 # sliding-window chunk: attend to the PRE-chunk ring context
@@ -750,7 +855,7 @@ def paged_prefill_chunk(
                 v_read = entry_gather(vcache, table)
                 ao = attn.chunk_decode_attention(q, k_read, v_read, start_len, logit_cap=cfg.attn_logit_cap)
             ao = _tp_gather_heads(tp, ao)
-            ao = site_prune(ao, "attn_out", sparsity, taus)
+            ao = pol.prune(ao, "attn_out")
             attn_out = jnp.einsum("bshk,hkd->bsd", ao, p["wo"].astype(ao.dtype))
             if cfg.ssm_state:
                 sstate = ssmc[str(i)]
@@ -764,15 +869,18 @@ def paged_prefill_chunk(
             if cfg.post_norms:
                 attn_out = norm(p["post_attn_norm"], attn_out)
             hh = hh + attn_out
-            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), sparsity, taus)
+            mlp_out, _ = _mlp(p, cfg, norm(p["ln2"], hh), pol)
             if cfg.post_norms:
                 mlp_out = norm(p["post_mlp_norm"], mlp_out)
             hh = hh + mlp_out
             new_k[str(i)], new_v[str(i)] = kcache, vcache
-        return hh, (new_k, new_v, new_ssm if cfg.ssm_state else None)
+        return hh, (new_k, new_v, new_occ if occupancy is not None else None,
+                    new_ssm if cfg.ssm_state else None)
 
-    xs = (params["blocks"], pools.k, pools.v, ssm if cfg.ssm_state else jnp.zeros((cfg.n_cycles,)))
-    h, (ks, vs, ssms) = jax.lax.scan(cycle_body, h, xs)
+    xs = (params["blocks"], pools.k, pools.v,
+          occupancy if occupancy is not None else jnp.zeros((cfg.n_cycles,)),
+          ssm if cfg.ssm_state else jnp.zeros((cfg.n_cycles,)))
+    h, (ks, vs, occs, ssms) = jax.lax.scan(cycle_body, h, xs)
     last = jnp.maximum(n_valid - 1, 0)[:, None, None]  # [B,1,1]
     h = jnp.take_along_axis(h, last, axis=1)  # last valid position per row
     h = norm(params["final_norm"], h)
@@ -780,7 +888,9 @@ def paged_prefill_chunk(
     logits = h @ head.astype(h.dtype)
     logits = softcap(logits.astype(jnp.float32), cfg.final_logit_cap)
     logits = constrain(logits[:, 0], "logits_2d")
-    return logits, PagedKV(k=ks, v=vs), ssms if cfg.ssm_state else None
+    return (logits, PagedKV(k=ks, v=vs),
+            occs if occupancy is not None else None,
+            ssms if cfg.ssm_state else None)
 
 
 # ---------------------------------------------------------------------------
@@ -800,19 +910,22 @@ def check_tp_support(cfg: ModelConfig, n: int) -> None:
 
 
 def make_tp_paged_fns(
-    cfg: ModelConfig, layout: PagedLayout, mesh, axis: str = "model", *, use_pallas: bool = False
+    cfg: ModelConfig, layout: PagedLayout, mesh, axis: str = "model", *, use_pallas: bool | None = None
 ) -> dict:
     """Build shard_map-wrapped decode/prefill/copy steps for serving over
     ``mesh``'s ``axis`` (size n): pools arrive/leave sharded on their KV-head
-    dim, every other operand is replicated, and the math inside is
+    dim, every other operand is replicated — including the occupancy side
+    arrays (bits are computed from the full pre-slice key, so every shard
+    holds identical copies) and the ``KernelPolicy`` (its taus are runtime
+    leaves; its static fields ride the closure) — and the math inside is
     head-sliced so TP decode stays bitwise-identical to the single-device
     step (see the tp notes on ``paged_decode_step``).
 
     Returned callables mirror the unsharded signatures:
 
-    * ``decode(params, pools, tables, length, tokens, ssm, live, taus)``
-    * ``prefill(params, pools, tables, start, tokens, n_valid, ssm, fresh, taus)``
-    * ``copy(pools, kind, src, dst)``  (the COW page-fork path)
+    * ``decode(params, pools, occupancy, tables, length, tokens, ssm, live, policy)``
+    * ``prefill(params, pools, occupancy, tables, start, tokens, n_valid, ssm, fresh, policy)``
+    * ``copy(pools, occupancy, kind, src, dst)``  (the COW page-fork path)
     """
     from jax.sharding import PartitionSpec as P
 
@@ -821,51 +934,62 @@ def make_tp_paged_fns(
     n = mesh.shape[axis]
     check_tp_support(cfg, n)
     tp = (axis, n)
+    if use_pallas is not None:
+        warnings.warn(
+            "make_tp_paged_fns(use_pallas=) is deprecated; pass backend via the "
+            "per-call KernelPolicy", DeprecationWarning, stacklevel=2,
+        )
 
-    def decode(params, pools, tables, length, tokens, ssm, live, taus):
+    def _pol(policy):
+        pol = policy if policy is not None else KernelPolicy.from_config(cfg.sparsity)
+        if use_pallas and not pol.use_pallas:
+            pol = dataclasses.replace(pol, backend="pallas")
+        return pol
+
+    def decode(params, pools, occupancy, tables, length, tokens, ssm, live, policy):
         specs = paged_pool_specs(pools, axis)
 
-        def body(params, pools, tables, length, tokens, ssm, live, taus):
+        def body(params, pools, occupancy, tables, length, tokens, ssm, live, policy):
             return paged_decode_step(
                 params, cfg, layout, pools, tables, length, tokens,
-                ssm=ssm, live=live, taus=taus, use_pallas=use_pallas, tp=tp,
-            )
-
-        f = shard_map(
-            body, mesh=mesh,
-            in_specs=(P(), specs, P(), P(), P(), P(), P(), P()),
-            out_specs=(P(), specs, P()),
-            **SHARD_MAP_NO_CHECK,
-        )
-        return f(params, pools, tables, length, tokens, ssm, live, taus)
-
-    def prefill(params, pools, tables, start, tokens, n_valid, ssm, fresh, taus):
-        specs = paged_pool_specs(pools, axis)
-
-        def body(params, pools, tables, start, tokens, n_valid, ssm, fresh, taus):
-            return paged_prefill_chunk(
-                params, cfg, layout, pools, tables, start, tokens, n_valid,
-                ssm=ssm, fresh=fresh, taus=taus, tp=tp,
+                occupancy=occupancy, ssm=ssm, live=live, policy=_pol(policy), tp=tp,
             )
 
         f = shard_map(
             body, mesh=mesh,
             in_specs=(P(), specs, P(), P(), P(), P(), P(), P(), P()),
-            out_specs=(P(), specs, P()),
+            out_specs=(P(), specs, P(), P()),
             **SHARD_MAP_NO_CHECK,
         )
-        return f(params, pools, tables, start, tokens, n_valid, ssm, fresh, taus)
+        return f(params, pools, occupancy, tables, length, tokens, ssm, live, policy)
 
-    def copy(pools, kind, src, dst):
+    def prefill(params, pools, occupancy, tables, start, tokens, n_valid, ssm, fresh, policy):
         specs = paged_pool_specs(pools, axis)
 
-        def body(pools, src, dst):
-            return paged_copy_pages(layout, pools, kind, src, dst)
+        def body(params, pools, occupancy, tables, start, tokens, n_valid, ssm, fresh, policy):
+            return paged_prefill_chunk(
+                params, cfg, layout, pools, tables, start, tokens, n_valid,
+                occupancy=occupancy, ssm=ssm, fresh=fresh, policy=_pol(policy), tp=tp,
+            )
 
         f = shard_map(
-            body, mesh=mesh, in_specs=(specs, P(), P()), out_specs=specs,
+            body, mesh=mesh,
+            in_specs=(P(), specs, P(), P(), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(), specs, P(), P()),
             **SHARD_MAP_NO_CHECK,
         )
-        return f(pools, src, dst)
+        return f(params, pools, occupancy, tables, start, tokens, n_valid, ssm, fresh, policy)
+
+    def copy(pools, occupancy, kind, src, dst):
+        specs = paged_pool_specs(pools, axis)
+
+        def body(pools, occupancy, src, dst):
+            return paged_copy_pages(layout, pools, kind, src, dst, occupancy=occupancy)
+
+        f = shard_map(
+            body, mesh=mesh, in_specs=(specs, P(), P(), P()), out_specs=(specs, P()),
+            **SHARD_MAP_NO_CHECK,
+        )
+        return f(pools, occupancy, src, dst)
 
     return {"decode": decode, "prefill": prefill, "copy": copy}

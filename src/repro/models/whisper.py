@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.launch.sharding import constrain
-from repro.core.dynatran import site_prune
+from repro.core.policy import KernelPolicy, resolve_policy
 from . import attention as attn
 from .kvcache import (
     DecodeState,
@@ -30,7 +30,11 @@ from .kvcache import (
     entry_gather,
     entry_scatter_chunk,
     entry_scatter_token,
+    init_occupancy,
     init_paged_pools,
+    occupancy_bit,
+    scatter_chunk,
+    scatter_token,
 )
 from .layers import dense_init, embed_init, gelu, layer_norm, layer_norm_init, sinusoidal_positions
 
@@ -84,29 +88,35 @@ def init_params(key: Array, cfg: ModelConfig) -> dict:
     }
 
 
-def _mha(p: dict, x: Array, kv_src: Array, *, causal: bool, cfg, taus) -> Array:
+def _mha(p: dict, x: Array, kv_src: Array, *, causal: bool, pol: KernelPolicy) -> Array:
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(x.dtype))
-    o = attn.chunked_attention(q, k, v, causal=causal, sparsity=cfg.sparsity, taus=taus)
-    o = site_prune(o, "attn_out", cfg.sparsity, taus)
+    o = attn.chunked_attention(q, k, v, causal=causal, policy=pol)
+    o = pol.prune(o, "attn_out")
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
 
 
-def _mlp(p: dict, x: Array, cfg, taus) -> Array:
+def _mlp(p: dict, x: Array, pol: KernelPolicy) -> Array:
     h = gelu(x @ p["w_up"].astype(x.dtype))
-    h = site_prune(h, "ffn_act", cfg.sparsity, taus)
+    if pol.wants("ffn_act"):
+        h = pol.prune(h, "ffn_act")
+        if pol.tiled:
+            from repro.kernels.ops import ffn_block_sparse
+
+            return ffn_block_sparse(h, p["w_down"], pol)
     return h @ p["w_down"].astype(x.dtype)
 
 
-def encode(params: dict, cfg: ModelConfig, frames: Array, taus=None) -> Array:
+def encode(params: dict, cfg: ModelConfig, frames: Array, taus=None, policy=None) -> Array:
     """frames: [B, T_enc, D] (conv-stub output) -> encoder states."""
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     T = frames.shape[1]
     h = frames + sinusoidal_positions(T, cfg.d_model).astype(frames.dtype)
 
     def body(h, p):
-        h = h + _mha(p["attn"], layer_norm(p["ln1"], h), layer_norm(p["ln1"], h), causal=False, cfg=cfg, taus=taus)
-        h = h + _mlp(p["mlp"], layer_norm(p["ln2"], h), cfg, taus)
+        h = h + _mha(p["attn"], layer_norm(p["ln1"], h), layer_norm(p["ln1"], h), causal=False, pol=pol)
+        h = h + _mlp(p["mlp"], layer_norm(p["ln2"], h), pol)
         return constrain(h, "residual"), ()
 
     if cfg.remat != "none":
@@ -126,21 +136,23 @@ def forward(
     tokens: Array,  # [B, S] decoder tokens (teacher forcing)
     *,
     frames: Array | None = None,
-    taus=None,
+    policy: KernelPolicy | None = None,
+    taus=None,  # deprecated: pass policy=
     last_only: bool = False,
     **_unused,
 ) -> tuple[Array, dict]:
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     B, S = tokens.shape
     assert frames is not None, "whisper needs encoder frames"
-    enc = encode(params, cfg, frames, taus)
+    enc = encode(params, cfg, frames, policy=pol)
     P = params["pos_embed"].shape[0]
     h = constrain(params["embed"][tokens] + params["pos_embed"][jnp.arange(S) % P], "residual")
 
     def body(h, p):
         x = layer_norm(p["ln1"], h)
-        h = h + _mha(p["self_attn"], x, x, causal=True, cfg=cfg, taus=taus)
-        h = h + _mha(p["cross_attn"], layer_norm(p["ln2"], h), enc, causal=False, cfg=cfg, taus=taus)
-        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), cfg, taus)
+        h = h + _mha(p["self_attn"], x, x, causal=True, pol=pol)
+        h = h + _mha(p["cross_attn"], layer_norm(p["ln2"], h), enc, causal=False, pol=pol)
+        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), pol)
         return constrain(h, "residual"), ()
 
     if cfg.remat != "none":
@@ -187,7 +199,8 @@ def prefill_cross(params: dict, cfg: ModelConfig, state: DecodeState, frames: Ar
     return DecodeState(k=k, v=v, ssm=None, length=state.length)
 
 
-def decode_step(params: dict, cfg: ModelConfig, state: DecodeState, tokens: Array, *, taus=None, **_unused):
+def decode_step(params: dict, cfg: ModelConfig, state: DecodeState, tokens: Array, *, policy=None, taus=None, **_unused):
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
     B = tokens.shape[0]
     P = params["pos_embed"].shape[0]
     length = state.length
@@ -211,7 +224,7 @@ def decode_step(params: dict, cfg: ModelConfig, state: DecodeState, tokens: Arra
         q2 = jnp.einsum("bsd,dhk->bshk", x2, p["cross_attn"]["wq"].astype(x2.dtype))
         ao2 = attn.decode_attention(q2, kc, vc, kc.shape[1])
         h = h + jnp.einsum("bshk,hkd->bsd", ao2, p["cross_attn"]["wo"].astype(x2.dtype))
-        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), cfg, taus)
+        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), pol)
         return h, (ks, vs)
 
     xs = (params["dec_blocks"], state.k["self"], state.v["self"], state.k["cross"], state.v["cross"])
@@ -271,6 +284,12 @@ def init_slot_state(cfg: ModelConfig, slots: int, dtype=jnp.bfloat16) -> dict:
     }
 
 
+def init_paged_occupancy(cfg: ModelConfig, layout: PagedLayout, num_pages):
+    """DynaTran "kv" occupancy bits for the decoder's paged self-attention
+    component (decoder layers stand in for cycles)."""
+    return init_occupancy(layout, cfg.layers, num_pages)
+
+
 def dense_reference_decode(
     params: dict, cfg: ModelConfig, prompt: list[int], frames, new_tokens: int, max_len: int
 ) -> list[int]:
@@ -291,12 +310,12 @@ def dense_reference_decode(
     return out
 
 
-def admit_slot(params: dict, cfg: ModelConfig, state: dict, slot, *, frames: Array, taus=None) -> dict:
+def admit_slot(params: dict, cfg: ModelConfig, state: dict, slot, *, frames: Array, taus=None, policy=None) -> dict:
     """The admission hook: run the encoder ONCE for this request's frames
     [1, F, D] and write its cross-attention K/V into the request's engine
     slot.  Re-admission after eviction recomputes the same bits (the
     encoder is deterministic), so evict + replay stays exact."""
-    enc = encode(params, cfg, frames, taus)  # [1, F, D]
+    enc = encode(params, cfg, frames, taus=taus, policy=policy)  # [1, F, D]
 
     def per_layer(p):
         k = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wk"].astype(enc.dtype))
@@ -319,45 +338,65 @@ def paged_decode_step(
     length: Array,  # [B] tokens already cached per row
     tokens: Array,  # [B, 1]
     *,
+    occupancy: dict | None = None,  # {"0": [L, num_pages, P] bool} when the kv site runs
     ssm: dict,  # slot-dense cross-KV (read-only here)
     live: Array | None = None,  # cross-KV is never written in decode: no mask needed
-    taus=None,
-    use_pallas: bool = False,
+    policy: KernelPolicy | None = None,
+    taus=None,  # deprecated: pass policy=
+    use_pallas: bool | None = None,  # deprecated: pass policy=
     tp=None,
 ):
     """One decoder step: paged self-attention KV + slot-dense cross-KV.
     Ops mirror ``decode_step`` exactly (the paged gather reproduces the
     dense cache's values and masks the same positions), so engine decode is
-    bitwise-identical to the dense-state replay."""
+    bitwise-identical to the dense-state replay.  With a live "kv" site the
+    self-attention consumes/records occupancy bits like the transformer step."""
+    pol = resolve_policy(policy, taus=taus, use_pallas=use_pallas, default_sparsity=cfg.sparsity)
+    kv_site = occupancy is not None and pol.wants("kv") and pol.tiled
     table = tables["full"]
     P = params["pos_embed"].shape[0]
     h = params["embed"][tokens] + params["pos_embed"][length[:, None] % P]
 
     def body(h, xs):
-        p, kc, vc, ck, cv = xs
+        p, kc, vc, occ_c, ck, cv = xs
         x = layer_norm(p["ln1"], h)
         q = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wq"].astype(x.dtype))
         k1 = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wk"].astype(x.dtype))
         v1 = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wv"].astype(x.dtype))
         kcache = entry_scatter_token(kc, table, length, k1[:, 0], ring=False)
         vcache = entry_scatter_token(vc, table, length, v1[:, 0], ring=False)
-        k_read = entry_gather(kcache, table)
-        v_read = entry_gather(vcache, table)
-        ao = attn.decode_attention(q, k_read, v_read, length + 1)
+        if kv_site:
+            occ_new = scatter_token(occ_c, table, length, occupancy_bit(k1[:, 0], pol.tau("kv")))
+            ao = attn.paged_skip_decode_pooled(
+                q,
+                kcache,
+                vcache,
+                occ_new,
+                table,
+                length + 1,
+                skip=bool(pol.skip),
+            )
+        else:
+            occ_new = occ_c
+            k_read = entry_gather(kcache, table)
+            v_read = entry_gather(vcache, table)
+            ao = attn.decode_attention(q, k_read, v_read, length + 1)
         h = h + jnp.einsum("bshk,hkd->bsd", ao, p["self_attn"]["wo"].astype(x.dtype))
         # cross attention against the slot's fixed encoder cache
         x2 = layer_norm(p["ln2"], h)
         q2 = jnp.einsum("bsd,dhk->bshk", x2, p["cross_attn"]["wq"].astype(x2.dtype))
         ao2 = attn.decode_attention(q2, ck, cv, ck.shape[1])
         h = h + jnp.einsum("bshk,hkd->bsd", ao2, p["cross_attn"]["wo"].astype(x2.dtype))
-        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), cfg, taus)
-        return h, (kcache, vcache)
+        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), pol)
+        return h, (kcache, vcache, occ_new)
 
-    xs = (params["dec_blocks"], pools.k["0"], pools.v["0"], ssm["k"], ssm["v"])
-    h, (ks, vs) = jax.lax.scan(body, h, xs)
+    occ0 = occupancy["0"] if occupancy is not None else jnp.zeros((cfg.layers,))
+    xs = (params["dec_blocks"], pools.k["0"], pools.v["0"], occ0, ssm["k"], ssm["v"])
+    h, (ks, vs, occs) = jax.lax.scan(body, h, xs)
     h = layer_norm(params["dec_ln_post"], h)
     logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
-    return logits[:, 0], PagedKV(k={"0": ks}, v={"0": vs}), ssm
+    new_occ = {"0": occs} if occupancy is not None else None
+    return logits[:, 0], PagedKV(k={"0": ks}, v={"0": vs}), new_occ, ssm
 
 
 def paged_prefill_chunk(
@@ -370,14 +409,19 @@ def paged_prefill_chunk(
     tokens: Array,  # [B, C] right-padded chunk of decoder (prompt) tokens
     n_valid: Array,  # [B] real tokens per row (0 = inactive row)
     *,
+    occupancy: dict | None = None,
     ssm: dict,
     fresh: Array | None = None,  # cross-KV is rewritten by the admit hook: nothing to reset
-    taus=None,
+    policy: KernelPolicy | None = None,
+    taus=None,  # deprecated: pass policy=
     tp=None,
 ):
     """Batched decoder prefill: causal self-attention over cached context +
     the chunk, full (non-causal) cross-attention over the slot's encoder
-    frames.  C == 1 is op-for-op the decode step."""
+    frames.  C == 1 is op-for-op the decode step.  With a live "kv" site each
+    cached key records its occupancy bit (consumed at decode time)."""
+    pol = resolve_policy(policy, taus=taus, default_sparsity=cfg.sparsity)
+    kv_site = occupancy is not None and pol.wants("kv") and pol.tiled
     table = tables["full"]
     b, c = tokens.shape
     P = params["pos_embed"].shape[0]
@@ -387,13 +431,18 @@ def paged_prefill_chunk(
     enc_len = jnp.full((b,), ssm["k"].shape[2], jnp.int32)  # every frame visible
 
     def body(h, xs):
-        p, kc, vc, ck, cv = xs
+        p, kc, vc, occ_c, ck, cv = xs
         x = layer_norm(p["ln1"], h)
         q = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wq"].astype(x.dtype))
         k1 = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wk"].astype(x.dtype))
         v1 = jnp.einsum("bsd,dhk->bshk", x, p["self_attn"]["wv"].astype(x.dtype))
         kcache = entry_scatter_chunk(kc, table, start_len, k1, valid, ring=False)
         vcache = entry_scatter_chunk(vc, table, start_len, v1, valid, ring=False)
+        occ_new = (
+            scatter_chunk(occ_c, table, start_len, occupancy_bit(k1, pol.tau("kv")), valid)
+            if kv_site
+            else occ_c
+        )
         k_read = entry_gather(kcache, table)
         v_read = entry_gather(vcache, table)
         ao = attn.chunk_decode_attention(q, k_read, v_read, start_len)
@@ -402,13 +451,15 @@ def paged_prefill_chunk(
         q2 = jnp.einsum("bsd,dhk->bshk", x2, p["cross_attn"]["wq"].astype(x2.dtype))
         ao2 = attn.chunk_decode_attention(q2, ck, cv, enc_len)
         h = h + jnp.einsum("bshk,hkd->bsd", ao2, p["cross_attn"]["wo"].astype(x2.dtype))
-        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), cfg, taus)
-        return h, (kcache, vcache)
+        h = h + _mlp(p["mlp"], layer_norm(p["ln3"], h), pol)
+        return h, (kcache, vcache, occ_new)
 
-    xs = (params["dec_blocks"], pools.k["0"], pools.v["0"], ssm["k"], ssm["v"])
-    h, (ks, vs) = jax.lax.scan(body, h, xs)
+    occ0 = occupancy["0"] if occupancy is not None else jnp.zeros((cfg.layers,))
+    xs = (params["dec_blocks"], pools.k["0"], pools.v["0"], occ0, ssm["k"], ssm["v"])
+    h, (ks, vs, occs) = jax.lax.scan(body, h, xs)
     last = jnp.maximum(n_valid - 1, 0)[:, None, None]  # [B,1,1]
     h = jnp.take_along_axis(h, last, axis=1)  # last valid position per row
     h = layer_norm(params["dec_ln_post"], h)
     logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
-    return logits[:, 0], PagedKV(k={"0": ks}, v={"0": vs}), ssm
+    new_occ = {"0": occs} if occupancy is not None else None
+    return logits[:, 0], PagedKV(k={"0": ks}, v={"0": vs}), new_occ, ssm

@@ -118,8 +118,12 @@ def cross_entropy(logits: Array, labels: Array) -> Array:
     return nll.sum() / jnp.maximum(valid.sum(), 1)
 
 
-def loss_fn(params, cfg: ModelConfig, batch: dict[str, Array], taus=None) -> tuple[Array, dict]:
-    kwargs: dict[str, Any] = {"taus": taus}
+def loss_fn(params, cfg: ModelConfig, batch: dict[str, Array], taus=None, policy=None) -> tuple[Array, dict]:
+    kwargs: dict[str, Any] = {}
+    if policy is not None:
+        kwargs["policy"] = policy
+    elif taus is not None:
+        kwargs["taus"] = taus  # deprecated passthrough — forward() warns
     for k in ("embeds", "positions_3d", "frames"):
         if k in batch:
             kwargs[k] = batch[k]

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.dynatran import SparsityConfig, ThresholdCalculator
+from repro.core.policy import KernelPolicy
 from repro.models import transformer as tfm
 from repro.models import zoo
 from repro.models.kvcache import PageAllocator, PrefixCache
@@ -72,6 +73,7 @@ class ServeEngine:
         if scfg.target_rho is not None and sp.mode == "dynatran":
             sp = dataclasses.replace(sp, target_rho=scfg.target_rho)
         self.taus = calculator.taus(sp) if sp.mode == "dynatran" else None
+        self.policy = KernelPolicy.from_config(sp, self.taus)
 
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(0,), static_argnames=("sample",))
@@ -95,7 +97,7 @@ class ServeEngine:
         def step(carry, t):
             st = carry
             tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
-            logits, st = zoo.decode_step(params, self.cfg, st, tok, taus=self.taus)
+            logits, st = zoo.decode_step(params, self.cfg, st, tok, policy=self.policy)
             return st, logits
 
         state, logits = jax.lax.scan(step, state, jnp.arange(tokens.shape[1]))
@@ -103,7 +105,7 @@ class ServeEngine:
         return state, last
 
     def _decode_impl(self, state, tokens, temps, top_ks, top_ps, seeds, steps, *, sample: bool):
-        logits, state = zoo.decode_step(self.params, self.cfg, state, tokens, taus=self.taus)
+        logits, state = zoo.decode_step(self.params, self.cfg, state, tokens, policy=self.policy)
         sliced = logits[..., : self.cfg.vocab]
         if sample:  # shared keyed sampler (serve/sampling.py)
             next_tok = sample_tokens(sliced, temps, top_ks, top_ps, seeds, steps)
@@ -192,6 +194,14 @@ class ContinuousServeConfig:
     # waste at most W-1 row-steps (their surplus tokens are discarded).
     decode_window: int = 1
     use_pallas: bool = False  # fused paged-attention kernel (interpret mode on CPU)
+    # DynaTran tile skipping in the hot kernels.  None (default) keeps the
+    # legacy dense datapath (occupancy never allocated; old numerics,
+    # bit-for-bit).  True routes decode attention + pruned FFN activations
+    # through the tiled kernels and SKIPS all-dead tiles; False runs the
+    # identical tiled datapath without skipping (the exact-parity twin used
+    # by the regression gate).  Needs "kv" in cfg.sparsity.sites (plus a
+    # "kv" transfer curve) for attention-side page skipping.
+    tile_skip: Optional[bool] = None
     # tensor parallelism: shard the page pools, the paged gather/scatter,
     # and attention along the KV-head dim over a device mesh's "model" axis
     # (launch/mesh.make_serve_mesh).  The host-side scheduler/allocator/
@@ -290,6 +300,7 @@ class ContinuousServeEngine:
             prefix_cache=self.prefix_cache, page_size=scfg.page_size,
         )
         self.pools = self.fam.init_paged_state(cfg, self.layout, num_pages) if kinds else None
+        self.num_pages = num_pages
         # slot-dense components (hybrid SSM side-state, rwkv6 recurrent
         # state, whisper cross-KV) ride per engine slot
         self.slot_state = self.fam.init_slot_state(cfg, scfg.slots)
@@ -310,9 +321,8 @@ class ContinuousServeEngine:
 
             self.mesh = scfg.mesh if scfg.mesh is not None else make_serve_mesh(scfg.tp)
             self.fam.check_tp_support(cfg, self.mesh.shape["model"])
-            self._tp_fns = self.fam.make_tp_paged_fns(
-                cfg, self.layout, self.mesh, use_pallas=scfg.use_pallas
-            )
+            # backend/skip ride the per-call KernelPolicy, not the TP closure
+            self._tp_fns = self.fam.make_tp_paged_fns(cfg, self.layout, self.mesh)
             if self.pools is not None:
                 paged_kind = next(k for k in self.bundle.kinds() if k.paged)
                 self.pools = jax.device_put(self.pools, state_shardings(paged_kind, self.pools, self.mesh))
@@ -325,6 +335,33 @@ class ContinuousServeEngine:
         sp: SparsityConfig = cfg.sparsity
         self._dynatran = sp.mode == "dynatran"
         self._sites = sp.sites
+        # base kernel policy: static fields (backend/skip/sites) are fixed for
+        # the engine's lifetime — only the taus leaves change per tick, so the
+        # runtime rho knob never recompiles the jitted steps
+        from repro.kernels.ops import on_tpu
+
+        self.policy = KernelPolicy.from_config(
+            sp, None,
+            backend="pallas" if scfg.use_pallas else "ref",
+            skip=scfg.tile_skip,
+            interpret=not on_tpu(),
+        )
+        # per-page DynaTran occupancy side arrays (all-live at init) — only
+        # materialised when the tiled datapath is on; None rides through the
+        # jitted steps otherwise (and for families with no paged KV)
+        self.occupancy = (
+            self.fam.init_paged_occupancy(cfg, self.layout, self.num_pages)
+            if (self.policy.tiled and self.pools is not None
+                and hasattr(self.fam, "init_paged_occupancy"))
+            else None
+        )
+        if self.occupancy is not None and self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            # bits are computed from the full pre-slice key: replicated
+            self.occupancy = jax.device_put(
+                self.occupancy, NamedSharding(self.mesh, PartitionSpec())
+            )
         calculator = calculator or ThresholdCalculator.default()
         # host-side copies of the transfer curves: the per-step tau lookup is
         # two np.interp calls, no device dispatch
@@ -341,9 +378,9 @@ class ContinuousServeEngine:
         self._fixed_rho = float(base_rho)
         self.current_rho = self._fixed_rho if self._dynatran else 0.0
 
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(0, 1), static_argnames=("sample",))
-        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0, 1), static_argnames=("sample",))
-        self._copy = jax.jit(self._copy_impl, donate_argnums=(0,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(0, 1, 2), static_argnames=("sample",))
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0, 1, 2), static_argnames=("sample",))
+        self._copy = jax.jit(self._copy_impl, donate_argnums=(0, 1))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._rid = 0
         self._tick = 0
@@ -352,7 +389,7 @@ class ContinuousServeEngine:
 
     # --- jitted bodies ----------------------------------------------------
     def _decode_impl(
-        self, pools, ssm, tables, lengths, tokens, live, taus,
+        self, pools, ssm, occ, tables, lengths, tokens, live, policy,
         temps, top_ks, top_ps, seeds, steps, *, sample: bool,
     ):
         """Scan ``decode_window`` steps per host round-trip; returns the
@@ -362,59 +399,70 @@ class ContinuousServeEngine:
         the pure argmax path."""
 
         def body(carry, _):
-            pools, ssm, lengths, toks, stp = carry
-            logits, pools, ssm = self._step_decode(pools, ssm, tables, lengths, toks, live, taus)
+            pools, ssm, occ, lengths, toks, stp = carry
+            logits, pools, occ, ssm = self._step_decode(
+                pools, ssm, occ, tables, lengths, toks, live, policy
+            )
             sliced = logits[..., : self.cfg.vocab]
             if sample:
                 nxt = sample_tokens(sliced, temps, top_ks, top_ps, seeds, stp)
             else:
                 nxt = jnp.argmax(sliced, axis=-1).astype(jnp.int32)
-            return (pools, ssm, lengths + 1, nxt[:, None], stp + 1), nxt
+            return (pools, ssm, occ, lengths + 1, nxt[:, None], stp + 1), nxt
 
-        (pools, ssm, _, _, _), toks = jax.lax.scan(
-            body, (pools, ssm, lengths, tokens, steps), None, length=self.scfg.decode_window
+        (pools, ssm, occ, _, _, _), toks = jax.lax.scan(
+            body, (pools, ssm, occ, lengths, tokens, steps), None, length=self.scfg.decode_window
         )
-        return pools, ssm, toks
+        return pools, ssm, occ, toks
 
-    def _step_decode(self, pools, ssm, tables, lengths, tokens, live, taus):
-        """One model step: the shard_map-wrapped TP path or the plain one."""
+    def _step_decode(self, pools, ssm, occ, tables, lengths, tokens, live, policy):
+        """One model step: the shard_map-wrapped TP path or the plain one.
+        Returns ``(logits, pools, occupancy, ssm)`` — the uniform 4-tuple
+        every family's paged step now speaks."""
         if self._tp_fns is not None:
-            return self._tp_fns["decode"](self.params, pools, tables, lengths, tokens, ssm, live, taus)
+            return self._tp_fns["decode"](
+                self.params, pools, occ, tables, lengths, tokens, ssm, live, policy
+            )
         return self.fam.paged_decode_step(
             self.params, self.cfg, self.layout, pools, tables, lengths, tokens,
-            ssm=ssm, live=live, taus=taus, use_pallas=self.scfg.use_pallas,
+            occupancy=occ, ssm=ssm, live=live, policy=policy,
         )
 
-    def _step_prefill(self, pools, ssm, tables, start, tokens, n_valid, fresh, taus):
+    def _step_prefill(self, pools, ssm, occ, tables, start, tokens, n_valid, fresh, policy):
         if self._tp_fns is not None:
-            return self._tp_fns["prefill"](self.params, pools, tables, start, tokens, n_valid, ssm, fresh, taus)
+            return self._tp_fns["prefill"](
+                self.params, pools, occ, tables, start, tokens, n_valid, ssm, fresh, policy
+            )
         return self.fam.paged_prefill_chunk(
             self.params, self.cfg, self.layout, pools, tables, start, tokens, n_valid,
-            ssm=ssm, fresh=fresh, taus=taus,
+            occupancy=occ, ssm=ssm, fresh=fresh, policy=policy,
         )
 
-    def _admit_impl(self, slot_state, slot, inputs, taus):
+    def _admit_impl(self, slot_state, slot, inputs, policy):
         """Admission-computed slot state (whisper: encoder cross-KV) — the
         family hook writes one slot row; ``slot`` is a traced scalar so
         every slot shares one trace."""
-        return self.fam.admit_slot(self.params, self.cfg, slot_state, slot, taus=taus, **inputs)
+        return self.fam.admit_slot(self.params, self.cfg, slot_state, slot, policy=policy, **inputs)
 
     def _prefill_impl(
-        self, pools, ssm, tables, start, tokens, n_valid, fresh, taus,
+        self, pools, ssm, occ, tables, start, tokens, n_valid, fresh, policy,
         temps, top_ks, top_ps, seeds, *, sample: bool,
     ):
-        logits, pools, ssm = self._step_prefill(pools, ssm, tables, start, tokens, n_valid, fresh, taus)
+        logits, pools, occ, ssm = self._step_prefill(
+            pools, ssm, occ, tables, start, tokens, n_valid, fresh, policy
+        )
         sliced = logits[..., : self.cfg.vocab]
         if sample:  # a request's FIRST token is sampled at step index 0
             next_tok = sample_tokens(sliced, temps, top_ks, top_ps, seeds, jnp.zeros_like(start))
         else:
             next_tok = jnp.argmax(sliced, axis=-1).astype(jnp.int32)
-        return pools, ssm, next_tok
+        return pools, ssm, occ, next_tok
 
-    def _copy_impl(self, pools, src, dst):
+    def _copy_impl(self, pools, occ, src, dst):
         if self._tp_fns is not None:
-            return self._tp_fns["copy"](pools, "full", src, dst)
-        return tfm.paged_copy_pages(self.layout, pools, "full", src, dst)  # layout-generic
+            return self._tp_fns["copy"](pools, occ, "full", src, dst)
+        # layout-generic; occupancy bits are page content and fork with the page
+        return tfm.paged_copy_pages(self.layout, pools, "full", src, dst, occupancy=occ)
 
     # --- decode-state plumbing --------------------------------------------
     def state_bytes(self) -> dict:
@@ -427,16 +475,20 @@ class ContinuousServeEngine:
         return {"paged": self.pools.bytes() if self.pools is not None else 0, "slot": slot}
 
     # --- runtime DynaTran knob -------------------------------------------
-    def _current_taus(self) -> Optional[dict]:
+    def _current_policy(self) -> KernelPolicy:
+        """The tick's KernelPolicy: the engine's static base policy with this
+        tick's taus (resolved from the transfer curves at the controller's
+        rho) as runtime leaves — a rho change never recompiles."""
         if not self._dynatran:
-            return None
+            return self.policy
         rho = self.rho_ctrl.update(self.sched.queue_depth) if self.rho_ctrl else self._fixed_rho
         self.current_rho = rho
-        return {
+        taus = {
             s: np.float32(np.interp(rho, *self._curves[s]))
             for s in self._sites
             if s in self._curves
         }
+        return self.policy.with_taus(taus)
 
     # --- public API -------------------------------------------------------
     def submit(
@@ -492,21 +544,21 @@ class ContinuousServeEngine:
         self._tick += 1
         self._drain_copies()  # forks queued since the last jitted call
         admitted = self.sched.admit_ready()
-        taus = self._current_taus()
+        policy = self._current_policy()
         if self.bundle.admit_compute:
             # admission-computed slot state (whisper cross-KV): one encoder
             # run per admitted request, writing its slot row.  Re-admission
             # after eviction recomputes the same bits, so replay is exact.
             for req in admitted:
                 dev_inputs = {k: jnp.asarray(v)[None] for k, v in req.inputs.items()}
-                self.slot_state = self._admit(self.slot_state, np.int32(req.slot), dev_inputs, taus)
+                self.slot_state = self._admit(self.slot_state, np.int32(req.slot), dev_inputs, policy)
         prefill_reqs = self.sched.prefill_candidates()
         ready = self.sched.decode_rows()
         finished: list[Request] = []
         if prefill_reqs and (not ready or self._tick % 2 == 1):
-            finished += self._prefill_step(prefill_reqs, taus)
+            finished += self._prefill_step(prefill_reqs, policy)
         elif ready:
-            finished += self._decode_step(ready, taus)
+            finished += self._decode_step(ready, policy)
         in_use = sum(a.num_pages - 1 - a.free_pages for a in self.allocators.values())
         self._peak_pages_in_use = max(self._peak_pages_in_use, in_use)
         return finished
@@ -560,6 +612,15 @@ class ContinuousServeEngine:
         out["state_bytes"] = self.state_bytes()
         out["tp"] = self.mesh.shape["model"] if self.mesh is not None else 1
         out["queue_depth"] = self.sched.queue_depth
+        if self.occupancy is not None:
+            # fraction of live KV positions over the whole pool (unwritten
+            # pages are initialised all-live, so this is an upper bound that
+            # tightens as the pool fills)
+            flat = [np.asarray(v) for v in jax.tree_util.tree_leaves(self.occupancy)]
+            total = sum(a.size for a in flat)
+            out["kv_occupancy_live"] = float(sum(a.sum() for a in flat)) / max(total, 1)
+        else:
+            out["kv_occupancy_live"] = None
         return out
 
     def clear_history(self) -> None:
@@ -585,7 +646,9 @@ class ContinuousServeEngine:
         dst = np.zeros((n,), np.int32)
         for i, (s, d) in enumerate(copies):
             src[i], dst[i] = s, d
-        self.pools = self._copy(self.pools, jnp.asarray(src), jnp.asarray(dst))
+        self.pools, self.occupancy = self._copy(
+            self.pools, self.occupancy, jnp.asarray(src), jnp.asarray(dst)
+        )
 
     def _finish(self, req: Request) -> None:
         req.finish_time = time.perf_counter()
@@ -604,7 +667,7 @@ class ContinuousServeEngine:
                 out[kind][req.slot] = row
         return {kind: jnp.asarray(t) for kind, t in out.items()}
 
-    def _prefill_step(self, reqs: list[Request], taus) -> list[Request]:
+    def _prefill_step(self, reqs: list[Request], policy) -> list[Request]:
         """One jitted call caches a chunk for EVERY admitted prompt; rows
         live at their engine slots so hybrid SSM state stays aligned.
         Shared-prefix rows start at their first uncached position."""
@@ -634,10 +697,10 @@ class ContinuousServeEngine:
                 fill_row(st, req.slot, req.params, 0)
                 sample |= req.params.temperature > 0
         self._drain_copies()
-        self.pools, self.slot_state, next_tok = self._prefill(
-            self.pools, self.slot_state, self._tables_for(reqs), jnp.asarray(starts),
-            jnp.asarray(toks), jnp.asarray(nv), jnp.asarray(fresh), taus,
-            st["temps"], st["top_ks"], st["top_ps"], st["seeds"], sample=sample,
+        self.pools, self.slot_state, self.occupancy, next_tok = self._prefill(
+            self.pools, self.slot_state, self.occupancy, self._tables_for(reqs),
+            jnp.asarray(starts), jnp.asarray(toks), jnp.asarray(nv), jnp.asarray(fresh),
+            policy, st["temps"], st["top_ks"], st["top_ps"], st["seeds"], sample=sample,
         )
         finished: list[Request] = []
         for req in reqs:
@@ -660,7 +723,7 @@ class ContinuousServeEngine:
                 finished.append(req)
         return finished
 
-    def _decode_step(self, ready: list[Request], taus) -> list[Request]:
+    def _decode_step(self, ready: list[Request], policy) -> list[Request]:
         window = self.scfg.decode_window
         rows: list[Request] = []
         for req in ready:
@@ -682,9 +745,9 @@ class ContinuousServeEngine:
             fill_row(st, req.slot, req.params, len(req.generated))
             sample |= req.params.temperature > 0
         self._drain_copies()
-        self.pools, self.slot_state, win_tok = self._decode(
-            self.pools, self.slot_state, self._tables_for(rows), jnp.asarray(lens), jnp.asarray(toks),
-            jnp.asarray(live), taus,
+        self.pools, self.slot_state, self.occupancy, win_tok = self._decode(
+            self.pools, self.slot_state, self.occupancy, self._tables_for(rows),
+            jnp.asarray(lens), jnp.asarray(toks), jnp.asarray(live), policy,
             st["temps"], st["top_ks"], st["top_ps"], st["seeds"], jnp.asarray(st["steps"]),
             sample=sample,
         )

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.dynatran import SparsityConfig, ThresholdCalculator
+from repro.core.policy import KernelPolicy
 from repro.models import zoo
 from repro.optim import adamw
 
@@ -29,13 +30,16 @@ class TrainState:
 def make_train_step(cfg: ModelConfig, ocfg: adamw.OptimizerConfig) -> Callable:
     """Builds the (donated) jittable train step: grads -> clip -> AdamW.
 
-    DynaTran taus are step inputs (resolved from transfer curves on host or
-    on device via ThresholdCalculator) so sparsity targets can change at
-    runtime without recompilation — the paper's runtime knob (Fig. 19).
+    DynaTran taus ride inside the KernelPolicy step input (runtime pytree
+    leaves, resolved from transfer curves on host or on device via
+    ThresholdCalculator) so sparsity targets can change at runtime without
+    recompilation — the paper's runtime knob (Fig. 19).
     """
 
-    def step_fn(params, opt, batch, taus):
-        (loss, metrics), grads = jax.value_and_grad(zoo.loss_fn, has_aux=True)(params, cfg, batch, taus)
+    def step_fn(params, opt, batch, policy):
+        (loss, metrics), grads = jax.value_and_grad(zoo.loss_fn, has_aux=True)(
+            params, cfg, batch, policy=policy
+        )
         params, opt, opt_metrics = adamw.apply_updates(params, grads, opt, ocfg)
         metrics = {**metrics, **opt_metrics, "loss": loss}
         return params, opt, metrics
@@ -103,6 +107,7 @@ def train(
     sp: SparsityConfig = cfg.sparsity
     calculator = calculator or ThresholdCalculator.default()
     taus = calculator.taus(sp) if sp.mode == "dynatran" else None
+    policy = KernelPolicy.from_config(sp, taus)
 
     step_fn = jax.jit(make_train_step(cfg, ocfg), donate_argnums=(0, 1))
     ckpt = store.AsyncCheckpointer(checkpoint_dir) if checkpoint_dir else None
@@ -112,7 +117,7 @@ def train(
     for step in range(start_step, steps):
         t0 = time.perf_counter()
         batch = {k: jnp.asarray(v) for k, v in batches.batch(step).items()}
-        params, opt, metrics = step_fn(params, opt, batch, taus)
+        params, opt, metrics = step_fn(params, opt, batch, policy)
         jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
         healthy = watchdog.record(dt)

@@ -7,6 +7,18 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_cache():
+    """Drop jit caches after each test module.  Every XLA:CPU executable
+    holds live memory mappings; across the whole suite they accumulate past
+    the kernel's default ``vm.max_map_count`` (65530), at which point a
+    later compile's mmap fails and XLA segfaults.  Cross-module cache reuse
+    is near zero (modules use different model configs), so clearing per
+    module bounds the mapping count at the heaviest single module."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

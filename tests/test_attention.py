@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.dynatran import SparsityConfig
+from repro.core.policy import KernelPolicy
 from repro.models import attention as attn
 
 
@@ -170,7 +171,7 @@ class TestSparsityHooks:
         q, k, v = qkv(b=1, sq=32, h=2, d=16, seed=7)
         sp = SparsityConfig(mode="dynatran", sites=("attn_probs",))
         taus = {"attn_probs": 0.9}  # prune almost everything but the max
-        out = attn.reference_attention(q, k, v, causal=True, sparsity=sp, taus=taus)
+        out = attn.reference_attention(q, k, v, causal=True, policy=KernelPolicy.from_config(sp, taus))
         assert bool(jnp.isfinite(out).all())
         # with tau ~= 1, output approaches the argmax value row
         dense = attn.reference_attention(q, k, v, causal=True)
@@ -179,12 +180,12 @@ class TestSparsityHooks:
     def test_topk_mode(self):
         q, k, v = qkv(b=1, sq=32, h=2, d=16, seed=8)
         sp = SparsityConfig(mode="topk", topk_k=4)
-        out = attn.reference_attention(q, k, v, causal=True, sparsity=sp)
+        out = attn.reference_attention(q, k, v, causal=True, policy=KernelPolicy.from_config(sp))
         assert bool(jnp.isfinite(out).all())
 
     def test_tau_zero_is_dense(self):
         q, k, v = qkv(b=1, sq=32, h=2, d=16, seed=9)
         sp = SparsityConfig(mode="dynatran", sites=("attn_probs",))
-        out = attn.reference_attention(q, k, v, causal=True, sparsity=sp, taus={"attn_probs": 0.0})
+        out = attn.reference_attention(q, k, v, causal=True, policy=KernelPolicy.from_config(sp, {"attn_probs": 0.0}))
         dense = attn.reference_attention(q, k, v, causal=True)
         np.testing.assert_allclose(np.asarray(out), np.asarray(dense), rtol=1e-5, atol=1e-7)

@@ -192,6 +192,7 @@ class TestFlashAttentionDynaTran:
 
     def test_matches_chunked_reference(self):
         from repro.core.dynatran import SparsityConfig
+        from repro.core.policy import KernelPolicy
         from repro.models.attention import chunked_attention
 
         b, s, h, d = 1, 256, 2, 64
@@ -200,7 +201,8 @@ class TestFlashAttentionDynaTran:
         got = flash_attention(q, k, v, causal=True, prune_tau=tau, block_q=64, block_k=64, interpret=True)
         sp = SparsityConfig(mode="dynatran", sites=("attn_probs",))
         want = chunked_attention(
-            q, k, v, causal=True, chunk_q=64, chunk_k=64, sparsity=sp, taus={"attn_probs": tau}
+            q, k, v, causal=True, chunk_q=64, chunk_k=64,
+            policy=KernelPolicy.from_config(sp, {"attn_probs": tau}),
         )
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
 

@@ -261,7 +261,7 @@ class TestPagedDecodeBitwise:
             tok = jnp.asarray(toks[:, t : t + 1])
             lengths = jnp.full((b,), t, jnp.int32)
             ld, dense = zoo.decode_step(params, cfg, dense, tok)
-            lp, pools, ssm = tfm.paged_decode_step(params, cfg, layout, pools, tables, lengths, tok, ssm=ssm)
+            lp, pools, _, ssm = tfm.paged_decode_step(params, cfg, layout, pools, tables, lengths, tok, ssm=ssm)
             np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp), err_msg=f"step {t}")
 
     def test_full(self):
@@ -300,7 +300,7 @@ class TestPagedPrefill:
 
         pools_ref = tfm.init_paged_state(cfg, layout, num_pages)
         for t in range(len(prompt)):
-            l_ref, pools_ref, _ = tfm.paged_decode_step(
+            l_ref, pools_ref, _, _ = tfm.paged_decode_step(
                 params, cfg, layout, pools_ref,
                 {k: tb[:1] for k, tb in tables.items()},
                 jnp.full((1,), t, jnp.int32),
@@ -313,7 +313,7 @@ class TestPagedPrefill:
             chunk = prompt[c0 : c0 + c]
             padded = np.zeros(c, np.int32)
             padded[: len(chunk)] = chunk
-            l_chunk, pools, _ = tfm.paged_prefill_chunk(
+            l_chunk, pools, _, _ = tfm.paged_prefill_chunk(
                 params, cfg, layout, pools,
                 {k: tb[:1] for k, tb in tables.items()},
                 jnp.asarray([start], jnp.int32),
@@ -343,7 +343,7 @@ class TestPagedPrefill:
                 chunk = prompt[c0 : c0 + c]
                 padded = np.zeros(c, np.int32)
                 padded[: len(chunk)] = chunk
-                logits, pools, _ = tfm.paged_prefill_chunk(
+                logits, pools, _, _ = tfm.paged_prefill_chunk(
                     params, cfg, layout, pools,
                     {k: tb[:1] for k, tb in tables.items()},
                     jnp.asarray([start], jnp.int32),
@@ -376,7 +376,7 @@ class TestPagedPrefill:
                 chunk = prompt[c0 : c0 + c]
                 padded = np.zeros(c, np.int32)
                 padded[: len(chunk)] = chunk
-                logits, pools, _ = tfm.paged_prefill_chunk(
+                logits, pools, _, _ = tfm.paged_prefill_chunk(
                     params, cfg, layout, pools,
                     {k: tb[i : i + 1] for k, tb in tables.items()},
                     jnp.asarray([start], jnp.int32),
@@ -397,7 +397,7 @@ class TestPagedPrefill:
                 chunk = prompt[starts[i] : starts[i] + c]
                 toks[i, : len(chunk)] = chunk
                 nv[i] = len(chunk)
-            logits, pools, _ = tfm.paged_prefill_chunk(
+            logits, pools, _, _ = tfm.paged_prefill_chunk(
                 params, cfg, layout, pools, tables,
                 jnp.asarray(starts), jnp.asarray(toks), jnp.asarray(nv),
             )

@@ -249,13 +249,19 @@ class TestRegressionGateLogic:
                 "whisper": {"tokens_match_dense": True, "allocator_drained": True,
                             "tok_per_s": 80.0},
             },
+            "sparsity": {
+                "tile_skip_exact": True,
+                "rho05_vs_rho0": 1.2,
+                "pallas_visits": {"strictly_decreasing": True},
+            },
         }
         result.update(over)
         return result
 
     def baseline(self):
         return {"throughput_ratios": {"speedup": 1.0, "ring_vs_slot": 1.0,
-                                      "tp2_vs_slot": 0.5, "rwkv6_vs_slot": 1.0}}
+                                      "tp2_vs_slot": 0.5, "rwkv6_vs_slot": 1.0,
+                                      "rho05_vs_rho0": 1.0}}
 
     def test_tp_skipped_fresh_run_passes(self):
         from benchmarks.check_regression import check_parity, check_throughput
@@ -296,6 +302,35 @@ class TestRegressionGateLogic:
         fresh = self.fresh()
         del fresh["families"]["whisper"]["allocator_drained"]
         assert any("whisper_drained" in f for f in check_parity(fresh))
+
+    def test_tile_skip_parity_flip_fails(self):
+        """A tile-skipped run whose tokens diverged from the masked twin is a
+        zero-tolerance failure, as is a visit counter that stopped falling."""
+        from benchmarks.check_regression import check_parity
+
+        fresh = self.fresh()
+        fresh["sparsity"]["tile_skip_exact"] = False
+        assert any("tile_skip_exact" in f for f in check_parity(fresh))
+        fresh = self.fresh()
+        fresh["sparsity"]["pallas_visits"]["strictly_decreasing"] = False
+        assert any("sparsity_visits_decreasing" in f for f in check_parity(fresh))
+
+    def test_rho_ratio_hard_floor(self):
+        """The rho=0.5 vs rho=0 tokens/s ratio has a HARD floor of 1.0 — a
+        same-run ratio, so no machine tolerance applies.  At the floor,
+        below it, or missing entirely: the gate fails."""
+        from benchmarks.check_regression import check_parity
+
+        assert check_parity(self.fresh()) == []
+        for bad in (0.93, 1.0, None):
+            fresh = self.fresh()
+            fresh["sparsity"]["rho05_vs_rho0"] = bad
+            assert any("rho05_vs_rho0" in f for f in check_parity(fresh)), bad
+
+    def test_rho_ratio_tracked_in_trajectory(self):
+        from benchmarks.check_regression import throughput_ratios
+
+        assert throughput_ratios(self.fresh())["rho05_vs_rho0"] == 1.2
 
 
 @needs_mesh
