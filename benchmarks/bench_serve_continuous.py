@@ -573,6 +573,23 @@ def _run_sparsity_section(quick: bool) -> dict:
     }
 
 
+def _run_analysis_section() -> bool:
+    """Zero-tolerance ``analysis_clean`` flag: the static reprolint checkers
+    (retrace / host-device / donation / Pallas) against the committed
+    baseline.  Emitting it from bench-smoke means the regression gate and the
+    ``lint-invariants`` CI lane enforce the same contract and cannot silently
+    drift apart (the harness half runs in the lint lane — it needs its own
+    engine and would double this bench's wall)."""
+    from repro.analysis import run_static
+
+    new, stale = run_static()
+    for f in new:
+        print(f"  reprolint: {f.format()}")
+    for e in stale:
+        print(f"  reprolint: STALE baseline entry: {e.format()}")
+    return not new and not stale
+
+
 def _request_mix(n: int, prompt_len: int, short_new: int, long_new: int, rng) -> list[tuple[list[int], int]]:
     """75% short / 25% long generations, shuffled so waves mix both."""
     reqs = []
@@ -664,7 +681,9 @@ def run(quick: bool = False) -> dict:
     sparsity = _run_sparsity_section(quick)
 
     speedup = (useful / c_wall) / (useful / b_wall)
+    analysis_clean = _run_analysis_section()
     result = {
+        "analysis_clean": analysis_clean,
         "sparsity": sparsity,
         "ring": ring,
         "prefix_cache": prefix,

@@ -39,6 +39,10 @@ import sys
 PARITY_FLAGS = [
     ("bitwise_identical_rho0", ("bitwise_identical_rho0",)),
     ("outputs_match_baseline", ("outputs_match_baseline",)),
+    # reprolint static invariants (ISSUE 7): the bench emits the same
+    # zero-tolerance flag the lint-invariants CI lane enforces, so the
+    # regression gate and the lint lane cannot drift apart
+    ("analysis_clean", ("analysis_clean",)),
     ("ring_bitwise", ("ring", "bitwise_identical_rho0")),
     ("ring_bytes_flat", ("ring", "ring_bytes_flat_in_max_len")),
     ("prefix_tokens_identical", ("prefix_cache", "tokens_identical_to_uncached")),

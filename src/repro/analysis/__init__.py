@@ -1,0 +1,44 @@
+"""reprolint — repo-specific static analysis for the serve stack's contracts.
+
+Four checkers (see README "Static invariants"):
+
+- ``retrace`` (RT1xx): knobs enter jitted steps as runtime leaves, never as
+  statics/literals; pytrees are registered; legacy kwargs stay dead.
+- ``hostdevice`` (HD2xx): scheduler/allocator/prefix-cache code is
+  device-free; kernels never sync to host.
+- ``donation`` (DN3xx): donated buffers are rebound or dead after the call.
+- ``pallas`` (PL4xx): BlockSpec/grid well-formedness; ``interpret=`` routes
+  through ``KernelPolicy.interpret``.
+
+Run ``python -m repro.analysis --strict`` (CI lane ``lint-invariants``); the
+jaxpr-assisted harness (RTH0x) additionally proves knob perturbations reuse
+the jit cache on the real serve/train entry points.  Extend by subclassing
+:class:`repro.analysis.core.Checker` and decorating with ``@register``.
+"""
+from repro.analysis.baseline import (
+    apply_baseline,
+    default_baseline_path,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.core import REGISTRY, Checker, Finding, register, repo_root, run_checks
+
+__all__ = [
+    "REGISTRY",
+    "Checker",
+    "Finding",
+    "apply_baseline",
+    "default_baseline_path",
+    "load_baseline",
+    "register",
+    "repo_root",
+    "run_checks",
+    "run_static",
+    "save_baseline",
+]
+
+
+def run_static(paths=None, checks=None):
+    """All static findings after baseline filtering -> (new, stale)."""
+    findings = run_checks(paths=paths, checks=checks)
+    return apply_baseline(findings, load_baseline())

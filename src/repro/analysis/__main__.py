@@ -1,0 +1,108 @@
+"""``python -m repro.analysis`` — the reprolint CLI.
+
+Default: static checkers + the jaxpr-assisted harness over ``src/repro``,
+report findings, exit 0 (report mode).  ``--strict`` exits 1 on any
+non-baselined finding, any stale baseline entry, or any harness failure —
+that is the CI ``lint-invariants`` contract.  ``--paths`` scans specific
+files (fixture tests); ``--no-harness`` keeps the run purely static.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.baseline import (
+    apply_baseline,
+    default_baseline_path,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.core import REGISTRY, run_checks
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: retrace / host-device / donation / Pallas contracts",
+    )
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on non-baselined findings, stale baseline entries, harness failures")
+    p.add_argument("--paths", nargs="*", type=Path, default=None,
+                   help="files/dirs to scan (default: src/repro)")
+    p.add_argument("--checks", default=None,
+                   help="comma-separated checker names (default: all registered)")
+    p.add_argument("--baseline", type=Path, default=None,
+                   help=f"baseline file (default: {default_baseline_path().name})")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="write current findings to the baseline file and exit")
+    p.add_argument("--no-harness", action="store_true",
+                   help="skip the jaxpr-assisted runtime harness (static only)")
+    p.add_argument("--report", type=Path, default=None,
+                   help="write a JSON findings report to this path")
+    p.add_argument("--list-checks", action="store_true", help="list checkers and codes")
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    checks = [c.strip() for c in args.checks.split(",")] if args.checks else None
+
+    if args.list_checks:
+        from repro.analysis import donation, hostdevice, pallas, retrace  # noqa: F401
+
+        for name in sorted(REGISTRY):
+            print(name)
+            for code, desc in sorted(REGISTRY[name].codes.items()):
+                print(f"  {code}: {desc}")
+        return 0
+
+    findings = run_checks(paths=args.paths, checks=checks)
+
+    if args.update_baseline:
+        path = save_baseline(findings, args.baseline)
+        print(f"baselined {len(findings)} finding(s) -> {path}")
+        return 0
+
+    entries = load_baseline(args.baseline)
+    new, stale = apply_baseline(findings, entries)
+
+    # the harness only makes sense against the real repo, not fixture paths
+    harness_results = []
+    if not args.no_harness and args.paths is None:
+        from repro.analysis.harness import run_harness
+
+        harness_results = run_harness()
+
+    for f in new:
+        print(f.format())
+    for e in stale:
+        print(f"STALE baseline entry (fix no longer needed?): {e.format()}")
+    for r in harness_results:
+        print(r.format())
+
+    harness_failed = [r for r in harness_results if not r.ok]
+    clean = not new and not stale and not harness_failed
+    print(
+        f"reprolint: {len(new)} finding(s), {len(stale)} stale baseline entr(ies), "
+        f"{len(harness_failed)}/{len(harness_results)} harness failure(s) "
+        f"[checkers: {', '.join(sorted(REGISTRY))}]"
+    )
+
+    if args.report:
+        args.report.parent.mkdir(parents=True, exist_ok=True)
+        args.report.write_text(json.dumps({
+            "clean": clean,
+            "findings": [f.__dict__ for f in new],
+            "stale_baseline": [e.__dict__ for e in stale],
+            "harness": [r.__dict__ for r in harness_results],
+        }, indent=2) + "\n")
+
+    if args.strict:
+        return 0 if clean else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

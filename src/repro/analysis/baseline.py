@@ -1,0 +1,82 @@
+"""Baseline / suppression file for reprolint.
+
+``ANALYSIS_baseline.json`` (repo root, committed) lists findings that are
+known and accepted; every entry carries a mandatory ``reason``.  Two rules
+keep it honest:
+
+- a finding matching a baseline entry is suppressed (not an error);
+- a baseline entry matching *no* current finding is **stale** and fails a
+  ``--strict`` run — suppressions cannot outlive the code they excused.
+
+Matching is on (code, path, message); line numbers drift with unrelated
+edits and are ignored.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.analysis.core import Finding, repo_root
+
+BASELINE_NAME = "ANALYSIS_baseline.json"
+
+
+def default_baseline_path() -> Path:
+    return repo_root() / BASELINE_NAME
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    code: str
+    path: str
+    message: str
+    reason: str
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        return (self.code, self.path, self.message)
+
+    def format(self) -> str:
+        return f"{self.path}: {self.code} {self.message} (reason: {self.reason})"
+
+
+def load_baseline(path: Path | None = None) -> list[BaselineEntry]:
+    path = path or default_baseline_path()
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    entries = []
+    for e in data.get("suppressions", []):
+        if not e.get("reason"):
+            raise ValueError(f"baseline entry without a reason: {e}")
+        entries.append(
+            BaselineEntry(
+                code=e["code"], path=e["path"], message=e["message"], reason=e["reason"]
+            )
+        )
+    return entries
+
+
+def save_baseline(findings: list[Finding], path: Path | None = None, reason: str = "baselined by --update-baseline") -> Path:
+    path = path or default_baseline_path()
+    payload = {
+        "version": 1,
+        "suppressions": [
+            {"code": f.code, "path": f.path, "message": f.message, "reason": reason}
+            for f in findings
+        ],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
+
+
+def apply_baseline(
+    findings: list[Finding], entries: list[BaselineEntry]
+) -> tuple[list[Finding], list[BaselineEntry]]:
+    """-> (new findings not excused by the baseline, stale baseline entries)."""
+    keys = {f.key for f in findings}
+    excused = {e.key for e in entries}
+    new = [f for f in findings if f.key not in excused]
+    stale = [e for e in entries if e.key not in keys]
+    return new, stale

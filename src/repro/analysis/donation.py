@@ -1,0 +1,169 @@
+"""DN3xx — donation discipline: a donated buffer is dead after the call.
+
+``donate_argnums`` hands the buffer to XLA for in-place reuse; reading the
+Python reference afterwards is exactly PR 3's use-after-dispatch aliasing
+race (stale or garbage data, silently).  The engine-wide idiom is to rebind
+every donated argument from the call result *in the same assignment*::
+
+    self.pools, self.slot_state, self.occupancy, tok = self._decode(
+        self.pools, self.slot_state, self.occupancy, ...)
+
+This checker resolves jit wrappers with ``donate_argnums`` (scoped per class,
+so the two engines' ``self._decode`` tables stay apart) and, at every
+statically-resolvable call site, verifies each donated Name/attribute is
+either rebound by that statement or never read again in the enclosing
+function — loop bodies count as "again", since the next iteration re-reads.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (
+    Checker,
+    Finding,
+    SourceModule,
+    call_name,
+    collect_jit_index,
+    dotted,
+    functions_with_class,
+    own_exprs,
+    register,
+    scoped_statements,
+)
+
+
+def _assign_targets(stmt: ast.stmt) -> set[str]:
+    """Dotted names (re)bound by this statement."""
+    out: set[str] = set()
+    targets: list[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                d = dotted(e)
+                if d:
+                    out.add(d)
+        else:
+            d = dotted(t)
+            if d:
+                out.add(d)
+    return out
+
+
+def _reads(stmt: ast.stmt, ref: str) -> bool:
+    """Does this statement itself read ``ref`` (Load context, header-only for
+    compound statements)?"""
+    for tree in own_exprs(stmt):
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                if dotted(node) == ref and isinstance(getattr(node, "ctx", None), ast.Load):
+                    return True
+    return False
+
+
+def _donated_refs(call: ast.Call, jc) -> list[str]:
+    out = []
+    for pos in jc.donate_nums:
+        if pos < len(call.args):
+            d = dotted(call.args[pos])
+            if d:
+                out.append(d)
+    for name in jc.donate_names:
+        for kw in call.keywords:
+            if kw.arg == name:
+                d = dotted(kw.value)
+                if d:
+                    out.append(d)
+    return out
+
+
+@register
+class DonationChecker(Checker):
+    name = "donation"
+    codes = {
+        "DN301": "donated local read after the donating call",
+        "DN302": "donated attribute neither rebound by the call nor dead after it",
+    }
+
+    def check(self, mod: SourceModule) -> list[Finding]:
+        idx = collect_jit_index(mod.tree)
+        if not any(j.donate_nums or j.donate_names for j in idx.all()):
+            return []
+        out: list[Finding] = []
+        for fn, cls in functions_with_class(mod.tree):
+            stmts = scoped_statements(fn)
+            loops = [s for s in stmts if isinstance(s, (ast.For, ast.While, ast.AsyncFor))]
+            loop_members = {
+                id(loop): {id(s) for s in ast.walk(loop) if isinstance(s, ast.stmt)}
+                for loop in loops
+            }
+            for si, stmt in enumerate(stmts):
+                calls = [
+                    n
+                    for tree in own_exprs(stmt)
+                    for n in ast.walk(tree)
+                    if isinstance(n, ast.Call)
+                ]
+                for call in calls:
+                    jc = idx.lookup(call_name(call), cls)
+                    if jc is None or not (jc.donate_nums or jc.donate_names):
+                        continue
+                    donated = _donated_refs(call, jc)
+                    if not donated:
+                        continue
+                    if isinstance(stmt, ast.Return):
+                        continue  # result escapes; the caller owns the contract
+                    rebound = _assign_targets(stmt)
+                    enclosing = [
+                        loop for loop in loops if id(stmt) in loop_members[id(loop)]
+                    ]
+                    for ref in donated:
+                        if ref in rebound:
+                            continue
+                        # statements that may execute after the call: later
+                        # ones, plus the whole loop body when inside a loop
+                        # (the next iteration comes back around)
+                        later = [
+                            s
+                            for s in stmts
+                            if s is not stmt
+                            and (
+                                s.lineno > stmt.lineno
+                                or any(id(s) in loop_members[id(lp)] for lp in enclosing)
+                            )
+                        ]
+                        read_at = None
+                        for s in later:
+                            if _reads(s, ref):
+                                read_at = s.lineno
+                                break
+                            if ref in _assign_targets(s):
+                                break  # rebound before any read: safe
+                        if read_at is not None:
+                            out.append(
+                                Finding(
+                                    "DN301", mod.rel, call.lineno,
+                                    f"{ref!r} is donated to {jc.ref} but read "
+                                    f"again at line {read_at} — use-after-donate "
+                                    "aliasing race; rebind it from the call result",
+                                )
+                            )
+                        elif ref.startswith("self."):
+                            # attribute state outlives the function: unless a
+                            # later statement rebinds it, every other method
+                            # now sees a dead buffer
+                            reassigned = any(ref in _assign_targets(s) for s in later)
+                            if not reassigned:
+                                out.append(
+                                    Finding(
+                                        "DN302", mod.rel, call.lineno,
+                                        f"{ref!r} is donated to {jc.ref} and never "
+                                        "rebound — the attribute keeps pointing at "
+                                        "a donated (dead) buffer; assign the call "
+                                        "result back",
+                                    )
+                                )
+        return out

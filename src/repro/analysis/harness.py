@@ -1,0 +1,175 @@
+"""The jaxpr-assisted runtime harness behind the static retrace checker.
+
+AST lint proves the *absence of known bad patterns*; this harness proves the
+positive contract on the real entry points: perturbing every runtime knob —
+DynaTran rho/taus, per-request ``SamplingParams`` — must reuse the jit cache
+of the serve decode/prefill steps (``serve/engine.py``) and the train step
+(``train/loop.py``), and taus must appear in the jaxpr as *invars*, not baked
+constants.  Each check returns a :class:`HarnessResult`; failures surface as
+``RTH*`` findings in ``python -m repro.analysis`` output.
+
+jax is imported lazily so the pure-static CLI paths (fixture tests, the bench
+``analysis_clean`` probe) stay import-light.
+"""
+from __future__ import annotations
+
+import dataclasses
+import traceback
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class HarnessResult:
+    code: str
+    name: str
+    ok: bool
+    detail: str
+
+    def format(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        return f"{self.code} {self.name}: {status} — {self.detail}"
+
+
+def _check_taus_are_jaxpr_invars() -> HarnessResult:
+    """Two policies differing only in tau values must produce *identical*
+    jaxprs — a baked (static) tau would show up as a differing constant."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.policy import KernelPolicy
+
+    pol_a = KernelPolicy(
+        mode="dynatran", sites=("ffn_act",), taus={"ffn_act": np.float32(0.125)}
+    )
+    pol_b = pol_a.with_taus({"ffn_act": np.float32(0.875)})
+
+    def f(x, pol):
+        return pol.prune(x, "ffn_act") * 2.0
+
+    x = jnp.ones((4, 8), jnp.float32)
+    ja = str(jax.make_jaxpr(f)(x, pol_a))
+    jb = str(jax.make_jaxpr(f)(x, pol_b))
+    if ja != jb:
+        return HarnessResult(
+            "RTH01", "taus-are-jaxpr-invars", False,
+            "jaxpr changed with tau value: thresholds are being trace-baked",
+        )
+    if "0.125" in ja:
+        return HarnessResult(
+            "RTH01", "taus-are-jaxpr-invars", False,
+            "tau value appears as a jaxpr constant: thresholds are static",
+        )
+    return HarnessResult(
+        "RTH01", "taus-are-jaxpr-invars", True,
+        "tau perturbation leaves the jaxpr identical (runtime invar)",
+    )
+
+
+def _tiny_engine():
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.core.dynatran import SparsityConfig
+    from repro.models import zoo
+    from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine
+
+    cfg = ModelConfig(
+        name="reprolint-tiny", family="dense", layers=1, d_model=32, heads=2,
+        kv_heads=2, d_ff=64, vocab=64, remat="none",
+        sparsity=SparsityConfig(mode="dynatran", target_rho=0.2, sites=("ffn_act",)),
+    )
+    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ContinuousServeConfig(slots=2, max_len=32, page_size=8, prefill_chunk=8)
+    return ContinuousServeEngine(cfg, params, scfg)
+
+
+def _check_serve_knob_cache_reuse() -> HarnessResult:
+    """On the real continuous engine: perturbing rho (→ fresh taus every
+    tick) and every SamplingParams field must not retrace decode/prefill."""
+    from repro.serve.sampling import SamplingParams
+
+    eng = _tiny_engine()
+    # warm both static decode paths (greedy + sampled) once
+    eng.generate([[1, 2, 3], [4, 5, 6]], max_new_tokens=4)
+    eng.generate(
+        [[3, 2, 1], [6, 5, 4]], max_new_tokens=4,
+        sampling=SamplingParams(temperature=0.7, top_k=3, top_p=0.9, seed=1),
+    )
+    warm = (eng._decode._cache_size(), eng._prefill._cache_size())
+    # perturb every runtime knob
+    eng._fixed_rho = 0.6
+    eng.generate([[2, 2, 2], [3, 3, 3]], max_new_tokens=4)
+    eng.generate(
+        [[1, 1, 1], [2, 2, 2]], max_new_tokens=4,
+        sampling=SamplingParams(temperature=1.3, top_k=5, top_p=0.8, seed=9),
+    )
+    after = (eng._decode._cache_size(), eng._prefill._cache_size())
+    ok = warm == after
+    detail = (
+        f"decode/prefill jit cache sizes {warm} -> {after} across rho 0.2->0.6 "
+        "and full SamplingParams perturbation"
+    )
+    return HarnessResult("RTH02", "serve-knobs-hit-jit-cache", ok, detail)
+
+
+def _check_train_taus_cache_reuse() -> HarnessResult:
+    """train/loop.py step: taus ride the KernelPolicy leaves — two policies
+    with different thresholds share one compilation."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import ModelConfig
+    from repro.core.dynatran import SparsityConfig
+    from repro.core.policy import KernelPolicy
+    from repro.models import zoo
+    from repro.optim import adamw
+    from repro.train.loop import make_train_step
+
+    cfg = ModelConfig(
+        name="reprolint-train", family="dense", layers=1, d_model=32, heads=2,
+        kv_heads=2, d_ff=64, vocab=64, remat="none",
+        sparsity=SparsityConfig(mode="dynatran", sites=("ffn_act",)),
+    )
+    ocfg = adamw.OptimizerConfig()
+    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_state(params, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg), donate_argnums=(0, 1))
+    batch = {
+        "tokens": jnp.zeros((2, 8), jnp.int32),
+        "labels": jnp.zeros((2, 8), jnp.int32),
+    }
+    pol = KernelPolicy.from_config(cfg.sparsity, {"ffn_act": np.float32(0.1)})
+    params, opt, _ = step(params, opt, batch, pol)
+    params, opt, _ = step(params, opt, batch, pol.with_taus({"ffn_act": np.float32(0.9)}))
+    size = step._cache_size()
+    return HarnessResult(
+        "RTH03", "train-taus-hit-jit-cache", size == 1,
+        f"train step jit cache size {size} after two tau values (want 1)",
+    )
+
+
+_CHECKS: tuple[Callable[[], HarnessResult], ...] = (
+    _check_taus_are_jaxpr_invars,
+    _check_serve_knob_cache_reuse,
+    _check_train_taus_cache_reuse,
+)
+
+
+def run_harness() -> list[HarnessResult]:
+    results = []
+    for fn in _CHECKS:
+        try:
+            results.append(fn())
+        except Exception:
+            code = {"_check_taus_are_jaxpr_invars": "RTH01",
+                    "_check_serve_knob_cache_reuse": "RTH02",
+                    "_check_train_taus_cache_reuse": "RTH03"}.get(fn.__name__, "RTH99")
+            results.append(
+                HarnessResult(
+                    code, fn.__name__, False,
+                    "crashed: " + traceback.format_exc(limit=3).strip().splitlines()[-1],
+                )
+            )
+    return results

@@ -1,0 +1,128 @@
+"""HD2xx — host/device boundary: control plane vs datapath stay apart.
+
+The serving architecture (ROADMAP "Host/device split") keeps the allocator,
+page tables, prefix cache, and scheduler host-side — pure Python/numpy, no
+device arrays mid-tick — while kernels are pure device code that must never
+force an implicit sync.  This checker enforces the module-layer contract:
+
+- host scopes (``serve/scheduler.py``, ``core/scheduler.py``, and the
+  ``PageAllocator``/``PrefixCache`` classes in ``models/kvcache.py``) must not
+  touch ``jax``/``jnp``;
+- device scopes (``kernels/*``) must not use numpy, ``.item()``/``.tolist()``,
+  or ``jax.device_get`` — each is a hidden device->host sync in the hot path.
+
+A ``# reprolint: module=host`` / ``module=device`` pragma pins the side for
+files whose path does not imply one (fixtures use this too).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Checker, Finding, SourceModule, call_name, last_segment, register
+
+HOST_MODULES = ("repro/serve/scheduler.py", "repro/core/scheduler.py")
+DEVICE_PREFIXES = ("repro/kernels/",)
+# host-side classes living inside otherwise-device-facing modules
+HOST_CLASSES = {"repro/models/kvcache.py": ("PageAllocator", "PrefixCache")}
+
+_SYNC_ATTRS = frozenset({"item", "tolist"})
+_DEVICE_FORBIDDEN_ROOTS = ("np.", "numpy.")
+
+
+def _module_role(mod: SourceModule) -> str | None:
+    if mod.role:
+        return mod.role
+    if any(mod.rel.endswith(m) for m in HOST_MODULES):
+        return "host"
+    if any(p in mod.rel for p in DEVICE_PREFIXES):
+        return "device"
+    return None
+
+
+def _host_findings(mod: SourceModule, scope: ast.AST, where: str) -> list[Finding]:
+    out = []
+    seen_lines: set[int] = set()
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            names = [a.name for a in node.names]
+            src = getattr(node, "module", None) or ""
+            if any(n.split(".")[0] == "jax" for n in names) or src.split(".")[0] == "jax":
+                out.append(
+                    Finding(
+                        "HD201", mod.rel, node.lineno,
+                        f"{where} imports jax — host-side control plane must "
+                        "stay device-free (pure Python/numpy)",
+                    )
+                )
+        elif isinstance(node, ast.Name) and node.id in ("jax", "jnp"):
+            if node.lineno not in seen_lines:
+                seen_lines.add(node.lineno)
+                out.append(
+                    Finding(
+                        "HD201", mod.rel, node.lineno,
+                        f"{where} uses {node.id!r} — host-side control plane "
+                        "must not touch device arrays mid-tick",
+                    )
+                )
+    return out
+
+
+def _device_findings(mod: SourceModule, scope: ast.AST) -> list[Finding]:
+    out = []
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            names = [a.name for a in node.names]
+            src = getattr(node, "module", None) or ""
+            if any(n.split(".")[0] == "numpy" for n in names) or src.split(".")[0] == "numpy":
+                out.append(
+                    Finding(
+                        "HD202", mod.rel, node.lineno,
+                        "kernel module imports numpy — device code sees dense "
+                        "pools + index tensors only; host staging belongs in "
+                        "the engine/scheduler layer",
+                    )
+                )
+        elif isinstance(node, ast.Call):
+            name = call_name(node)
+            seg = last_segment(name)
+            if seg in _SYNC_ATTRS and isinstance(node.func, ast.Attribute):
+                out.append(
+                    Finding(
+                        "HD202", mod.rel, node.lineno,
+                        f".{seg}() in a kernel module — implicit device->host "
+                        "sync in the hot path",
+                    )
+                )
+            elif name == "jax.device_get" or (name or "").startswith(_DEVICE_FORBIDDEN_ROOTS):
+                out.append(
+                    Finding(
+                        "HD202", mod.rel, node.lineno,
+                        f"{name}(...) in a kernel module — implicit "
+                        "device->host transfer; kernels are pure device code",
+                    )
+                )
+    return out
+
+
+@register
+class HostDeviceChecker(Checker):
+    name = "hostdevice"
+    codes = {
+        "HD201": "jax/jnp usage in a host-side control-plane scope",
+        "HD202": "implicit device sync / numpy usage in a device-side kernel scope",
+    }
+
+    def check(self, mod: SourceModule) -> list[Finding]:
+        out: list[Finding] = []
+        role = _module_role(mod)
+        if role == "host":
+            out += _host_findings(mod, mod.tree, f"host module {mod.rel}")
+        elif role == "device":
+            out += _device_findings(mod, mod.tree)
+        for suffix, classes in HOST_CLASSES.items():
+            if not mod.rel.endswith(suffix):
+                continue
+            for node in mod.tree.body:
+                if isinstance(node, ast.ClassDef) and node.name in classes:
+                    out += _host_findings(mod, node, f"host class {node.name}")
+        return out

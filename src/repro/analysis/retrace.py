@@ -1,0 +1,252 @@
+"""RT1xx — retrace hazards: knobs must enter jitted steps as runtime leaves.
+
+The serve stack's throughput contract ("No recompiles from knobs", ROADMAP)
+says DynaTran taus, SamplingParams, and scheduler decisions ride into jitted
+steps as tensor leaves.  This checker finds the static-side leaks: knob names
+in ``static_argnames``, Python literals / host coercions flowing into known
+jit-wrapped call sites, pytree classes that forgot to register, and call
+sites still using the deprecated pre-KernelPolicy kwargs.  The companion
+runtime proof lives in :mod:`repro.analysis.harness`.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (
+    Checker,
+    Finding,
+    SourceModule,
+    call_name,
+    collect_jit_index,
+    dotted,
+    is_jit_ref,
+    last_segment,
+    register,
+)
+
+
+def _calls_with_class(tree: ast.Module) -> list[tuple[ast.Call, str | None]]:
+    out: list[tuple[ast.Call, str | None]] = []
+
+    def walk(node: ast.AST, cls: str | None) -> None:
+        for ch in ast.iter_child_nodes(node):
+            if isinstance(ch, ast.ClassDef):
+                walk(ch, ch.name)
+                continue
+            if isinstance(ch, ast.Call):
+                out.append((ch, cls))
+            walk(ch, cls)
+
+    walk(tree, None)
+    return out
+
+# runtime knobs by contract: these may never be static or trace-baked
+KNOB_NAMES = frozenset(
+    {
+        "tau", "taus", "rho", "target_rho", "prune_tau",
+        "temperature", "temperatures", "temps",
+        "top_k", "top_ks", "top_p", "top_ps",
+        "seed", "seeds", "policy",
+    }
+)
+
+# call sites migrated to KernelPolicy in PR 6: passing the legacy kwargs here
+# bypasses the one sanctioned adapter (resolve_policy)
+MIGRATED_CALLEES = frozenset(
+    {
+        "attention", "forward", "decode_step", "loss_fn",
+        "paged_decode_step", "paged_prefill_chunk",
+        "flash_attention_ref", "make_tp_paged_fns",
+    }
+)
+LEGACY_KWARGS = frozenset({"sparsity", "taus", "use_pallas"})
+# the adapter itself and config constructors legitimately name these
+LEGACY_EXEMPT = frozenset({"resolve_policy", "from_config", "replace"})
+
+_HOST_COERCIONS = frozenset({"float", "int", "bool"})
+
+
+def _is_scalar_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, (bool, int, float)):
+        return True
+    # -0.5 parses as UnaryOp(USub, Constant)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.operand, ast.Constant):
+        return isinstance(node.operand.value, (int, float))
+    return False
+
+
+def _is_host_coercion(node: ast.AST) -> bool:
+    """float(x) / int(x) / x.item() / x.tolist() — a device sync when x is
+    traced, a per-value cache key when the target position is static."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = call_name(node)
+    if name in _HOST_COERCIONS and node.args and not isinstance(node.args[0], ast.Constant):
+        return True
+    return last_segment(name) in ("item", "tolist")
+
+
+@register
+class RetraceChecker(Checker):
+    name = "retrace"
+    codes = {
+        "RT101": "runtime knob listed in static_argnames/static_argnums",
+        "RT102": "knob passed to a jitted callable as a Python literal",
+        "RT103": "host coercion (float()/int()/.item()) flowing into a jitted call",
+        "RT104": "jax.jit constructed inside a loop (cache thrash)",
+        "RT105": "pytree class defines tree_flatten but is never registered",
+        "RT106": "deprecated sparsity=/taus=/use_pallas= kwargs at a migrated call site",
+        "RT107": "dict with non-constant keys passed to a jitted callable (treedef instability)",
+    }
+
+    def check(self, mod: SourceModule) -> list[Finding]:
+        out: list[Finding] = []
+        idx = collect_jit_index(mod.tree)
+
+        # RT101 — static knob names on the wrap itself
+        for jc in idx.all():
+            for s in jc.static_names:
+                if s in KNOB_NAMES:
+                    out.append(
+                        Finding(
+                            "RT101", mod.rel, jc.line,
+                            f"{jc.ref}: runtime knob {s!r} in static_argnames — "
+                            "every new value recompiles; pass it as a tensor leaf",
+                        )
+                    )
+            for pos in jc.static_nums:
+                pname = jc.param_at(pos)
+                if pname in KNOB_NAMES:
+                    out.append(
+                        Finding(
+                            "RT101", mod.rel, jc.line,
+                            f"{jc.ref}: runtime knob {pname!r} (arg {pos}) in "
+                            "static_argnums — every new value recompiles",
+                        )
+                    )
+
+        for node, cls in _calls_with_class(mod.tree):
+            ref = call_name(node)
+
+            # RT106 — legacy kwargs at migrated call sites
+            seg = last_segment(ref)
+            if seg in MIGRATED_CALLEES and seg not in LEGACY_EXEMPT:
+                for kw in node.keywords:
+                    if kw.arg in LEGACY_KWARGS and not (
+                        isinstance(kw.value, ast.Constant) and kw.value.value is None
+                    ):
+                        out.append(
+                            Finding(
+                                "RT106", mod.rel, node.lineno,
+                                f"call to {seg}() passes deprecated {kw.arg}= — "
+                                "construct a KernelPolicy (resolve_policy is the "
+                                "only sanctioned adapter)",
+                            )
+                        )
+
+            jc = idx.lookup(ref, cls)
+            if jc is None:
+                continue
+            # arguments into a known-jitted callable
+            for pos, a in enumerate(node.args):
+                pname = jc.param_at(pos)
+                if jc.is_static(pos, pname):
+                    continue
+                if pname in KNOB_NAMES and _is_scalar_literal(a):
+                    out.append(
+                        Finding(
+                            "RT102", mod.rel, node.lineno,
+                            f"{jc.ref}: knob {pname!r} passed as Python literal — "
+                            "weak-typed scalars fork the jit cache against the "
+                            "np/jnp-typed path; pass np.float32/jnp scalars",
+                        )
+                    )
+                if _is_host_coercion(a):
+                    out.append(
+                        Finding(
+                            "RT103", mod.rel, node.lineno,
+                            f"{jc.ref}: host coercion in traced argument "
+                            f"{pname or pos} — forces a device sync per call",
+                        )
+                    )
+            for kw in node.keywords:
+                if kw.arg is None:
+                    continue
+                if jc.is_static(None, kw.arg):
+                    continue
+                if kw.arg in KNOB_NAMES and _is_scalar_literal(kw.value):
+                    out.append(
+                        Finding(
+                            "RT102", mod.rel, node.lineno,
+                            f"{jc.ref}: knob {kw.arg!r} passed as Python literal — "
+                            "weak-typed scalars fork the jit cache against the "
+                            "np/jnp-typed path; pass np.float32/jnp scalars",
+                        )
+                    )
+                if _is_host_coercion(kw.value):
+                    out.append(
+                        Finding(
+                            "RT103", mod.rel, node.lineno,
+                            f"{jc.ref}: host coercion in traced argument "
+                            f"{kw.arg!r} — forces a device sync per call",
+                        )
+                    )
+                if isinstance(kw.value, ast.Dict) and any(
+                    not isinstance(k, ast.Constant) for k in kw.value.keys if k is not None
+                ):
+                    out.append(
+                        Finding(
+                            "RT107", mod.rel, node.lineno,
+                            f"{jc.ref}: dict argument {kw.arg!r} has non-constant "
+                            "keys — treedef changes retrace; fix the key set",
+                        )
+                    )
+
+        # RT104 — jit() constructed inside loops
+        for loop in ast.walk(mod.tree):
+            if not isinstance(loop, (ast.For, ast.While, ast.AsyncFor)):
+                continue
+            for inner in ast.walk(loop):
+                if isinstance(inner, ast.Call) and is_jit_ref(inner.func):
+                    out.append(
+                        Finding(
+                            "RT104", mod.rel, inner.lineno,
+                            "jax.jit(...) inside a loop — each wrap is a fresh "
+                            "cache; hoist the wrapped callable out of the loop",
+                        )
+                    )
+
+        # RT105 — tree_flatten without registration
+        registered_names = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                name = call_name(node) or ""
+                if "register_pytree" in name:
+                    for a in node.args:
+                        d = dotted(a)
+                        if d:
+                            registered_names.add(last_segment(d))
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            has_flatten = any(
+                isinstance(b, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and b.name == "tree_flatten"
+                for b in node.body
+            )
+            if not has_flatten:
+                continue
+            decorated = any(
+                "register_pytree" in (dotted(d) or dotted(getattr(d, "func", ast.Pass())) or "")
+                for d in node.decorator_list
+            )
+            if not decorated and node.name not in registered_names:
+                out.append(
+                    Finding(
+                        "RT105", mod.rel, node.lineno,
+                        f"class {node.name} defines tree_flatten but is never "
+                        "registered — passed into jit it traces as a static "
+                        "leaf-less object (silent retrace per instance)",
+                    )
+                )
+        return out

@@ -40,16 +40,28 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def prune(x, tau, **kw):
+def _platform_policy() -> KernelPolicy:
+    """The historical backend-by-platform default as a policy: fused kernels
+    compiled on TPU, reference path (with interpret-mode emulation available)
+    elsewhere.  This is the one sanctioned construction site for the
+    platform-derived ``interpret`` flag — kernel call sites must route
+    ``interpret=pol.interpret`` (reprolint PL404)."""
+    tpu = on_tpu()
+    return KernelPolicy(backend="pallas" if tpu else "ref", interpret=not tpu)
+
+
+def prune(x, tau, *, policy=None, **kw):
     """DynaTran prune via the kernel on TPU, reference otherwise."""
-    if on_tpu():
-        return dynatran_prune(x, tau, interpret=False, **kw)
+    pol = policy if policy is not None else _platform_policy()
+    if pol.use_pallas:
+        return dynatran_prune(x, tau, interpret=pol.interpret, **kw)
     return ref.dynatran_prune_ref(x, tau)
 
 
-def sparse_matmul(x, w, xm=None, wm=None, **kw):
-    if on_tpu():
-        return block_sparse_matmul(x, w, xm, wm, interpret=False, **kw)
+def sparse_matmul(x, w, xm=None, wm=None, *, policy=None, **kw):
+    pol = policy if policy is not None else _platform_policy()
+    if pol.use_pallas:
+        return block_sparse_matmul(x, w, xm, wm, interpret=pol.interpret, **kw)
     return ref.block_sparse_matmul_ref(x, w, xm, wm)
 
 
@@ -61,11 +73,11 @@ def attention(q, k, v, *, policy=None, sparsity=None, taus=None, **kw):
     policy and no legacy kwargs the platform default applies (Pallas on TPU).
     """
     if policy is None and sparsity is None and taus is None:
-        policy = KernelPolicy(backend="pallas" if on_tpu() else "ref")
+        policy = _platform_policy()
     pol = resolve_policy(policy, sparsity=sparsity, taus=taus)
     if pol.use_pallas:
         tau = pol.tau("attn_probs") if pol.wants("attn_probs") else 0.0
-        return flash_attention(q, k, v, prune_tau=tau, interpret=not on_tpu(), **kw)
+        return flash_attention(q, k, v, prune_tau=tau, interpret=pol.interpret, **kw)
     return ref.flash_attention_ref(q, k, v, policy=pol, **kw)
 
 
@@ -89,7 +101,7 @@ def ffn_block_sparse(hmid, w_down, policy):
     sk = bool(policy.skip)
     if policy.use_pallas:
         out = block_sparse_matmul(
-            x2, w, xm, None, block=(bm, bk, bn), skip=sk, interpret=not on_tpu()
+            x2, w, xm, None, block=(bm, bk, bn), skip=sk, interpret=policy.interpret
         )
     else:
         out = _ffn_block_sparse_ref(x2, w, xm, (bm, bk, bn), sk)
@@ -124,7 +136,8 @@ def _ffn_block_sparse_ref(x2, w, xm, block, skip):
     return out
 
 
-def wkv6(r, k, v, w, u, **kw):
-    if on_tpu():
-        return wkv6_chunked(r, k, v, w, u, interpret=False, **kw)
+def wkv6(r, k, v, w, u, *, policy=None, **kw):
+    pol = policy if policy is not None else _platform_policy()
+    if pol.use_pallas:
+        return wkv6_chunked(r, k, v, w, u, interpret=pol.interpret, **kw)
     return ref.wkv6_ref(r, k, v, w, u)

@@ -1,0 +1,27 @@
+"""reprolint positive fixture: reads of donated buffers (PR 3's race class)."""
+import jax
+
+
+def _step_impl(state, x):
+    return state + x, x
+
+
+step = jax.jit(_step_impl, donate_argnums=(0,))
+
+
+def read_after_donate(state, x):
+    new_state, y = step(state, x)
+    return state.sum() + y  # DN301: `state` was donated two lines up
+
+
+class Engine:
+    def __init__(self, state):
+        self.state = state
+        self._step = jax.jit(self._tick_impl, donate_argnums=(0,))
+
+    def _tick_impl(self, state, x):
+        return state + x, x
+
+    def tick(self, x):
+        out, y = self._step(self.state, x)  # DN302: self.state never rebound
+        return y

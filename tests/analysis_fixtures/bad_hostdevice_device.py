@@ -1,0 +1,8 @@
+"""reprolint positive fixture: implicit host syncs inside kernel code."""
+# reprolint: module=device
+import numpy as np  # HD202: numpy in a device module
+
+
+def kernel_helper(x):
+    staged = np.asarray(x)  # HD202: implicit device->host transfer
+    return staged.item()  # HD202: sync per element

@@ -1,0 +1,8 @@
+"""reprolint positive fixture: device API leaking into host scheduler code."""
+# reprolint: module=host
+import jax.numpy as jnp  # HD201: host control plane importing jax
+
+
+def schedule(queue):
+    depth = jnp.asarray(len(queue))  # HD201: device array mid-tick
+    return depth

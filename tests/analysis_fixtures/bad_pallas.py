@@ -1,0 +1,21 @@
+"""reprolint positive fixture: every PL4xx Pallas well-formedness hazard."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_kernel(x):
+    m, n = x.shape
+    bm, bn = 8, 16
+    grid = (m // bm, n // bn)  # PL403: // with no divisibility guard
+    return pl.pallas_call(
+        _body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i: (i, 0))],  # PL401: 1 arg, rank-2 grid
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j, 0)),  # PL402: 2-d block, 3 coords
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,  # PL404: ad-hoc boolean instead of KernelPolicy.interpret
+    )(x)

@@ -1,0 +1,46 @@
+"""reprolint positive fixture: every RT1xx retrace hazard (never imported)."""
+import functools
+
+import jax
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("tau",))
+def prune_static(x, tau):  # RT101: tau as a static -> recompile per threshold
+    return x * (x > tau)
+
+
+@jax.jit
+def decode(state, tau):
+    return state * tau
+
+
+def drive(state, raw):
+    out = decode(state, 0.5)  # RT102: tau as a Python float literal
+    out = decode(out, float(raw))  # RT103: host coercion into a traced arg
+    return out
+
+
+def rebuild_each_tick(fns, x):
+    for f in fns:
+        g = jax.jit(f)  # RT104: fresh jit cache per iteration
+        x = g(x)
+    return x
+
+
+class UnregisteredPolicy:  # RT105: pytree protocol without registration
+    def tree_flatten(self):
+        return (), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls()
+
+
+def legacy_call(q, k, v, cfg):
+    from repro.kernels import ops
+
+    # RT106 x3: the pre-KernelPolicy kwargs at a migrated call site
+    return ops.attention(
+        q, k, v, sparsity=cfg, taus={"ffn_act": np.float32(0.1)}, use_pallas=True
+    )

@@ -1,0 +1,30 @@
+"""reprolint negative fixture: the rebind-in-the-same-assignment idiom."""
+import jax
+
+
+def _step_impl(state, x):
+    return state + x, x
+
+
+step = jax.jit(_step_impl, donate_argnums=(0,))
+
+
+def rebind_same_statement(state, x):
+    state, y = step(state, x)
+    return state.sum() + y
+
+
+class Engine:
+    def __init__(self, state):
+        self.state = state
+        self._step = jax.jit(self._tick_impl, donate_argnums=(0,))
+
+    def _tick_impl(self, state, x):
+        return state + x, x
+
+    def tick(self, xs):
+        total = 0
+        for x in xs:  # loop is fine: the donated attr is rebound per iteration
+            self.state, y = self._step(self.state, x)
+            total += y
+        return total

@@ -1,0 +1,10 @@
+"""reprolint negative fixture: a clean host-side scheduler scope."""
+# reprolint: module=host
+from collections import deque
+
+import numpy as np
+
+
+def schedule(queue):
+    pending = deque(queue)
+    return np.int32(len(pending))

@@ -1,0 +1,29 @@
+"""reprolint negative fixture: the sanctioned retrace-safe patterns."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def decode(state, tau):
+    return state * tau
+
+
+def drive(state):
+    # knobs enter as typed numpy scalars (runtime leaves, stable cache key)
+    return decode(state, np.float32(0.5))
+
+
+@jax.tree_util.register_pytree_node_class
+class RegisteredPolicy:
+    def tree_flatten(self):
+        return (), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls()
+
+
+def policy_call(q, k, v, policy):
+    from repro.kernels import ops
+
+    return ops.attention(q, k, v, policy=policy)

@@ -231,6 +231,7 @@ class TestRegressionGateLogic:
 
     def fresh(self, **over):
         result = {
+            "analysis_clean": True,
             "bitwise_identical_rho0": True,
             "outputs_match_baseline": True,
             "speedup": 2.0,
@@ -314,6 +315,16 @@ class TestRegressionGateLogic:
         fresh = self.fresh()
         fresh["sparsity"]["pallas_visits"]["strictly_decreasing"] = False
         assert any("sparsity_visits_decreasing" in f for f in check_parity(fresh))
+
+    def test_analysis_clean_flip_fails(self):
+        """A bench run whose in-process reprolint pass found violations (or
+        stale baseline entries) fails the gate with zero tolerance — the
+        bench gate and the lint-invariants CI lane must agree."""
+        from benchmarks.check_regression import check_parity
+
+        for bad in (False, None):
+            fresh = self.fresh(analysis_clean=bad)
+            assert any("analysis_clean" in f for f in check_parity(fresh)), bad
 
     def test_rho_ratio_hard_floor(self):
         """The rho=0.5 vs rho=0 tokens/s ratio has a HARD floor of 1.0 — a
