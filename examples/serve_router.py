@@ -1,0 +1,171 @@
+"""Multi-replica serving example: the router's whole degradation story
+on a 2-replica fleet.
+
+1. Prefix-affinity routing — a shared system prompt warms both replicas'
+   page caches; the next wave is hashed onto whichever replica already
+   holds the longest registered prefix, so warm requests land on warm
+   pages (affinity hit-rate printed).
+2. Three-tenant burst — "free" floods the router while "pro" (weight 4)
+   and "batch" trickle.  Weighted fair queuing keeps pro ahead of the
+   flood, and the per-tenant token bucket throttles ONLY the flooder
+   (throttling defers requests — nothing is dropped).
+3. The SLO ladder — backlog pressure drives the fleet's rho up the
+   quantized rungs (every retarget announced to both replicas) and the
+   router only starts shedding once the TOP rung is reached: accuracy is
+   traded first, capacity last.  The rho trace and first-shed tick
+   printed at the end prove the ordering.
+
+    PYTHONPATH=src python examples/serve_router.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.dynatran import SparsityConfig
+from repro.models import zoo
+from repro.router import Router, RouterPolicy, render_prometheus
+from repro.serve.engine import ContinuousServeConfig, ContinuousServeEngine
+
+
+def build_fleet(cfg, params, rng):
+    warm_prompt = rng.integers(1, cfg.vocab, size=8).tolist()
+
+    def make():
+        eng = ContinuousServeEngine(
+            cfg, params,
+            ContinuousServeConfig(slots=2, max_len=128, page_size=8, prefill_chunk=8),
+        )
+        # pre-warm the jit OUTSIDE the router: compile time would otherwise
+        # read as a multi-second p99 overrun and spike the SLO ladder (every
+        # rung change flushes the fleet's prefix caches)
+        eng.generate([warm_prompt], max_new_tokens=2)
+        eng.drop_prefix_cache()
+        eng.clear_history()
+        return eng
+
+    return Router(
+        [make(), make()],
+        RouterPolicy(
+            replica_depth_hw=2,   # hold excess in the router, not replica queues
+            queue_cap=8,          # backlog above which a SATURATED ladder sheds
+            tenant_rate=200.0,    # tokens/s per-tenant bucket refill
+            tenant_burst=150.0,   # bucket capacity — the flood drains it fast
+            depth_lo=2, depth_hi=10, rho_ema=0.7,
+            slo_p99_ms=500.0,
+        ),
+        weights={"free": 1.0, "pro": 4.0, "batch": 1.0},
+    )
+
+
+def affinity_wave(router, rng, vocab):
+    system = rng.integers(1, vocab, size=24).tolist()  # 3 shared pages
+    warm = [
+        router.submit(system + rng.integers(1, vocab, size=4).tolist(), max_new_tokens=6)
+        for _ in range(2)
+    ]
+    router.run_until_complete()  # both replicas now hold the system pages
+    wave = [
+        router.submit(system + rng.integers(1, vocab, size=4).tolist(), max_new_tokens=6)
+        for _ in range(4)
+    ]
+    router.run_until_complete()
+    m = router.metrics()
+    print(
+        f"[router] affinity: {len(warm)} warm + {len(wave)} wave requests -> "
+        f"{m['affinity_hits']} hits / {m['affinity_misses']} misses "
+        f"(hit rate {m['affinity_hit_rate']:.2f}) — warm requests land on warm pages"
+    )
+    return system
+
+
+def tenant_burst(router, rng, vocab, system):
+    # "free" floods; "pro" and "batch" trickle.  Interleave the submits so
+    # fair queuing (not submission order) decides who decodes first.
+    t0 = router._tick  # normalize the printed trace to this burst
+    handles = []
+    for i in range(18):
+        handles.append((
+            "free",
+            router.submit(system + rng.integers(1, vocab, size=4).tolist(),
+                          tenant="free", max_new_tokens=8),
+        ))
+        if i % 3 == 0:
+            handles.append((
+                "pro",
+                router.submit(system + rng.integers(1, vocab, size=4).tolist(),
+                              tenant="pro", max_new_tokens=8),
+            ))
+        if i % 4 == 0:
+            handles.append((
+                "batch",
+                router.submit(system + rng.integers(1, vocab, size=4).tolist(),
+                              tenant="batch", max_new_tokens=8),
+            ))
+
+    tick, last = 0, None
+    while router.backlog or router.in_flight:
+        router.step()
+        tick += 1
+        m = router.metrics()
+        key = (m["backlog"], m["rho"], m["sheds"])
+        if key != last:  # print on change, not per tick
+            last = key
+            depth = {k: v for k, v in m["tenant_depth"].items() if k != "default"}
+            print(
+                f"  tick {tick:4d}: backlog {m['backlog']:2d} | rho {m['rho']:.2f} | "
+                f"sheds {m['sheds']:2d} | throttles {m['throttles']:2d} | "
+                f"tenant depth {depth}"
+            )
+        if router.backlog and not router.in_flight:
+            # every queued tenant is bucket-throttled: the fleet is idle
+            # until a bucket refills, so wait instead of spinning
+            time.sleep(0.01)
+
+    m = router.metrics()
+    for name in ("free", "pro", "batch"):
+        t = router.fair.tenants[name]
+        completed = sum(1 for tn, h in handles if tn == name and h.done and not h.shed)
+        shed = sum(1 for tn, h in handles if tn == name and h.shed)
+        print(
+            f"[router] tenant {name:6s}: submitted {t.submitted:2d}, "
+            f"completed {completed:2d}, shed {shed:2d}, "
+            f"throttled {t.throttles:2d} times"
+        )
+    flood = router.fair.tenants["free"].throttles
+    calm = router.fair.tenants["pro"].throttles + router.fair.tenants["batch"].throttles
+    print(f"[router] only the flooder pays: free throttled {flood}x, pro+batch {calm}x")
+    shed_msg = (
+        f"{m['sheds']} sheds, first at tick {m['first_shed_tick'] - t0} — "
+        "rho saturated BEFORE the first rejection"
+        if m["sheds"]
+        else "no sheds — the ladder absorbed the burst (rejection is the LAST resort)"
+    )
+    trace = [(t - t0, rho) for t, rho in m["rho_trace"] if t >= t0]
+    print(f"[router] degradation ladder: rho trace {trace} | {shed_msg}")
+    return m
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_smoke("qwen3-4b"),
+        sparsity=SparsityConfig(mode="dynatran", target_rho=0.0),
+    )
+    params = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    router = build_fleet(cfg, params, rng)
+    system = affinity_wave(router, rng, cfg.vocab)
+    m = tenant_burst(router, rng, cfg.vocab, system)
+
+    print("\n[router] Prometheus endpoint (what --metrics serves):\n")
+    text = render_prometheus(m)
+    head = [ln for ln in text.splitlines() if "replica" not in ln][:18]
+    print("\n".join(head))
+    print(f"  ... plus per-replica families ({text.count(chr(10)) + 1} lines total)")
+
+
+if __name__ == "__main__":
+    main()

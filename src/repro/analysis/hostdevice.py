@@ -5,9 +5,9 @@ page tables, prefix cache, and scheduler host-side — pure Python/numpy, no
 device arrays mid-tick — while kernels are pure device code that must never
 force an implicit sync.  This checker enforces the module-layer contract:
 
-- host scopes (``serve/scheduler.py``, ``core/scheduler.py``, and the
-  ``PageAllocator``/``PrefixCache`` classes in ``models/kvcache.py``) must not
-  touch ``jax``/``jnp``;
+- host scopes (``serve/scheduler.py``, ``core/scheduler.py``, everything
+  under ``repro/router/``, and the ``PageAllocator``/``PrefixCache`` classes
+  in ``models/kvcache.py``) must not touch ``jax``/``jnp``;
 - device scopes (``kernels/*``) must not use numpy, ``.item()``/``.tolist()``,
   or ``jax.device_get`` — each is a hidden device->host sync in the hot path.
 
@@ -21,6 +21,11 @@ import ast
 from repro.analysis.core import Checker, Finding, SourceModule, call_name, last_segment, register
 
 HOST_MODULES = ("repro/serve/scheduler.py", "repro/core/scheduler.py")
+# whole packages that are host-side by construction: the multi-replica
+# router (PR 8) is an admission-control/placement layer — every device
+# step stays inside the replica engines, so jax anywhere under it is a
+# layering bug, not an optimization choice
+HOST_PREFIXES = ("repro/router/",)
 DEVICE_PREFIXES = ("repro/kernels/",)
 # host-side classes living inside otherwise-device-facing modules
 HOST_CLASSES = {"repro/models/kvcache.py": ("PageAllocator", "PrefixCache")}
@@ -33,6 +38,8 @@ def _module_role(mod: SourceModule) -> str | None:
     if mod.role:
         return mod.role
     if any(mod.rel.endswith(m) for m in HOST_MODULES):
+        return "host"
+    if any(p in mod.rel for p in HOST_PREFIXES):
         return "host"
     if any(p in mod.rel for p in DEVICE_PREFIXES):
         return "device"

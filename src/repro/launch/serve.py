@@ -14,6 +14,13 @@ DynaTran runtime accuracy/throughput knob.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
         --continuous --tp 4 --prompts 16 --max-new 32
+
+    # multi-replica serving: N continuous engines behind the router, with
+    # weighted per-tenant fair queuing, SLO-aware rho degradation, and
+    # prefix-affinity placement; --metrics dumps the Prometheus text:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --continuous --replicas 2 --prompts 16 --max-new 32 \
+        --tenant free:1 --tenant pro:4 --slo-p99-ms 500 --metrics
 """
 from __future__ import annotations
 
@@ -86,6 +93,19 @@ def main() -> None:
              "(parity twin); omit for the legacy dense datapath",
     )
     ap.add_argument("--adaptive-rho", action="store_true", help="[continuous] close the rho loop over queue depth")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="[continuous] engine replicas behind the multi-replica router")
+    ap.add_argument("--tenant", action="append", default=None, metavar="NAME[:WEIGHT]",
+                    help="[router] declare a tenant with a fair-share weight (repeatable); "
+                         "prompts round-robin over the declared tenants")
+    ap.add_argument("--tenant-rate", type=float, default=float("inf"),
+                    help="[router] per-tenant token-bucket refill rate (tokens/s; inf = unthrottled)")
+    ap.add_argument("--tenant-burst", type=float, default=float("inf"),
+                    help="[router] per-tenant token-bucket capacity (tokens)")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="[router] p99 latency SLO; overruns climb the rho ladder before the backlog would")
+    ap.add_argument("--metrics", action="store_true",
+                    help="[router] print the Prometheus-style metrics text after the run")
     ap.add_argument("--no-prefix-cache", action="store_true", help="[continuous] disable shared-prefix page caching")
     ap.add_argument("--kv-cache", default=None, choices=["bfloat16", "int8"], help="KV cache dtype override")
     args = ap.parse_args()
@@ -116,25 +136,63 @@ def main() -> None:
     req_inputs = [_synth_inputs(cfg, bundle, rng) for _ in range(args.prompts)]
     t0 = time.perf_counter()
     if args.continuous:
+        scfg = ContinuousServeConfig(
+            slots=min(args.slots, args.prompts),
+            max_len=args.max_len,
+            page_size=args.page_size,
+            prefill_chunk=args.prefill_chunk,
+            prefix_caching=not args.no_prefix_cache,
+            target_rho=args.target_rho,
+            adaptive_rho=args.adaptive_rho,
+            tp=args.tp,
+            use_pallas=args.use_pallas,
+            tile_skip=None if args.tile_skip is None else args.tile_skip == "on",
+        )
         try:
-            engine = ContinuousServeEngine(
-                cfg,
-                params,
-                ContinuousServeConfig(
-                    slots=min(args.slots, args.prompts),
-                    max_len=args.max_len,
-                    page_size=args.page_size,
-                    prefill_chunk=args.prefill_chunk,
-                    prefix_caching=not args.no_prefix_cache,
-                    target_rho=args.target_rho,
-                    adaptive_rho=args.adaptive_rho,
-                    tp=args.tp,
-                    use_pallas=args.use_pallas,
-                    tile_skip=None if args.tile_skip is None else args.tile_skip == "on",
-                ),
-            )
+            engines = [ContinuousServeEngine(cfg, params, scfg) for _ in range(max(1, args.replicas))]
         except NotImplementedError as e:  # e.g. --tp on a slot-dense-only family
             raise SystemExit(f"{args.arch}: {e}")
+        if args.replicas > 1:
+            from repro.router import Router, RouterPolicy, render_prometheus
+
+            weights = {}
+            for spec in args.tenant or []:
+                name, _, w = spec.partition(":")
+                weights[name] = float(w) if w else 1.0
+            router = Router(
+                engines,
+                RouterPolicy(
+                    tenant_rate=args.tenant_rate, tenant_burst=args.tenant_burst,
+                    slo_p99_ms=args.slo_p99_ms,
+                ),
+                weights=weights or None,
+            )
+            tenants = list(weights) or ["default"]
+            handles = [
+                router.submit(p, tenant=tenants[i % len(tenants)], sampling=sampling, inputs=ins)
+                for i, (p, ins) in enumerate(zip(prompts, req_inputs))
+            ]
+            if args.stream:
+                print("[serve] streaming request 0: ", end="", flush=True)
+                for tok in handles[0].tokens():
+                    print(tok, end=" ", flush=True)
+                print()
+            router.run_until_complete()
+            outs = [h.generated for h in handles]
+            dt = time.perf_counter() - t0
+            m = router.metrics()
+            print(
+                f"[serve] router: {m['total_tokens']} tokens over {args.replicas} replicas in {dt:.2f}s "
+                f"-> {m['total_tokens'] / dt:.1f} tok/s | completed {m['completed']}/{m['submitted']} "
+                f"(sheds {m['sheds']}, throttles {m['throttles']}) | rho {m['rho']:.2f} | "
+                f"affinity hit rate {m['affinity_hit_rate']:.2f} | p99 {m['p99_s'] or 0.0:.3f}s"
+            )
+            if args.metrics:
+                print(render_prometheus(m), end="")
+            for i, o in enumerate(outs[: min(4, len(outs))]):
+                print(f"  out[{i}]: {o[:12]}{'...' if len(o) > 12 else ''}")
+            return
+        engine = engines[0]
         if args.tp > 1:
             m0 = engine.metrics()
             print(

@@ -409,6 +409,19 @@ class PrefixCache:
             pages.append(page)
         return pages
 
+    def probe_keys(self, keys: list[bytes]) -> int:
+        """Length of the cached chain for ``keys`` WITHOUT touching the LRU
+        stamps.  The multi-replica router probes every replica's cache per
+        routing decision (prefix affinity); a probe that bumped recency
+        would let routing *queries* distort reclaim order on replicas the
+        request never lands on."""
+        n = 0
+        for key in keys:
+            if key not in self._page:
+                break
+            n += 1
+        return n
+
     def insert(self, tokens: list[int], pages: list[int], keys: list[bytes] | None = None) -> int:
         """Register ``pages`` (a prefix of the owner's full-kind table —
         pages COMPLETELY filled by prefill, registered as each one fills)

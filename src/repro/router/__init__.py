@@ -1,0 +1,23 @@
+"""Multi-replica serving front-end: N engines behind one queue.
+
+Pure host-side package (reprolint HD201 enforces jax-free): admission
+control (per-tenant token buckets + weighted fairness), queue-based load
+leveling, health failover over the lossless evict+replay path,
+prefix-affinity placement, and a rho-first degradation ladder that trades
+DynaTran accuracy for throughput before it ever sheds a request.
+"""
+from repro.router.health import HealthMonitor
+from repro.router.metrics import render_prometheus
+from repro.router.policy import DegradationLadder, FairQueue, RouterPolicy, TokenBucket
+from repro.router.router import ReplicaHandle, Router
+
+__all__ = [
+    "DegradationLadder",
+    "FairQueue",
+    "HealthMonitor",
+    "ReplicaHandle",
+    "Router",
+    "RouterPolicy",
+    "TokenBucket",
+    "render_prometheus",
+]

@@ -1,0 +1,101 @@
+"""Replica health: liveness probes, drain on failure, re-admission.
+
+Host-side only (HD201).  A replica is DEAD when its probe raises or
+returns False; the monitor then recovers every request the replica was
+holding — preferably through the engine's own ``drain()`` (clean handoff),
+falling back to manually resetting the router's in-flight view when the
+engine is too far gone to cooperate — and the router re-queues them at
+the front of its backlog.  Recovery is lossless by construction: the
+generated tokens ride on the ``Request`` and replay through the standard
+evict+replay path on whichever replica re-admits them (replayed tokens
+are fed back, never re-sampled), so a mid-decode failure changes timing,
+never content.
+
+``kill()``/``revive()`` inject failures deterministically for tests and
+demos; a production probe would wrap an RPC heartbeat.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.serve.scheduler import Request
+
+HEALTHY = "healthy"
+DEAD = "dead"
+
+
+def _reset_for_replay(req: Request) -> None:
+    """Mirror of the scheduler's evict-side state reset, for engines that
+    died before they could drain: the request replays from scratch on its
+    next replica (pages on the dead replica are gone with it)."""
+    req.evictions += 1
+    req.ready = False
+    req.prefill_pos = 0
+    req.cache_len = 0
+    req.slot = None
+    req.tables = {}
+    req.ring_hi = 0
+    req.pending_token = None
+
+
+class HealthMonitor:
+    """Tracks one status per replica and recovers the dead ones' work.
+
+    ``probe`` (optional) is called per replica per sweep; raising or
+    returning False marks the replica dead.  Injected kills take effect on
+    the same sweep.  A revived replica re-enters rotation empty — its
+    prefix cache survives, so affinity routing warms it back up.
+    """
+
+    def __init__(self, n: int, probe: Optional[Callable[[int], bool]] = None):
+        self.status = [HEALTHY] * n
+        self._probe = probe
+        self._killed: set[int] = set()
+        self.failovers = 0  # dead-replica recoveries performed
+
+    def kill(self, idx: int) -> None:
+        self._killed.add(idx)
+
+    def revive(self, idx: int) -> None:
+        self._killed.discard(idx)
+        self.status[idx] = HEALTHY
+
+    def healthy(self, idx: int) -> bool:
+        return self.status[idx] == HEALTHY
+
+    def sweep(self, replicas) -> list[Request]:
+        """One health pass over ``replicas`` (the router's handles).
+        Returns every request recovered from replicas that died this sweep,
+        in FIFO order, ready for re-queueing."""
+        recovered: list[Request] = []
+        for idx, handle in enumerate(replicas):
+            alive = idx not in self._killed
+            if alive and self._probe is not None:
+                try:
+                    alive = bool(self._probe(idx))
+                except Exception:
+                    alive = False
+            if alive:
+                continue
+            if self.status[idx] == HEALTHY:  # healthy -> dead transition
+                self.status[idx] = DEAD
+                self.failovers += 1
+                recovered.extend(self.recover(handle))
+        recovered.sort(key=lambda r: r.rid)
+        return recovered
+
+    def recover(self, handle) -> list[Request]:
+        """Pull every in-flight request off a dead replica.  The engine's
+        own ``drain()`` is the clean path (pages freed, replay state reset
+        by the scheduler); when even that raises, the router's in-flight
+        view is the source of truth and each request is reset by hand."""
+        try:
+            out = handle.engine.drain()
+        except Exception:
+            out = [r for r in handle.inflight if not r.done and not r.cancelled]
+            for req in out:
+                _reset_for_replay(req)
+        for req in out:
+            req._engine = None
+        handle.inflight.clear()
+        return [r for r in out if not r.done and not r.cancelled]

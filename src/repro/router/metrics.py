@@ -1,0 +1,92 @@
+"""Prometheus-style text exposition for ``Router.metrics()``.
+
+Host-side only (HD201).  ``render_prometheus`` flattens the router's
+aggregated metrics dict into the text exposition format (one ``# TYPE``
+header per metric family, ``{label="..."}`` for per-tenant and per-replica
+series) so ``launch/serve.py --replicas N`` can print or serve it without
+pulling in a metrics client library.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+_PREFIX = "repro_router"
+
+
+def _fmt(value: Any) -> str:
+    if isinstance(value, bool):
+        return "1" if value else "0"
+    if isinstance(value, float):
+        return repr(value)
+    return str(value)
+
+
+def _line(name: str, value: Any, labels: dict[str, Any] | None = None) -> str:
+    if labels:
+        body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+        return f"{_PREFIX}_{name}{{{body}}} {_fmt(value)}"
+    return f"{_PREFIX}_{name} {_fmt(value)}"
+
+
+def render_prometheus(metrics: dict) -> str:
+    """Render a ``Router.metrics()`` dict as Prometheus text exposition.
+
+    Counters (monotonic) get ``_total`` suffixes; instantaneous values are
+    gauges.  Per-replica engine aggregates surface the monotonic counters
+    the engines now keep (total_tokens / total_requests) plus queue depth
+    and rho, labelled by replica index and health.
+    """
+    out: list[str] = []
+
+    def counter(name: str, value: Any, labels: dict[str, Any] | None = None) -> None:
+        out.append(f"# TYPE {_PREFIX}_{name} counter")
+        out.append(_line(name, value, labels))
+
+    def gauge_family(name: str, rows: list[tuple[Any, dict[str, Any] | None]]) -> None:
+        out.append(f"# TYPE {_PREFIX}_{name} gauge")
+        out.extend(_line(name, v, lb) for v, lb in rows)
+
+    counter("requests_submitted_total", metrics["submitted"])
+    counter("requests_completed_total", metrics["completed"])
+    counter("requests_shed_total", metrics["sheds"])
+    counter("requests_cancelled_total", metrics["cancelled"])
+    counter("throttles_total", metrics["throttles"])
+    counter("affinity_hits_total", metrics["affinity_hits"])
+    counter("affinity_misses_total", metrics["affinity_misses"])
+    counter("failovers_total", metrics["failovers"])
+    counter("tokens_total", metrics["total_tokens"])
+    gauge_family("rho", [(metrics["rho"], None)])
+    gauge_family("backlog", [(metrics["backlog"], None)])
+    gauge_family("in_flight", [(metrics["in_flight"], None)])
+    gauge_family(
+        "tenant_queue_depth",
+        [(d, {"tenant": t}) for t, d in sorted(metrics["tenant_depth"].items())],
+    )
+
+    replicas = metrics.get("replicas", [])
+
+    def counter_family(name: str, rows: list[tuple[Any, dict[str, Any]]]) -> None:
+        out.append(f"# TYPE {_PREFIX}_{name} counter")
+        out.extend(_line(name, v, lb) for v, lb in rows)
+
+    gauge_family(
+        "replica_healthy",
+        [(m["healthy"], {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    gauge_family(
+        "replica_queue_depth",
+        [(m["engine"].get("queue_depth", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    gauge_family(
+        "replica_rho",
+        [(m["engine"].get("rho", 0.0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    counter_family(
+        "replica_tokens_total",
+        [(m["engine"].get("total_tokens", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    counter_family(
+        "replica_requests_total",
+        [(m["engine"].get("total_requests", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    return "\n".join(out) + "\n"

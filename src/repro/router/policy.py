@@ -1,0 +1,241 @@
+"""Router admission policy: per-tenant token buckets, weighted fair
+queuing, and the rho degradation ladder.
+
+Pure host-side Python (HD201: no jax anywhere in ``repro/router/``) so
+every policy decision unit-tests in microseconds against stub engines.
+
+Three pieces:
+
+* ``TokenBucket``      — classic leaky-bucket throttle per tenant.  Cost is
+  charged in TOKENS (prompt + max_new_tokens), not requests, so a tenant
+  cannot dodge its rate by batching huge prompts into few requests.
+* ``FairQueue``        — weighted fair queuing over tenants by virtual
+  time: each dequeue advances the tenant's clock by cost/weight and the
+  scheduler always serves the eligible tenant furthest behind, so a
+  flooding tenant backlogs only itself.
+* ``DegradationLadder``— the fleet-level DynaTran knob.  Wraps the serve
+  stack's ``RhoController`` (queue depth -> target rho, EMA-smoothed) and
+  QUANTIZES its output onto discrete rungs: replicas only see
+  ``set_target_rho`` when the ladder crosses a rung, because every rho
+  retarget invalidates the replicas' prefix caches (pages are a function
+  of the taus) — a continuously-sliding rho would thrash affinity routing
+  to death.  Shedding is only legal at the TOP rung: the router trades
+  accuracy for throughput first and capacity last, which is the paper's
+  accuracy/throughput knob closed over a fleet instead of a queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+from repro.serve.scheduler import Request, RhoController
+
+
+@dataclasses.dataclass
+class RouterPolicy:
+    """Knobs for the router's admission control and degradation ladder."""
+
+    # --- load leveling ---
+    replica_depth_hw: int = 8  # per-replica high-water queue depth; above it
+    # the router holds requests back in its own backlog (queue-based load
+    # leveling: backlog pressure drives the rho ladder, not replica queues)
+    queue_cap: int = 64  # router backlog above which a saturated ladder sheds
+
+    # --- per-tenant throttling ---
+    tenant_rate: float = float("inf")  # tokens/second refill (inf = unthrottled)
+    tenant_burst: float = float("inf")  # bucket capacity in tokens
+
+    # --- degradation ladder ---
+    rho_levels: tuple[float, ...] = (0.0, 0.25, 0.5, 0.7)  # quantized rungs
+    depth_lo: int = 4  # backlog where the ladder starts climbing
+    depth_hi: int = 32  # backlog where the ladder tops out
+    rho_ema: float = 0.5
+    slo_p99_ms: Optional[float] = None  # p99 latency target; overruns boost
+    # ladder pressure so the fleet degrades BEFORE the backlog alone would
+
+
+class TokenBucket:
+    """Leaky-bucket throttle: ``take(cost)`` succeeds while the bucket
+    holds ``cost`` tokens; the bucket refills at ``rate`` tokens/second up
+    to ``burst``.  ``clock`` is injectable so tests advance time
+    deterministically."""
+
+    def __init__(self, rate: float, burst: float, clock: Callable[[], float] = time.monotonic):
+        self.rate = rate
+        self.burst = burst
+        self._clock = clock
+        self._level = burst
+        self._stamp = clock()
+
+    def _refill(self) -> None:
+        now = self._clock()
+        self._level = min(self.burst, self._level + (now - self._stamp) * self.rate)
+        self._stamp = now
+
+    def peek(self, cost: float) -> bool:
+        self._refill()
+        return self._level >= cost
+
+    def take(self, cost: float) -> bool:
+        self._refill()
+        if self._level < cost:
+            return False
+        self._level -= cost
+        return True
+
+
+@dataclasses.dataclass
+class TenantState:
+    name: str
+    weight: float
+    bucket: TokenBucket
+    queue: deque = dataclasses.field(default_factory=deque)
+    vt: float = 0.0  # virtual time: cost served / weight
+    throttles: int = 0  # requests ever deferred by the bucket
+    submitted: int = 0
+
+
+def request_cost(req: Request) -> int:
+    """Admission cost in tokens: prompt plus the decode budget.  Charged at
+    dispatch (not submit) so a throttled request re-checks the refilled
+    bucket every router step instead of being rejected outright."""
+    return len(req.prompt) + req.max_new_tokens
+
+
+class FairQueue:
+    """Weighted fair queuing over per-tenant FIFO queues.
+
+    ``push`` files a request under its tenant; ``pop`` returns the next
+    request from the eligible tenant (non-empty queue AND token bucket
+    holds its head's cost) with the smallest virtual time, charging the
+    bucket and advancing the tenant's clock by cost/weight.  A tenant
+    re-joining after idle is advanced to the fleet's current minimum vt so
+    it cannot burn banked virtual time to starve the others.
+    """
+
+    def __init__(
+        self,
+        rate: float,
+        burst: float,
+        clock: Callable[[], float] = time.monotonic,
+        weights: Optional[dict[str, float]] = None,
+    ):
+        self._rate = rate
+        self._burst = burst
+        self._clock = clock
+        self._weights = dict(weights or {})
+        self.tenants: dict[str, TenantState] = {}
+
+    def _tenant(self, name: str) -> TenantState:
+        t = self.tenants.get(name)
+        if t is None:
+            t = TenantState(
+                name=name,
+                weight=self._weights.get(name, 1.0),
+                bucket=TokenBucket(self._rate, self._burst, self._clock),
+            )
+            self.tenants[name] = t
+        return t
+
+    def push(self, req: Request) -> None:
+        t = self._tenant(req.tenant or "default")
+        if not t.queue:  # (re-)joining: no credit for time spent idle
+            live = [s.vt for s in self.tenants.values() if s.queue]
+            t.vt = max(t.vt, min(live) if live else 0.0)
+        t.queue.append(req)
+        t.submitted += 1
+
+    def pop(self) -> Optional[Request]:
+        """Next request by weighted fairness, or None when every non-empty
+        tenant is bucket-throttled (throttling defers, it never drops)."""
+        best: Optional[TenantState] = None
+        for t in self.tenants.values():
+            while t.queue and t.queue[0].cancelled:
+                t.queue.popleft()
+            if not t.queue:
+                continue
+            if not t.bucket.peek(request_cost(t.queue[0])):
+                if t.queue[0].shed is False and not getattr(t.queue[0], "_throttled", False):
+                    t.queue[0]._throttled = True  # count once per request
+                    t.throttles += 1
+                continue
+            if best is None or t.vt < best.vt:
+                best = t
+        if best is None:
+            return None
+        req = best.queue.popleft()
+        cost = request_cost(req)
+        best.bucket.take(cost)
+        best.vt += cost / best.weight
+        return req
+
+    @property
+    def depth(self) -> int:
+        return sum(len(t.queue) for t in self.tenants.values())
+
+    def depths(self) -> dict[str, int]:
+        return {name: len(t.queue) for name, t in self.tenants.items()}
+
+    def drain(self) -> list[Request]:
+        out: list[Request] = []
+        for t in self.tenants.values():
+            out.extend(r for r in t.queue if not r.cancelled)
+            t.queue.clear()
+        out.sort(key=lambda r: r.rid)  # restore global FIFO across tenants
+        return out
+
+
+class DegradationLadder:
+    """Quantized fleet-rho controller with shed gating.
+
+    ``update(backlog, p99_s)`` feeds the serve stack's ``RhoController``
+    with the router backlog — boosted when the observed p99 latency
+    overruns the SLO target — and snaps the smoothed rho DOWN onto the
+    configured rungs (never announcing a rho the controller has not
+    effectively reached, so a transient spike cannot flash-invalidate the
+    fleet's prefix caches).  Because the EMA only converges geometrically,
+    a rung counts as reached within 5% of the ladder's span — without the
+    band the top rung would be unreachable and the router could never
+    legally shed.  Returns the rung when it CHANGED, else None.
+
+    ``saturated`` is True once the ladder sits on its top rung — the only
+    state in which the router may shed.  Ordering is therefore structural:
+    rho must have climbed the whole ladder before the first rejection.
+    """
+
+    def __init__(self, policy: RouterPolicy):
+        levels = sorted(set(policy.rho_levels))
+        if not levels:
+            raise ValueError("rho_levels must name at least one rung")
+        self.levels = levels
+        self.slo_p99_s = policy.slo_p99_ms / 1e3 if policy.slo_p99_ms is not None else None
+        self.ctrl = RhoController(
+            rho_min=levels[0], rho_max=levels[-1],
+            depth_lo=policy.depth_lo, depth_hi=policy.depth_hi,
+            ema=policy.rho_ema,
+        )
+        self.ctrl.rho = levels[0]
+        self.rung = levels[0]
+        self._snap_tol = 0.05 * (levels[-1] - levels[0]) + 1e-9
+
+    def update(self, backlog: int, p99_s: Optional[float] = None) -> Optional[float]:
+        pressure = backlog
+        if self.slo_p99_s is not None and p99_s is not None and p99_s > self.slo_p99_s:
+            # SLO-aware boost: overrun ratio scales the pressure so latency
+            # misses degrade the fleet even while the backlog looks shallow
+            pressure = int(pressure * (p99_s / self.slo_p99_s)) + self.ctrl.depth_lo
+        rho = self.ctrl.update(pressure)
+        rung = self.levels[0]
+        for lv in self.levels:  # snap DOWN: announce only (near-)reached rungs
+            if rho >= lv - self._snap_tol:
+                rung = lv
+        if rung != self.rung:
+            self.rung = rung
+            return rung
+        return None
+
+    @property
+    def saturated(self) -> bool:
+        return self.rung >= self.levels[-1] - 1e-9  # sitting on the top rung

@@ -1,0 +1,370 @@
+"""Multi-replica serving front-end over N ``ContinuousServeEngine``s.
+
+Host-side only (HD201: no jax in ``repro/router/``) — the router is an
+admission-control and placement layer; every device step stays inside the
+replica engines.  The replicas are engine-AGNOSTIC duck types: anything
+with ``adopt / drain / cancel / step / load / metrics`` (and optionally
+``prefix_cache`` + ``set_target_rho``) serves, which is exactly the PR 3
+lifecycle API — and lets the policy tests run against stub engines.
+
+Placement and admission per ``step()``:
+
+1. **Health sweep** — replicas whose probe fails (or that were ``kill``ed)
+   drain; their in-flight requests re-enter the router backlog at the
+   front and replay losslessly on the next replica (evict+replay: tokens
+   ride on the ``Request`` and are fed back, never re-sampled).
+2. **Degradation ladder** — the backlog (SLO-boosted when p99 overruns the
+   target) drives a quantized fleet rho through ``set_target_rho``:
+   accuracy is traded for throughput BEFORE any request is rejected, and
+   shedding is structurally impossible until the ladder saturates.
+3. **Dispatch** — queue-based load leveling: requests leave the weighted
+   fair queue only while some healthy replica sits under its high-water
+   depth.  Placement prefers the replica whose prefix cache already holds
+   the longest chain of the request's prompt pages (read-only
+   ``probe_keys`` — routing queries never touch LRU recency), falling back
+   to least-loaded.
+4. **Replica steps** — every healthy replica with work takes one engine
+   tick; finished requests surface through the router's counters.
+
+The router itself speaks the engine handle protocol (``step`` / ``cancel``),
+so a dispatched ``Request`` has ``_engine = router`` and its streaming
+iterator (``req.tokens()``) drives the whole fleet loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+from repro.router.health import HealthMonitor
+from repro.router.policy import DegradationLadder, FairQueue, RouterPolicy
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import Request
+
+
+class ReplicaHandle:
+    """The router's view of one replica: the engine plus the set of
+    requests the router has placed there (the failover source of truth
+    when the engine dies too hard to drain itself)."""
+
+    def __init__(self, idx: int, engine: Any):
+        self.idx = idx
+        self.engine = engine
+        self.inflight: list[Request] = []
+
+    @property
+    def load(self) -> int:
+        return self.engine.load
+
+    def probe_affinity(self, keys: list[bytes]) -> int:
+        """Pages of ``keys`` this replica's prefix cache already holds —
+        via the read-only probe, so the query cannot distort the cache's
+        reclaim order on replicas the request never lands on."""
+        cache = getattr(self.engine, "prefix_cache", None)
+        if cache is None or not keys:
+            return 0
+        return cache.probe_keys(keys)
+
+
+class Router:
+    """N replicas behind one queue: load leveling, per-tenant fairness,
+    health failover, rho-first degradation, prefix-affinity placement."""
+
+    def __init__(
+        self,
+        engines: list[Any],
+        policy: Optional[RouterPolicy] = None,
+        clock: Callable[[], float] = time.monotonic,
+        weights: Optional[dict[str, float]] = None,
+        probe: Optional[Callable[[int], bool]] = None,
+    ):
+        if not engines:
+            raise ValueError("router needs at least one replica engine")
+        self.policy = policy or RouterPolicy()
+        self.replicas = [ReplicaHandle(i, e) for i, e in enumerate(engines)]
+        self.fair = FairQueue(
+            self.policy.tenant_rate, self.policy.tenant_burst, clock, weights
+        )
+        self.health = HealthMonitor(len(engines), probe)
+        self.ladder = DegradationLadder(self.policy)
+        self._ready: deque[Request] = deque()  # recovered work, dispatch-first
+        self._rid = 0
+        self._tick = 0
+        # counters (monotonic; surfaced by metrics())
+        self.submitted = 0
+        self.completed = 0
+        self.sheds = 0
+        self.cancelled = 0
+        self.dispatches = 0
+        self.affinity_hits = 0
+        self.affinity_misses = 0
+        self._latencies: deque[float] = deque(maxlen=256)
+        # proof obligations for the SLO ladder: every rung change is traced
+        # with its tick, and the first shed's tick is pinned — saturation
+        # strictly precedes it by construction, and the gate asserts it
+        self.rho_trace: list[tuple[int, float]] = [(0, self.ladder.rung)]
+        self.first_shed_tick: Optional[int] = None
+        self._can_degrade = self._align_fleet_rho()
+
+    # --- construction ------------------------------------------------------
+    def _align_fleet_rho(self) -> bool:
+        """Set every replica to the ladder's base rung.  Replicas without a
+        rho knob (sparsity off, or an engine closing its own adaptive loop)
+        collapse the ladder to one rung: the router then sheds on backlog
+        alone — there is simply no accuracy left to trade first."""
+        try:
+            for h in self.replicas:
+                h.engine.set_target_rho(self.ladder.rung)
+            return True
+        except (AttributeError, NotImplementedError, ValueError):
+            self.ladder = DegradationLadder(
+                RouterPolicy(
+                    rho_levels=(self.ladder.levels[0],),
+                    depth_lo=self.policy.depth_lo,
+                    depth_hi=self.policy.depth_hi,
+                    rho_ema=self.policy.rho_ema,
+                    slo_p99_ms=self.policy.slo_p99_ms,
+                )
+            )
+            return False
+
+    # --- ingress ------------------------------------------------------------
+    @property
+    def backlog(self) -> int:
+        """Requests the router holds (fair queues + recovered work) — the
+        pressure signal for the degradation ladder."""
+        return self.fair.depth + len(self._ready)
+
+    def submit(
+        self,
+        prompt: list[int],
+        tenant: str = "default",
+        max_new_tokens: Optional[int] = None,
+        eos_id: Optional[int] = None,
+        slo_s: Optional[float] = None,
+        sampling: Optional[SamplingParams] = None,
+        inputs: Optional[dict] = None,
+    ) -> Request:
+        """Queue one request under ``tenant`` and return its handle (same
+        streaming/cancel surface as an engine-direct submit).  A shed
+        request comes back already finished with ``req.shed`` set — callers
+        observe rejection without an exception path.  Shedding requires the
+        ladder SATURATED and the backlog above ``queue_cap``: until rho has
+        climbed the whole ladder, overload only ever queues."""
+        assert prompt, "empty prompt"
+        sp = sampling if sampling is not None else SamplingParams()
+        if max_new_tokens is not None:
+            sp = dataclasses.replace(sp, max_new_tokens=max_new_tokens)
+        if eos_id is not None and eos_id >= 0:
+            sp = sp.with_stop(eos_id)
+        req = Request(
+            rid=self._rid, prompt=list(prompt), slo_s=slo_s,
+            submit_time=time.perf_counter(), params=sp,
+            inputs=dict(inputs or {}), tenant=tenant, _engine=self,
+        )
+        self._rid += 1
+        self.submitted += 1
+        if self.ladder.saturated and self.backlog >= self.policy.queue_cap:
+            req.shed = True
+            req.finish_time = time.perf_counter()
+            self.sheds += 1
+            if self.first_shed_tick is None:
+                self.first_shed_tick = self._tick
+            return req
+        self.fair.push(req)
+        return req
+
+    def cancel(self, req: Request) -> None:
+        """Cancel wherever the request lives: on a replica (engine cancel
+        frees its pages), or still router-queued (purged eagerly so the
+        backlog signal never counts dead work)."""
+        if req.done:
+            return
+        for h in self.replicas:
+            if req in h.inflight:
+                h.engine.cancel(req)
+                h.inflight.remove(req)
+                self.cancelled += 1
+                return
+        req.cancelled = True
+        req.finish_time = time.perf_counter()
+        self.cancelled += 1
+        try:
+            self._ready.remove(req)
+        except ValueError:
+            pass
+        for t in self.fair.tenants.values():
+            try:
+                t.queue.remove(req)
+            except ValueError:
+                pass
+
+    # --- the fleet loop -----------------------------------------------------
+    def step(self) -> list[Request]:
+        """One router tick: health sweep, ladder update, dispatch, then one
+        engine tick per healthy replica with work.  Returns every request
+        that finished this tick, fleet-wide."""
+        self._tick += 1
+        for req in reversed(self.health.sweep(self.replicas)):
+            req._engine = self  # the handle keeps streaming/cancelling through us
+            self._ready.appendleft(req)  # failover work restarts first
+        rung = self.ladder.update(self.backlog, self._p99())
+        if rung is not None:
+            self.rho_trace.append((self._tick, rung))
+            if self._can_degrade:
+                for h in self.replicas:
+                    if self.health.healthy(h.idx):
+                        h.engine.set_target_rho(rung)
+        self._dispatch()
+        finished: list[Request] = []
+        for h in self.replicas:
+            if not self.health.healthy(h.idx) or not h.inflight:
+                continue
+            finished.extend(h.engine.step())
+            if any(r.done for r in h.inflight):
+                h.inflight = [r for r in h.inflight if not r.done]
+        for req in finished:
+            self.completed += 1
+            lat = req.latency()
+            if lat is not None:
+                self._latencies.append(lat)
+        return finished
+
+    def run_until_complete(self, max_steps: int = 1_000_000) -> list[Request]:
+        finished: list[Request] = []
+        for _ in range(max_steps):
+            if self.backlog == 0 and not any(h.inflight for h in self.replicas):
+                return finished
+            finished += self.step()
+        raise RuntimeError("router run_until_complete: step budget exhausted")
+
+    async def serve(self) -> None:
+        """Async front-end: cooperative fleet loop that yields to the event
+        loop between ticks, so concurrent coroutines can submit/stream/
+        cancel while the fleet makes progress."""
+        import asyncio
+
+        while self.backlog or any(h.inflight for h in self.replicas):
+            self.step()
+            await asyncio.sleep(0)
+
+    def generate(
+        self,
+        prompts: list[list[int]],
+        max_new_tokens: Optional[int] = None,
+        eos_id: int = -1,
+        tenants: Optional[list[str]] = None,
+        sampling: Optional[SamplingParams] = None,
+    ) -> list[list[int]]:
+        """Engine-compatible batch API: submit all prompts (optionally per-
+        tenant), run the fleet to completion, return generated tokens in
+        submission order (empty list for a shed request)."""
+        if max_new_tokens is None and sampling is None:
+            max_new_tokens = 32
+        reqs = [
+            self.submit(
+                p, tenant=tenants[i] if tenants else "default",
+                max_new_tokens=max_new_tokens, eos_id=eos_id, sampling=sampling,
+            )
+            for i, p in enumerate(prompts)
+        ]
+        self.run_until_complete()
+        return [r.generated for r in reqs]
+
+    # --- placement ----------------------------------------------------------
+    def _dispatch(self) -> None:
+        """Queue-based load leveling: hand out work only while a healthy
+        replica sits under the high-water depth; the rest of the backlog
+        stays here, where it pressures the ladder instead of burying one
+        replica's queue."""
+        while True:
+            avail = [
+                h for h in self.replicas
+                if self.health.healthy(h.idx) and h.load < self.policy.replica_depth_hw
+            ]
+            if not avail:
+                return
+            if self._ready:
+                req = self._ready.popleft()
+                if req.cancelled or req.done:
+                    continue
+            else:
+                req = self.fair.pop()
+                if req is None:
+                    return
+            self._place(req, avail)
+
+    def _prefix_keys(self, req: Request) -> list[bytes]:
+        """Page-chain keys for affinity probing — pure in (tokens,
+        page_size), so one replica's cache can key every replica's probe."""
+        for h in self.replicas:
+            cache = getattr(h.engine, "prefix_cache", None)
+            if cache is not None:
+                return cache.chain_keys(req.prompt)
+        return []
+
+    def _place(self, req: Request, avail: list[ReplicaHandle]) -> None:
+        keys = self._prefix_keys(req)
+        target: Optional[ReplicaHandle] = None
+        best = 0
+        for h in avail:
+            n = h.probe_affinity(keys)
+            if n > best:
+                target, best = h, n
+        if target is not None:
+            self.affinity_hits += 1
+        else:
+            self.affinity_misses += 1
+            target = min(avail, key=lambda h: h.load)
+        target.engine.adopt(req)
+        req._engine = self  # the handle's tokens()/cancel() drive the FLEET loop
+        target.inflight.append(req)
+        self.dispatches += 1
+
+    # --- observability --------------------------------------------------------
+    def _p99(self) -> Optional[float]:
+        if not self._latencies:
+            return None
+        xs = sorted(self._latencies)
+        return xs[int(0.99 * (len(xs) - 1))]
+
+    @property
+    def in_flight(self) -> int:
+        return sum(len(h.inflight) for h in self.replicas)
+
+    def metrics(self) -> dict:
+        """Fleet-wide aggregation: per-replica ``engine.metrics()`` (each
+        memoized per engine step) plus the router's own counters.  Render
+        with ``repro.router.metrics.render_prometheus``."""
+        reps = [
+            {
+                "healthy": self.health.healthy(h.idx),
+                "inflight": len(h.inflight),
+                "engine": h.engine.metrics(),
+            }
+            for h in self.replicas
+        ]
+        probes = self.affinity_hits + self.affinity_misses
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "sheds": self.sheds,
+            "cancelled": self.cancelled,
+            "throttles": sum(t.throttles for t in self.fair.tenants.values()),
+            "affinity_hits": self.affinity_hits,
+            "affinity_misses": self.affinity_misses,
+            "affinity_hit_rate": self.affinity_hits / probes if probes else 0.0,
+            "failovers": self.health.failovers,
+            "dispatches": self.dispatches,
+            "rho": self.ladder.rung,
+            "rho_trace": list(self.rho_trace),
+            "first_shed_tick": self.first_shed_tick,
+            "backlog": self.backlog,
+            "in_flight": self.in_flight,
+            "tenant_depth": self.fair.depths(),
+            "p99_s": self._p99(),
+            "total_tokens": sum(r["engine"].get("total_tokens", 0) for r in reps),
+            "total_requests": sum(r["engine"].get("total_requests", 0) for r in reps),
+            "replicas": reps,
+        }

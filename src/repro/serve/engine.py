@@ -386,6 +386,19 @@ class ContinuousServeEngine:
         self._tick = 0
         self._peak_pages_in_use = 0
         self.requests: list[Request] = []
+        # monotonic counters (never reset by clear_history): the router
+        # aggregates these across replicas, so they must survive the
+        # metrics-window trims that keep the request history bounded
+        self._total_tokens = 0
+        self._total_requests = 0
+        self._total_finished = 0
+        # rho epoch: bumped by set_target_rho so prefix-cache registration
+        # can be gated to pages filled entirely at the current taus
+        self._rho_epoch = 0
+        # metrics() memoization: any state change bumps the version, and the
+        # summarize() aggregation only reruns when the version moved
+        self._metrics_ver = 0
+        self._metrics_cache: Optional[tuple[int, dict]] = None
 
     # --- jitted bodies ----------------------------------------------------
     def _decode_impl(
@@ -522,9 +535,70 @@ class ContinuousServeEngine:
             _engine=self,
         )
         self._rid += 1
+        self._total_requests += 1
+        self._metrics_ver += 1
         self.sched.submit(req)
         self.requests.append(req)
         return req
+
+    def adopt(self, req: Request) -> Request:
+        """Attach a request drained from another replica (router handoff):
+        its generated tokens ride along and replay through the standard
+        evict+replay path, so resuming here is lossless — greedy and keyed
+        sampled streams alike continue bit-exactly.  The request keeps its
+        router-assigned rid; the local rid counter jumps past it so a later
+        ``submit`` can never mint a colliding page-allocator owner id."""
+        req._engine = self
+        self._rid = max(self._rid, req.rid + 1)
+        self._total_requests += 1
+        self._metrics_ver += 1
+        self.sched.submit(req)
+        self.requests.append(req)
+        return req
+
+    def drain(self) -> list[Request]:
+        """Release every in-flight and queued request for handoff (replica
+        drain): pages/slots free immediately, replay state resets, and the
+        detached requests return in FIFO order for another replica to
+        ``adopt``.  Finished requests stay in the local metrics window."""
+        out = self.sched.drain()
+        for req in out:
+            req._engine = None
+        alive = set(map(id, out))
+        self.requests = [r for r in self.requests if id(r) not in alive]
+        self._metrics_ver += 1
+        return out
+
+    @property
+    def load(self) -> int:
+        """Queue-depth estimate for router load leveling: requests queued
+        plus requests admitted (decoding or mid-prefill)."""
+        return self.sched.queue_depth + self.sched.num_active
+
+    def set_target_rho(self, rho: float) -> None:
+        """Fleet-level degradation hook (the router's rho ladder): retarget
+        the DynaTran knob for every subsequent tick.  Taus are runtime
+        pytree leaves, so this never recompiles.  A retarget bumps the rho
+        EPOCH and drops the prefix cache: pages filled at the old taus must
+        not be linked by arrivals decoding at the new ones, and requests
+        admitted before the bump stop registering their (mixed-rho) pages
+        — live sharing stays refcount-correct, consistency stays exact."""
+        if not self._dynatran:
+            raise ValueError(
+                f"set_target_rho: sparsity mode {self.cfg.sparsity.mode!r} has no rho knob"
+            )
+        if self.rho_ctrl is not None:
+            raise ValueError(
+                "set_target_rho: engine closes its own rho loop (adaptive_rho=True); "
+                "fleet-level control needs adaptive_rho=False replicas"
+            )
+        rho = float(rho)
+        if rho != self._fixed_rho:
+            self._rho_epoch += 1
+            if self.prefix_cache is not None:
+                self.prefix_cache.drop_all()
+        self._fixed_rho = rho
+        self._metrics_ver += 1
 
     def cancel(self, req: Request) -> None:
         """Cancel ``req`` wherever it is in its lifecycle — queued, mid-
@@ -536,14 +610,18 @@ class ContinuousServeEngine:
         req.cancelled = True
         self.sched.cancel(req)
         req.finish_time = time.perf_counter()
+        self._metrics_ver += 1
 
     def step(self) -> list[Request]:
         """One engine tick: admissions, then one batched prefill chunk (all
         admitted prompts at once) OR one decode batch (alternating when
         both are pending).  Returns newly finished requests."""
         self._tick += 1
+        self._metrics_ver += 1
         self._drain_copies()  # forks queued since the last jitted call
         admitted = self.sched.admit_ready()
+        for req in admitted:
+            req.rho_epoch = self._rho_epoch
         policy = self._current_policy()
         if self.bundle.admit_compute:
             # admission-computed slot state (whisper cross-KV): one encoder
@@ -601,7 +679,19 @@ class ContinuousServeEngine:
             self.prefix_cache.drop_all()
 
     def metrics(self) -> dict:
+        """Aggregate metrics, memoized per engine state change: repeated
+        calls between steps (a router polls every replica per routing
+        decision) reuse the cached dict instead of re-running the
+        ``summarize`` aggregation over the whole request history."""
+        if self._metrics_cache is not None and self._metrics_cache[0] == self._metrics_ver:
+            return self._metrics_cache[1]
         out = summarize(self.requests)
+        # monotonic counters: never reset by clear_history(), so fleet-level
+        # aggregation across metrics-window trims stays exact
+        out["total_tokens"] = self._total_tokens
+        out["total_requests"] = self._total_requests
+        out["total_finished"] = self._total_finished
+        out["sheds"] = 0  # engines never shed; the router's admission does
         out["rho"] = self.current_rho
         out["free_pages"] = {k: a.free_pages for k, a in self.allocators.items()}
         out["pages_in_use"] = {k: a.num_pages - 1 - a.free_pages for k, a in self.allocators.items()}
@@ -621,13 +711,16 @@ class ContinuousServeEngine:
             out["kv_occupancy_live"] = float(sum(a.sum() for a in flat)) / max(total, 1)
         else:
             out["kv_occupancy_live"] = None
+        self._metrics_cache = (self._metrics_ver, out)
         return out
 
     def clear_history(self) -> None:
         """Drop finished requests from the metrics window.  Long-lived
         engines should call this after consuming ``metrics()`` — the
-        request history grows without bound otherwise."""
+        request history grows without bound otherwise.  The monotonic
+        ``total_*`` counters survive the trim."""
         self.requests = [r for r in self.requests if not r.done]
+        self._metrics_ver += 1
 
     # --- internals --------------------------------------------------------
     def _drain_copies(self) -> None:
@@ -652,6 +745,7 @@ class ContinuousServeEngine:
 
     def _finish(self, req: Request) -> None:
         req.finish_time = time.perf_counter()
+        self._total_finished += 1
         self.sched.finish(req)
 
     def _tables_for(self, reqs: list[Request]) -> dict[str, jnp.ndarray]:
@@ -673,9 +767,13 @@ class ContinuousServeEngine:
         Shared-prefix rows start at their first uncached position."""
         # incremental sharing (vLLM-style): link pages peers registered
         # since admission — a same-tick burst of identical prompts dedupes
-        # here, mid-wave, instead of prefilling every copy to completion
+        # here, mid-wave, instead of prefilling every copy to completion.
+        # Requests admitted before a ``set_target_rho`` retarget sit in an
+        # older rho EPOCH: their pages mix taus, so they neither link nor
+        # register cache entries (consistency over reuse).
         for req in reqs:
-            self.sched.refresh_prefix(req)
+            if req.rho_epoch == self._rho_epoch:
+                self.sched.refresh_prefix(req)
         reqs = [r for r in reqs if not r.ready]  # fully-cached replay: straight to decode
         if not reqs:
             return []
@@ -707,7 +805,8 @@ class ContinuousServeEngine:
             took = int(nv[req.slot])
             req.prefill_pos += took
             req.cache_len = req.prefill_pos
-            self.sched.register_prefix(req)  # pages -> cache as each fills
+            if req.rho_epoch == self._rho_epoch:
+                self.sched.register_prefix(req)  # pages -> cache as each fills
             if req.prefill_pos < len(req.replay):
                 continue
             req.ready = True
@@ -716,6 +815,7 @@ class ContinuousServeEngine:
                 continue
             tok = int(next_tok[req.slot])
             req.generated.append(tok)
+            self._total_tokens += 1
             req.pending_token = tok
             req.first_token_time = time.perf_counter()
             if len(req.generated) >= req.max_new_tokens or tok in req.stop_ids:
@@ -758,6 +858,7 @@ class ContinuousServeEngine:
                 tok = int(win_tok[w, req.slot])
                 req.cache_len += 1
                 req.generated.append(tok)
+                self._total_tokens += 1
                 req.pending_token = tok
                 if len(req.generated) >= req.max_new_tokens or tok in req.stop_ids:
                     self._finish(req)

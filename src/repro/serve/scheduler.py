@@ -64,7 +64,13 @@ class Request:
     pending_token: Optional[int] = None  # next token to feed the decode step
     evictions: int = 0
     cancelled: bool = False
+    shed: bool = False  # rejected by a router's admission control (never decoded)
+    tenant: Optional[str] = None  # router tenant label (None when engine-direct)
     shared_tokens: int = 0  # prefix-cache tokens linked at the LAST admission
+    # engine rho epoch at the LAST admission: prefix-cache registration is
+    # gated on it so pages filled before a fleet-level ``set_target_rho``
+    # retarget never enter the cache alongside pages filled after it
+    rho_epoch: int = 0
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     # page-table state, owned by the scheduler: kind -> page list.  "full"
@@ -523,6 +529,29 @@ class ContinuousScheduler:
         req.prefill_pos = 0
         req.cache_len = 0
         self.queue.appendleft(req)
+
+    def drain(self, *, keep_queue: bool = False) -> list[Request]:
+        """Release EVERY request for replay elsewhere (replica drain — the
+        router's handoff hook): active requests are evicted in admission
+        order (pages dropped, replay state reset exactly as :meth:`evict`
+        does) and the queue is emptied behind them, so the returned list
+        preserves FIFO order.  Generated tokens ride on the ``Request`` and
+        replay through the standard evict+replay path on whichever engine
+        re-admits them, so the handoff is lossless.  ``keep_queue=True``
+        drains only the admitted requests (partial drain)."""
+        out: list[Request] = []
+        for req in sorted(self.active.values(), key=lambda r: r.admit_stamp):
+            self._drop_pages(req)
+            self._release_slot(req)
+            req.evictions += 1
+            req.ready = False
+            req.prefill_pos = 0
+            req.cache_len = 0
+            out.append(req)
+        if not keep_queue:
+            out.extend(r for r in self.queue if not r.cancelled)
+            self.queue.clear()
+        return out
 
     def finish(self, req: Request) -> None:
         self._drop_pages(req)

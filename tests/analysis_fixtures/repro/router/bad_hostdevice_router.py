@@ -1,0 +1,10 @@
+"""reprolint positive fixture: jax leaking into the router package.
+
+No pragma on purpose — the test copies this file under a ``repro/router/``
+directory so the PATH-based host role (``HOST_PREFIXES``) is what flags it.
+"""
+import jax  # HD201: router is host-side admission control, never device code
+
+
+def pick_replica(loads):
+    return int(jax.numpy.argmin(jax.numpy.asarray(loads)))  # HD201: jax mid-tick

@@ -1,0 +1,14 @@
+"""reprolint negative fixture: a clean host-side router scope.
+
+No pragma on purpose — the test copies this file under a ``repro/router/``
+directory; pure-Python placement logic must pass the path-based HD201 role.
+"""
+from collections import deque
+
+
+def pick_replica(loads):
+    return min(range(len(loads)), key=loads.__getitem__)
+
+
+def backlog(queues):
+    return sum(len(deque(q)) for q in queues)

@@ -28,6 +28,9 @@ class TestFixtures:
             ("bad_retrace.py", {"RT101", "RT102", "RT103", "RT104", "RT105", "RT106"}),
             ("bad_hostdevice_host.py", {"HD201"}),
             ("bad_hostdevice_device.py", {"HD202"}),
+            # pragma-free on purpose: the repro/router/ path segment alone
+            # must pin the host role (HOST_PREFIXES)
+            ("repro/router/bad_hostdevice_router.py", {"HD201"}),
             ("bad_donation.py", {"DN301", "DN302"}),
             ("bad_pallas.py", {"PL401", "PL402", "PL403", "PL404"}),
         ],
@@ -37,10 +40,31 @@ class TestFixtures:
 
     @pytest.mark.parametrize(
         "name",
-        ["good_retrace.py", "good_hostdevice.py", "good_donation.py", "good_pallas.py"],
+        [
+            "good_retrace.py",
+            "good_hostdevice.py",
+            "repro/router/good_hostdevice_router.py",
+            "good_donation.py",
+            "good_pallas.py",
+        ],
     )
     def test_negative_fixture_is_clean(self, name):
         assert run_checks(paths=[FIXTURES / name]) == []
+
+    def test_router_package_resolves_to_host_role(self):
+        # the shipped router modules themselves, not just the fixtures: every
+        # file under src/repro/router/ is host-scoped by path, no pragma needed
+        from repro.analysis.core import SourceModule
+        from repro.analysis.hostdevice import _module_role
+
+        import repro.router
+
+        pkg = Path(repro.router.__file__).parent
+        files = sorted(pkg.glob("*.py"))
+        assert files, "router package has no modules?"
+        for p in files:
+            mod = SourceModule.load(p, pkg.parents[2])
+            assert _module_role(mod) == "host", p.name
 
     def test_tau_as_python_value_caught_statically(self):
         # the acceptance-criterion fixture: a tau that is a static Python
@@ -104,7 +128,7 @@ class TestCLI:
         assert main(["--no-harness", "--strict"]) == 0
 
     def test_strict_fails_on_each_violation_class(self):
-        for bad in sorted(FIXTURES.glob("bad_*.py")):
+        for bad in sorted(FIXTURES.rglob("bad_*.py")):
             assert main(["--strict", "--paths", str(bad)]) == 1, bad.name
 
     def test_nonstrict_reports_without_failing(self):

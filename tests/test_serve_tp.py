@@ -255,6 +255,13 @@ class TestRegressionGateLogic:
                 "rho05_vs_rho0": 1.2,
                 "pallas_visits": {"strictly_decreasing": True},
             },
+            "router": {
+                "router_tokens_exact": True,
+                "router_drain": True,
+                "slo_ladder_ordered": True,
+                "affinity_hit_rate": 0.6,
+                "router2_vs_single": 0.5,
+            },
         }
         result.update(over)
         return result
@@ -342,6 +349,45 @@ class TestRegressionGateLogic:
         from benchmarks.check_regression import throughput_ratios
 
         assert throughput_ratios(self.fresh())["rho05_vs_rho0"] == 1.2
+
+    def test_router_parity_flip_fails(self):
+        """The router's placement-invisibility claims are zero-tolerance:
+        token divergence, lossy drain, or a shed before the rho ladder
+        saturates each fails the gate — as does a flag missing entirely."""
+        from benchmarks.check_regression import check_parity
+
+        for key, label in (
+            ("router_tokens_exact", "router_tokens_exact"),
+            ("router_drain", "router_drain"),
+            ("slo_ladder_ordered", "router_slo_ladder_ordered"),
+        ):
+            for bad in (False, None):
+                fresh = self.fresh()
+                if bad is None:
+                    del fresh["router"][key]
+                else:
+                    fresh["router"][key] = bad
+                assert any(label in f for f in check_parity(fresh)), (key, bad)
+
+    def test_router_affinity_hit_rate_must_be_positive(self):
+        from benchmarks.check_regression import check_parity
+
+        fresh = self.fresh()
+        fresh["router"]["affinity_hit_rate"] = 0.0
+        assert any("affinity hit" in f for f in check_parity(fresh))
+
+    def test_router_ratio_hard_floor(self):
+        """The 2-replica vs single-engine tokens/s ratio has a HARD same-run
+        floor (no machine tolerance): at the floor, below it, or missing,
+        the gate fails; above it, the ratio feeds the trajectory."""
+        from benchmarks.check_regression import check_parity, throughput_ratios
+
+        assert check_parity(self.fresh()) == []
+        assert throughput_ratios(self.fresh())["router2_vs_single"] == 0.5
+        for bad in (0.1, 0.25, None):
+            fresh = self.fresh()
+            fresh["router"]["router2_vs_single"] = bad
+            assert any("router2_vs_single" in f for f in check_parity(fresh)), bad
 
 
 @needs_mesh
