@@ -18,11 +18,14 @@ Two gate classes:
   counts, and the multi-replica router's placement-invisibility claims
   (2-replica tokens == single-engine tokens, lossless drain after a
   replica kill, rho ladder fully climbed before the first shed, affinity
-  hit rate > 0 on a warm fleet).  Any false flag fails the gate outright —
-  no tolerance.  Same-run ratios with HARD floors are also parity-class:
-  the sparsity section's rho=0.5 / rho=0 tokens/s ratio (> 1.0 — tile
-  skipping that does not pay fails the gate) and the router's 2-replica /
-  single-engine ratio (> 0.25 — bounded routing overhead).
+  hit rate > 0 on a warm fleet), and the host page tier's restore
+  exactness (restored tokens == straight decode == evict+replay, every
+  paged kind).  Any false flag fails the gate outright — no tolerance.
+  Same-run ratios with HARD floors are also parity-class: the sparsity
+  section's rho=0.5 / rho=0 tokens/s ratio (> 1.0 — tile skipping that
+  does not pay fails the gate), the router's 2-replica / single-engine
+  ratio (> 0.25 — bounded routing overhead), and the tier's
+  restore-vs-replay ratio (> 1.0 — restoring must beat re-prefilling).
 * **Throughput** — tokens/s ratios must not regress more than
   ``tolerance`` (default 25%) below the baseline.  Gated on MACHINE-
   INDEPENDENT ratios (each engine's tokens/s normalised by the same run's
@@ -68,6 +71,10 @@ PARITY_FLAGS = [
     ("router_tokens_exact", ("router", "router_tokens_exact")),
     ("router_drain", ("router", "router_drain")),
     ("router_slo_ladder_ordered", ("router", "slo_ladder_ordered")),
+    # host page tier (ISSUE 9): a restored request's tokens must be
+    # bitwise-identical to both the straight decode and the evict+replay
+    # run, for every paged kind — zero-tolerance
+    ("tier_restore_exact", ("tiering", "tier_restore_exact")),
 ]
 
 # same-run tokens/s ratio floors (machine-independent, so no tolerance):
@@ -83,6 +90,10 @@ RATIO_FLOORS = [
     # serializing pathologically).  Floor is deliberately loose: the same-
     # run ratio is wall-clock based and CPU CI runners are noisy
     ("router2_vs_single", ("router", "router2_vs_single"), 0.25),
+    # host page tier: restoring spilled pages must beat replaying prefill
+    # on the long-prompt re-admission workload — a ratio at or below 1.0
+    # means the tier is pure overhead, a regression even when exact
+    ("tier_restore_vs_replay", ("tiering", "restore_vs_replay"), 1.0),
 ]
 
 
@@ -121,6 +132,9 @@ def throughput_ratios(result: dict) -> dict:
     # router fleet vs single engine (ISSUE 8): same-run wall-clock ratio,
     # floored hard in check_parity and tracked here for the trajectory
     out["router2_vs_single"] = _get(result, ("router", "router2_vs_single"))
+    # host page tier (ISSUE 9): restore-vs-replay paired-round median,
+    # floored hard in check_parity and tracked here for the trajectory
+    out["tier_restore_vs_replay"] = _get(result, ("tiering", "restore_vs_replay"))
     return {k: v for k, v in out.items() if v is not None}
 
 

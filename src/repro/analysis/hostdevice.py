@@ -28,7 +28,7 @@ HOST_MODULES = ("repro/serve/scheduler.py", "repro/core/scheduler.py")
 HOST_PREFIXES = ("repro/router/",)
 DEVICE_PREFIXES = ("repro/kernels/",)
 # host-side classes living inside otherwise-device-facing modules
-HOST_CLASSES = {"repro/models/kvcache.py": ("PageAllocator", "PrefixCache")}
+HOST_CLASSES = {"repro/models/kvcache.py": ("PageAllocator", "PrefixCache", "HostPageStore")}
 
 _SYNC_ATTRS = frozenset({"item", "tolist"})
 _DEVICE_FORBIDDEN_ROOTS = ("np.", "numpy.")

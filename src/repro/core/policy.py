@@ -35,6 +35,8 @@ from repro.core.dynatran import SITES, SparsityConfig, prune_
 
 Array = jax.Array
 
+__all__ = ["KernelPolicy", "resolve_policy"]
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -84,12 +86,15 @@ class KernelPolicy:
 
     # -- pytree protocol: taus are leaves, everything else is treedef --------
     def tree_flatten(self):
+        """Pytree protocol: taus are the only leaves; every other field
+        is static treedef (hashes into jit's trace cache)."""
         aux = (self.backend, self.mode, self.sites, self.block, self.skip,
                self.topk_k, self.interpret)
         return (self.taus,), aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from static aux + tau leaves."""
         obj = object.__new__(cls)
         (obj.backend, obj.mode, obj.sites, obj.block, obj.skip,
          obj.topk_k, obj.interpret) = aux
@@ -123,6 +128,7 @@ class KernelPolicy:
     # -- queries model code asks ---------------------------------------------
     @property
     def use_pallas(self) -> bool:
+        """True when the fused Pallas kernels are selected."""
         return self.backend == "pallas"
 
     @property
@@ -141,6 +147,8 @@ class KernelPolicy:
         return self.active and site in self.sites and site in self.taus
 
     def tau(self, site: str):
+        """The runtime threshold for ``site`` (a tensor leaf — reading it
+        in a traced function never forks the jit cache)."""
         return self.taus[site]
 
     def prune(self, x: Array, site: str) -> Array:

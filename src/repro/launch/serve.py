@@ -107,6 +107,10 @@ def main() -> None:
     ap.add_argument("--metrics", action="store_true",
                     help="[router] print the Prometheus-style metrics text after the run")
     ap.add_argument("--no-prefix-cache", action="store_true", help="[continuous] disable shared-prefix page caching")
+    ap.add_argument("--host-tier-mb", type=float, default=64.0,
+                    help="[continuous] host page-tier budget (MB): evictions spill KV pages "
+                         "to host memory and re-admissions restore them instead of replaying "
+                         "prefill; 0 disables the tier (every re-admission replays)")
     ap.add_argument("--kv-cache", default=None, choices=["bfloat16", "int8"], help="KV cache dtype override")
     args = ap.parse_args()
 
@@ -147,6 +151,7 @@ def main() -> None:
             tp=args.tp,
             use_pallas=args.use_pallas,
             tile_skip=None if args.tile_skip is None else args.tile_skip == "on",
+            host_tier_mb=args.host_tier_mb,
         )
         try:
             engines = [ContinuousServeEngine(cfg, params, scfg) for _ in range(max(1, args.replicas))]
@@ -218,6 +223,9 @@ def main() -> None:
         if m["prefix_cache"] is not None:
             pc = m["prefix_cache"]
             line += f" | prefix hit rate {pc['hit_rate']:.2f} ({pc['pages_shared']} page links shared)"
+        if m["host_tier"] is not None:
+            ht = m["host_tier"]
+            line += f" | tier spills {ht['spills']} restores {ht['restores']} replays {ht['tier_replays']}"
         print(line)
     else:
         engine = ServeEngine(cfg, params, ServeConfig(slots=args.prompts, max_len=args.max_len, target_rho=args.target_rho))

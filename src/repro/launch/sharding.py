@@ -459,6 +459,26 @@ def paged_pool_shardings(pools: Any, mesh: Mesh, axis: str = "model") -> Any:
     )
 
 
+def paged_payload_spec(leaf, axis: str = "model") -> P:
+    """PartitionSpec for one SPILLED-page payload leaf (the host-tier
+    restore path): payload leaves keep the pool ranks — K/V [n_cycles, n,
+    P, Hkv, D] and int8 scales [n_cycles, n, P, Hkv] shard per KV head like
+    their pools, while rank-3 occupancy payloads [n_cycles, n, P] are
+    per-POSITION and ride replicated.  ``device_put`` with these specs is
+    what lands each restored page slice back on its owning shard."""
+    if leaf.ndim == 3:
+        return P()
+    return paged_pool_spec(leaf, axis)
+
+
+def paged_payload_shardings(payload: Any, mesh: Mesh, axis: str = "model") -> Any:
+    """NamedSharding pytree for ``jax.device_put``-ing a spilled payload
+    back onto ``mesh`` (see ``paged_payload_spec``)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, paged_payload_spec(leaf, axis)), payload
+    )
+
+
 def state_shardings(kind: Any, tree: Any, mesh: Mesh, axis: str = "model") -> Any:
     """Mesh placement for ONE decode-state component, derived from the
     state-kind registry (``repro.models.kvcache.STATE_KINDS``): kinds with

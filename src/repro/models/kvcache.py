@@ -108,6 +108,14 @@ class StateKind:
     # riding the parent kind's page ids; see init_occupancy below)
     occupancy_kind: str | None = None
 
+    @property
+    def spillable(self) -> bool:
+        """Host-tier eligibility: a kind can spill to the ``HostPageStore``
+        iff it is paged AND registered extract/insert ops in
+        ``PAGE_TIER_OPS`` (slot-dense state has no page granularity to move;
+        it is replayed instead)."""
+        return self.paged and self.name in PAGE_TIER_OPS
+
 
 STATE_KINDS: dict[str, StateKind] = {}
 
@@ -179,6 +187,16 @@ class StateBundle:
         state a cached page cannot reproduce."""
         kinds = self.kinds()
         return any(k.paged for k in kinds) and all(k.shareable for k in kinds)
+
+    @property
+    def spillable(self) -> bool:
+        """Host-tier eligibility of the WHOLE bundle: an evicted request is
+        restorable from host memory only when EVERY kind it carries can
+        spill — one slot-dense component (SSM state, encoder cross-KV)
+        forces full prompt replay, so spilling the paged part alone would
+        buy nothing and still pay the copies."""
+        kinds = self.kinds()
+        return bool(kinds) and all(k.spillable for k in kinds)
 
     def describe(self) -> str:
         return " + ".join(c.kind for c in self.components)
@@ -330,6 +348,126 @@ class PageAllocator:
         self._decref(page)
 
 
+class HostPageStore:
+    """Host-memory page tier: a budgeted, insertion-ordered LRU map from
+    opaque keys to spilled page payloads (numpy trees fetched off-device by
+    the engine).  This is the middle rung of the memory ladder
+
+        device pools  →  host store  →  replay
+
+    Eviction under device pressure SPILLS a request's pages here instead of
+    discarding them; re-admission restores them with a ``device_put`` —
+    O(pages moved) instead of O(tokens replayed).  Prompt replay remains the
+    fallback whenever this tier is full (``put`` returns False) or the
+    payload was LRU-dropped before re-admission (``take`` returns None).
+
+    Keys are namespaced tuples chosen by the callers: ``("req", rid)`` for a
+    whole evicted request's snapshot, ``("prefix", chain_key)`` for a single
+    prefix-cache page.  The store never inspects payloads beyond sizing them
+    (anything exposing ``.nbytes``, nested in dicts/lists, is accounted).
+
+    Host-side only: this class never touches jax (enforced by reprolint
+    HD201) — device transfers live in the engine, which hands payloads in
+    and takes them out.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self._entries: dict[Any, tuple[Any, int, int]] = {}  # key -> (payload, nbytes, pages)
+        self.bytes_used = 0
+        self.pages_held = 0
+        # monotonic op counters (survive engine.clear_history by contract)
+        self.puts = 0
+        self.takes = 0
+        self.rejects = 0  # payload alone exceeded the budget
+        self.lru_drops = 0  # entries evicted to make room for a newer put
+
+    @property
+    def entries(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def payload_bytes(payload) -> int:
+        """Size of a spilled payload: summed ``.nbytes`` over a tree of
+        dicts/lists/tuples of array-likes."""
+        if hasattr(payload, "nbytes"):
+            return int(payload.nbytes)
+        if isinstance(payload, dict):
+            return sum(HostPageStore.payload_bytes(v) for v in payload.values())
+        if isinstance(payload, (list, tuple)):
+            return sum(HostPageStore.payload_bytes(v) for v in payload)
+        return 0
+
+    def contains(self, key) -> bool:
+        """Membership WITHOUT recency effects (mirrors ``probe_keys``)."""
+        return key in self._entries
+
+    def peek(self, key):
+        """Return ``key``'s payload without removing it (no counters) —
+        callers size a restore's page allocation off the snapshot before
+        committing the ``take``."""
+        ent = self._entries.get(key)
+        return None if ent is None else ent[0]
+
+    def put(self, key, payload, *, pages: int = 0) -> bool:
+        """Store ``payload`` under ``key``, evicting oldest entries to fit
+        the budget.  Returns False (payload NOT stored, ``rejects`` bumped)
+        when the payload alone exceeds the whole budget — the caller falls
+        back to replay.  Re-putting a live key replaces it."""
+        nbytes = self.payload_bytes(payload)
+        if nbytes > self.budget_bytes:
+            self.rejects += 1
+            return False
+        self.pop(key)
+        while self.bytes_used + nbytes > self.budget_bytes and self._entries:
+            self.pop(next(iter(self._entries)))
+            self.lru_drops += 1
+        self._entries[key] = (payload, nbytes, pages)
+        self.bytes_used += nbytes
+        self.pages_held += pages
+        self.puts += 1
+        return True
+
+    def take(self, key):
+        """Pop and return ``key``'s payload (None on miss) — the restore
+        path.  Payloads are single-use: a restored request that gets evicted
+        again is re-spilled fresh (its pages have grown since)."""
+        ent = self._entries.pop(key, None)
+        if ent is None:
+            return None
+        self.bytes_used -= ent[1]
+        self.pages_held -= ent[2]
+        self.takes += 1
+        return ent[0]
+
+    def pop(self, key) -> None:
+        """Discard ``key`` silently (cancel, replace, invalidation) — no
+        restore is counted."""
+        ent = self._entries.pop(key, None)
+        if ent is not None:
+            self.bytes_used -= ent[1]
+            self.pages_held -= ent[2]
+
+    def clear(self) -> None:
+        """Drop every entry (rho-epoch bump: spilled K/V were written at the
+        old taus and must not serve the new epoch)."""
+        self._entries.clear()
+        self.bytes_used = 0
+        self.pages_held = 0
+
+    def stats(self) -> dict:
+        return {
+            "entries": self.entries,
+            "bytes_used": self.bytes_used,
+            "budget_bytes": self.budget_bytes,
+            "pages_held": self.pages_held,
+            "puts": self.puts,
+            "takes": self.takes,
+            "rejects": self.rejects,
+            "lru_drops": self.lru_drops,
+        }
+
+
 class PrefixCache:
     """Hash-of-prefix → page-chain cache over one ``PageAllocator``: requests
     whose prompts share a page-aligned token prefix link the SAME physical
@@ -363,6 +501,16 @@ class PrefixCache:
         self._children: dict[bytes, int] = {}  # key -> cached child count
         self._stamp: dict[bytes, int] = {}  # key -> last-use tick (LRU)
         self._tick = 0
+        # host read-through (engine-wired when tiering is on): ``host_store``
+        # is a HostPageStore, ``_spill_page`` an engine callable that fetches
+        # one device page's content to host (page id -> payload, or None).
+        # With both set, ``reclaim`` spills a dropped entry's content under
+        # ("prefix", key) so a later admission can restore the chain via
+        # ``host_probe``/``host_take``/``readmit`` instead of re-prefilling.
+        self.host_store: HostPageStore | None = None
+        self._spill_page = None
+        self.host_spills = 0  # entries written through to the host tier
+        self.host_restores = 0  # entries readmitted from the host tier
         # metrics, counted by the scheduler per successful admission (an
         # admission blocked on pages retries its lookup every tick — those
         # retries must not inflate the hit rate)
@@ -456,7 +604,43 @@ class PrefixCache:
         del self._stamp[key]
         if parent is not None:
             self._children[parent] -= 1
+        # write-behind: spill the page's content to the host tier BEFORE the
+        # retention ref drops (the pool slot may be reused immediately).
+        # Page content is immutable once cached (COW forks writers), so a
+        # copy taken at drop time is exact.
+        if self.host_store is not None and self._spill_page is not None:
+            payload = self._spill_page(page)
+            if payload is not None and self.host_store.put(("prefix", key), payload, pages=1):
+                self.host_spills += 1
         self.alloc.drop(page)
+
+    def host_probe(self, key: bytes) -> bool:
+        """Does the host tier hold a spilled page for chain ``key``?  No
+        recency effects (mirrors ``probe_keys``)."""
+        return self.host_store is not None and self.host_store.contains(("prefix", key))
+
+    def host_take(self, key: bytes):
+        """Pop chain ``key``'s spilled payload from the host tier (None on
+        miss).  The caller allocates a fresh device page, queues the upload,
+        and re-registers the entry via ``readmit``."""
+        return None if self.host_store is None else self.host_store.take(("prefix", key))
+
+    def readmit(self, key: bytes, page: int, parent: bytes | None) -> None:
+        """Re-register a chain entry restored from the host tier onto fresh
+        device page ``page`` (already allocated to the restoring sequence —
+        this adds the cache's retention ref, exactly like ``insert``).
+        ``parent`` is the preceding chain key (None at the root); callers
+        walk chains in order, so the parent entry is always present when
+        non-None."""
+        self._tick += 1
+        self._page[key] = page
+        self._parent[key] = parent
+        self._children[key] = 0
+        self._stamp[key] = self._tick
+        if parent is not None:
+            self._children[parent] += 1
+        self.alloc.retain(page)
+        self.host_restores += 1
 
     def reclaim(self) -> bool:
         """Drop the least-recently-used LEAF entry (no cached children — so
@@ -471,10 +655,17 @@ class PrefixCache:
         return True
 
     def drop_all(self) -> None:
-        """Drop every entry (engine shutdown): releases all retention refs
-        so the allocator can drain to empty once live requests finish."""
-        while self.reclaim():
-            pass
+        """Drop every entry (engine shutdown / rho-epoch flush): releases
+        all retention refs so the allocator can drain to empty once live
+        requests finish.  Spill is bypassed — a flushed cache's contents are
+        invalid (epoch bump) or moot (shutdown), and the engine clears the
+        host store itself when epochs change."""
+        store, self.host_store = self.host_store, None
+        try:
+            while self.reclaim():
+                pass
+        finally:
+            self.host_store = store
 
     def stats(self) -> dict:
         return {
@@ -484,6 +675,8 @@ class PrefixCache:
             "pages_shared": self.pages_shared,
             "relinked_pages": self.relinked_pages,
             "cached_pages": self.cached_pages,
+            "host_spills": self.host_spills,
+            "host_restores": self.host_restores,
         }
 
 
@@ -760,6 +953,28 @@ def entry_copy_pages(entry, src: Array, dst: Array):
     return copy_pool_pages(entry, src, dst)
 
 
+def entry_extract_pages(entry, pages: Array):
+    """Gather whole pages ``entry[:, pages]`` out of one pool entry — the
+    device half of a SPILL: the engine fetches the result to host with one
+    ``device_get``.  Works per shard under TP (each shard extracts its own
+    KV-head slice; the host payload keeps the shard axis)."""
+    if isinstance(entry, dict):
+        return {"q": entry["q"][:, pages], "scale": entry["scale"][:, pages]}
+    return entry[:, pages]
+
+
+def entry_insert_pages(entry, dst: Array, payload):
+    """Scatter spilled ``payload`` (the matching ``entry_extract_pages``
+    result) onto pages ``dst[i]`` of one pool entry — the device half of a
+    RESTORE.  Padding pairs may target ``TRASH_PAGE`` with a zero payload
+    (the trash page's content is garbage by contract), which lets callers
+    pad ``dst`` to bucketed lengths and bound retracing."""
+    if isinstance(entry, dict):
+        return {"q": entry["q"].at[:, dst].set(payload["q"]),
+                "scale": entry["scale"].at[:, dst].set(payload["scale"])}
+    return entry.at[:, dst].set(payload)
+
+
 # ---------------------------------------------------------------------------
 # Entry ops: dispatch over bf16 pools (a bare array) vs int8 pools
 # ({"q", "scale"}).  Quant/dequant mirror the dense cache's `_quant_update`
@@ -816,3 +1031,45 @@ def entry_gather_ring(entry, page_table: Array, cur_pos: Array, window: int) -> 
 
 def paged_cache_bytes(layers: int, num_pages: int, page_size: int, n_kv: int, head_dim: int, elem_bytes: int = 2) -> int:
     return 2 * layers * num_pages * page_size * n_kv * head_dim * elem_bytes
+
+
+# ---------------------------------------------------------------------------
+# Page-tier ops registry: per state kind, the jittable extract/insert pair
+# that moves whole pages between device pools and the host tier.  Registering
+# ops is what makes a kind ``spillable`` — slot-dense kinds never register
+# (no page granularity to move) and fall back to replay.  All three paged
+# kinds share the entry-op pair above: int8-vs-bf16 layout differences are
+# absorbed by the dict dispatch inside the entry ops, and ring pages spill
+# exactly like full pages (the write CURSOR travels in the scheduler's
+# request snapshot, not in the pool).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PageTierOps:
+    """The spill/restore op pair for one paged state kind."""
+
+    extract: Any  # (entry, pages) -> payload        (device -> host via device_get)
+    insert: Any  # (entry, dst, payload) -> entry    (host -> device via device_put)
+
+
+PAGE_TIER_OPS: dict[str, PageTierOps] = {}
+
+
+def register_tier_ops(kind: str, ops: PageTierOps) -> PageTierOps:
+    """Register spill/restore ops for ``kind`` (must be a registered paged
+    state kind) — the extension point a new paged kind implements to join
+    the host tier."""
+    sk = STATE_KINDS.get(kind)
+    if sk is None or not sk.paged:
+        raise ValueError(f"tier ops need a registered PAGED state kind, got {kind!r}")
+    PAGE_TIER_OPS[kind] = ops
+    return ops
+
+
+def tier_ops(kind: str) -> PageTierOps:
+    return PAGE_TIER_OPS[kind]
+
+
+for _kind in ("paged-full", "paged-int8", "paged-ring"):
+    register_tier_ops(_kind, PageTierOps(extract=entry_extract_pages, insert=entry_insert_pages))

@@ -38,10 +38,12 @@ from .kvcache import (
     StateComponent,
     copy_pool_pages,
     entry_copy_pages,
+    entry_extract_pages,
     entry_gather,
     entry_gather_ring,
     entry_scatter_chunk,
     entry_scatter_token,
+    entry_insert_pages,
     init_occupancy,
     init_paged_pools,
     occupancy_bit,
@@ -564,6 +566,57 @@ def paged_copy_pages(
         v[str(i)] = entry_copy_pages(v[str(i)], src, dst)
         if occ is not None:
             occ[str(i)] = copy_pool_pages(occ[str(i)], src, dst)
+    return PagedKV(k=k, v=v), occ
+
+
+def paged_extract_pages(
+    layout: PagedLayout,
+    pools: PagedKV,
+    kind: str,
+    pages: Array,
+    occupancy: dict[str, Array] | None = None,
+) -> dict:
+    """Gather pages ``pages`` out of every pool of ``kind`` — the device half
+    of a host-tier SPILL.  Returns {"k": {slot: payload}, "v": {...}} plus
+    "occ" when occupancy side arrays ride along (occupancy bits are page
+    content: a restored page must mask the same dead positions or DynaTran
+    attention diverges from the replay path).  The engine ``device_get``s
+    the result; ``paged_insert_pages`` consumes it unchanged."""
+    out: dict[str, dict[str, Any]] = {"k": {}, "v": {}}
+    if occupancy is not None:
+        out["occ"] = {}
+    for i, slot_kind in enumerate(layout.slot_kinds):
+        if slot_kind != kind:
+            continue
+        out["k"][str(i)] = entry_extract_pages(pools.k[str(i)], pages)
+        out["v"][str(i)] = entry_extract_pages(pools.v[str(i)], pages)
+        if occupancy is not None:
+            out["occ"][str(i)] = entry_extract_pages(occupancy[str(i)], pages)
+    return out
+
+
+def paged_insert_pages(
+    layout: PagedLayout,
+    pools: PagedKV,
+    kind: str,
+    dst: Array,
+    payload: dict,
+    occupancy: dict[str, Array] | None = None,
+) -> tuple[PagedKV, dict[str, Array] | None]:
+    """Scatter a spilled ``payload`` (a ``paged_extract_pages`` result) onto
+    pages ``dst[i]`` of every pool of ``kind`` — the device half of a
+    host-tier RESTORE.  Padding entries may target ``TRASH_PAGE`` with
+    zeroed payload rows (callers pad to bucketed lengths to bound
+    retracing)."""
+    k, v = dict(pools.k), dict(pools.v)
+    occ = dict(occupancy) if occupancy is not None else None
+    for i, slot_kind in enumerate(layout.slot_kinds):
+        if slot_kind != kind:
+            continue
+        k[str(i)] = entry_insert_pages(k[str(i)], dst, payload["k"][str(i)])
+        v[str(i)] = entry_insert_pages(v[str(i)], dst, payload["v"][str(i)])
+        if occ is not None:
+            occ[str(i)] = entry_insert_pages(occ[str(i)], dst, payload["occ"][str(i)])
     return PagedKV(k=k, v=v), occ
 
 

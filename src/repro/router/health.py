@@ -36,6 +36,7 @@ def _reset_for_replay(req: Request) -> None:
     req.tables = {}
     req.ring_hi = 0
     req.pending_token = None
+    req._spill = None  # any host-tier snapshot died with the replica
 
 
 class HealthMonitor:
@@ -54,13 +55,18 @@ class HealthMonitor:
         self.failovers = 0  # dead-replica recoveries performed
 
     def kill(self, idx: int) -> None:
+        """Force the probe to fail for replica ``idx`` (fault injection:
+        the next sweep declares it dead and drains its work)."""
         self._killed.add(idx)
 
     def revive(self, idx: int) -> None:
+        """Clear a forced kill and mark replica ``idx`` healthy so the
+        router may place requests on it again."""
         self._killed.discard(idx)
         self.status[idx] = HEALTHY
 
     def healthy(self, idx: int) -> bool:
+        """True while replica ``idx`` passes its probe."""
         return self.status[idx] == HEALTHY
 
     def sweep(self, replicas) -> list[Request]:

@@ -89,4 +89,30 @@ def render_prometheus(metrics: dict) -> str:
         "replica_requests_total",
         [(m["engine"].get("total_requests", 0), {"replica": i}) for i, m in enumerate(replicas)],
     )
+
+    # host page tier (engines with tiering disabled report zeros: the
+    # scrape schema stays fixed across fleet configs)
+    def tier(m: dict) -> dict:
+        return m["engine"].get("host_tier") or {}
+
+    counter_family(
+        "replica_tier_spilled_pages_total",
+        [(tier(m).get("spilled_pages", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    counter_family(
+        "replica_tier_restores_total",
+        [(tier(m).get("restores", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    counter_family(
+        "replica_tier_replays_total",
+        [(tier(m).get("tier_replays", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    gauge_family(
+        "replica_tier_bytes_used",
+        [(tier(m).get("bytes_used", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    gauge_family(
+        "replica_tier_restore_ratio",
+        [(tier(m).get("restore_ratio") or 0.0, {"replica": i}) for i, m in enumerate(replicas)],
+    )
     return "\n".join(out) + "\n"

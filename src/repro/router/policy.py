@@ -35,7 +35,19 @@ from repro.serve.scheduler import Request, RhoController
 
 @dataclasses.dataclass
 class RouterPolicy:
-    """Knobs for the router's admission control and degradation ladder."""
+    """Knobs for the router's admission control and degradation ladder.
+
+    Load leveling: ``replica_depth_hw`` is the per-replica high-water
+    queue depth above which the router holds requests in its own backlog;
+    ``queue_cap`` is the backlog size above which a *saturated* ladder
+    sheds.  Throttling: ``tenant_rate`` / ``tenant_burst`` parameterize
+    each tenant's token bucket (charged in tokens, not requests).
+    Degradation: ``rho_levels`` are the quantized ladder rungs,
+    ``depth_lo`` / ``depth_hi`` map backlog onto rho, ``rho_ema`` smooths
+    it, and ``slo_p99_ms`` (optional) boosts ladder pressure when the
+    observed p99 latency overruns the target — so the fleet degrades
+    before the backlog alone would force it.
+    """
 
     # --- load leveling ---
     replica_depth_hw: int = 8  # per-replica high-water queue depth; above it
@@ -75,10 +87,14 @@ class TokenBucket:
         self._stamp = now
 
     def peek(self, cost: float) -> bool:
+        """True if the bucket currently holds ``cost`` tokens (refills
+        first; never charges — dispatch decisions peek before they take)."""
         self._refill()
         return self._level >= cost
 
     def take(self, cost: float) -> bool:
+        """Charge ``cost`` tokens if available and return True; False
+        leaves the bucket untouched (the request defers, never drops)."""
         self._refill()
         if self._level < cost:
             return False
@@ -140,6 +156,8 @@ class FairQueue:
         return t
 
     def push(self, req: Request) -> None:
+        """File ``req`` under its tenant's FIFO queue, advancing an idle
+        tenant's virtual clock to the live minimum (no banked credit)."""
         t = self._tenant(req.tenant or "default")
         if not t.queue:  # (re-)joining: no credit for time spent idle
             live = [s.vt for s in self.tenants.values() if s.queue]
@@ -173,12 +191,17 @@ class FairQueue:
 
     @property
     def depth(self) -> int:
+        """Total queued requests across every tenant (the router backlog)."""
         return sum(len(t.queue) for t in self.tenants.values())
 
     def depths(self) -> dict[str, int]:
+        """Per-tenant queued-request counts (the ``tenant_queue_depth``
+        metric family)."""
         return {name: len(t.queue) for name, t in self.tenants.items()}
 
     def drain(self) -> list[Request]:
+        """Empty every tenant queue and return the live requests in global
+        FIFO (rid) order — used when requeueing off a dead replica."""
         out: list[Request] = []
         for t in self.tenants.values():
             out.extend(r for r in t.queue if not r.cancelled)
@@ -221,6 +244,8 @@ class DegradationLadder:
         self._snap_tol = 0.05 * (levels[-1] - levels[0]) + 1e-9
 
     def update(self, backlog: int, p99_s: Optional[float] = None) -> Optional[float]:
+        """Feed backlog (SLO-boosted) pressure through the controller and
+        return the new rung if it crossed one, else None (see class doc)."""
         pressure = backlog
         if self.slo_p99_s is not None and p99_s is not None and p99_s > self.slo_p99_s:
             # SLO-aware boost: overrun ratio scales the pressure so latency
@@ -238,4 +263,6 @@ class DegradationLadder:
 
     @property
     def saturated(self) -> bool:
-        return self.rung >= self.levels[-1] - 1e-9  # sitting on the top rung
+        """True while the ladder sits on its top rung — the only state in
+        which the router may shed."""
+        return self.rung >= self.levels[-1] - 1e-9

@@ -55,6 +55,7 @@ class ReplicaHandle:
 
     @property
     def load(self) -> int:
+        """The engine's queue depth — the least-loaded placement key."""
         return self.engine.load
 
     def probe_affinity(self, keys: list[bytes]) -> int:
@@ -232,6 +233,8 @@ class Router:
         return finished
 
     def run_until_complete(self, max_steps: int = 1_000_000) -> list[Request]:
+        """Step the fleet until backlog and every replica drain (or
+        ``max_steps``), returning the requests finished along the way."""
         finished: list[Request] = []
         for _ in range(max_steps):
             if self.backlog == 0 and not any(h.inflight for h in self.replicas):
@@ -331,6 +334,7 @@ class Router:
 
     @property
     def in_flight(self) -> int:
+        """Requests currently placed on replicas (not in the backlog)."""
         return sum(len(h.inflight) for h in self.replicas)
 
     def metrics(self) -> dict:

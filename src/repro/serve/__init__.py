@@ -1,3 +1,27 @@
-from .engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine  # noqa: F401
-from .sampling import SamplingParams, sample_tokens  # noqa: F401
-from .scheduler import ContinuousScheduler, Request, RhoController, summarize  # noqa: F401
+"""Serving engines: the slot-granularity baseline and paged continuous
+batching.
+
+Public surface: ``ServeEngine``/``ServeConfig`` (batched slot baseline),
+``ContinuousServeEngine``/``ContinuousServeConfig`` (token-granularity
+continuous batching over the block-paged KV cache, with prefix caching,
+the host page tier, TP sharding, and the DynaTran rho knob),
+per-request ``SamplingParams``, and the host-side
+``ContinuousScheduler``/``Request``/``RhoController`` it drives.  See
+``docs/ARCHITECTURE.md`` for how the pieces fit together.
+"""
+from .engine import ContinuousServeConfig, ContinuousServeEngine, ServeConfig, ServeEngine
+from .sampling import SamplingParams, sample_tokens
+from .scheduler import ContinuousScheduler, Request, RhoController, summarize
+
+__all__ = [
+    "ContinuousScheduler",
+    "ContinuousServeConfig",
+    "ContinuousServeEngine",
+    "Request",
+    "RhoController",
+    "SamplingParams",
+    "ServeConfig",
+    "ServeEngine",
+    "sample_tokens",
+    "summarize",
+]

@@ -33,7 +33,7 @@ from repro.core.dynatran import SparsityConfig, ThresholdCalculator
 from repro.core.policy import KernelPolicy
 from repro.models import transformer as tfm
 from repro.models import zoo
-from repro.models.kvcache import PageAllocator, PrefixCache
+from repro.models.kvcache import HostPageStore, PageAllocator, PrefixCache
 from repro.serve.sampling import SamplingParams, fill_row, sample_tokens, sampling_tensors
 from repro.serve.scheduler import ContinuousScheduler, Request, RhoController, summarize
 
@@ -55,8 +55,33 @@ def _resolve_params(
     return sp
 
 
+def _pow2(n: int) -> int:
+    """Next power of two >= n (page-op widths are bucketed to bound
+    retracing, as _drain_copies does for COW forks)."""
+    m = 1
+    while m < n:
+        m *= 2
+    return m
+
+
+def _pad_pages(a: np.ndarray, n: int) -> np.ndarray:
+    """Zero-pad a spilled payload leaf [n_cycles, pages, ...] to ``n`` pages
+    (padding rows scatter onto the trash page, whose content is garbage by
+    contract)."""
+    if a.shape[1] == n:
+        return a
+    pad = np.zeros((a.shape[0], n - a.shape[1]) + a.shape[2:], a.dtype)
+    return np.concatenate([a, pad], axis=1)
+
+
 @dataclasses.dataclass
 class ServeConfig:
+    """Knobs for the slot-granularity baseline engine: ``slots``
+    concurrent sequences of up to ``max_len`` tokens, a default sampling
+    ``temperature`` (0 = greedy), and the fixed DynaTran ``target_rho``
+    (overrides the model config's sparsity target at runtime).
+    """
+
     slots: int = 8  # concurrent sequences
     max_len: int = 512
     temperature: float = 0.0  # default SamplingParams temperature (0 = greedy)
@@ -64,6 +89,11 @@ class ServeConfig:
 
 
 class ServeEngine:
+    """Slot-granularity batched generation baseline: one dense KV cache
+    row per request, whole batches admitted and finished together.  The
+    continuous engine below replaces it for serving; it survives as the
+    reference the serve bench measures against."""
+
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig, calculator: Optional[ThresholdCalculator] = None):
         self.cfg = cfg
         self.params = params
@@ -182,6 +212,20 @@ class ServeEngine:
 
 @dataclasses.dataclass
 class ContinuousServeConfig:
+    """Knobs for the continuous-batching engine.
+
+    Capacity: ``slots`` (decode batch width), ``max_len`` (per-sequence
+    token budget), ``page_size`` / ``num_pages`` / ``num_pages_ring``
+    (KV paging; 0 sizes a pool for the uncontended worst case), and
+    ``prefill_chunk`` / ``decode_window`` (dispatch granularity).
+    Datapath: ``use_pallas``, ``tile_skip`` (tri-state; see the field
+    comment), ``tp`` / ``mesh`` (tensor parallelism).  Memory tiers:
+    ``prefix_caching`` and ``tiering`` / ``host_tier_mb`` (the host
+    page tier).  DynaTran: ``target_rho`` or ``adaptive_rho`` with the
+    ``rho_*`` / ``depth_*`` controller constants.  Field comments below
+    are the authoritative per-knob documentation.
+    """
+
     slots: int = 8  # decode batch width
     max_len: int = 512  # per-sequence token budget (prompt + generated)
     page_size: int = 16  # tokens per KV page
@@ -215,6 +259,16 @@ class ContinuousServeConfig:
     # own write cursor) and hybrid SSM side-state are per-sequence; only
     # all-"full" attention layouts (bf16 or int8 pools) share prefixes.
     prefix_caching: bool = True
+    # host-memory page tier: eviction SPILLS a request's page contents to a
+    # budgeted host-side store and re-admission RESTORES them (one
+    # device_put, O(pages moved)) instead of replaying the whole prompt —
+    # replay remains the fallback when the tier is full, the snapshot was
+    # LRU-dropped, or the bundle carries slot-dense state (no tier ops).
+    # The prefix cache reads through the same tier, so cached chains
+    # survive device reclaim.  Auto-disabled (like prefix caching) under
+    # ADAPTIVE rho: spilled K/V embed the taus they were written at.
+    tiering: bool = True
+    host_tier_mb: float = 64.0  # host store budget (MB); <= 0 disables
     target_rho: Optional[float] = None  # fixed DynaTran knob when not adaptive
     adaptive_rho: bool = False  # close the rho loop over queue depth
     rho_min: float = 0.0
@@ -295,10 +349,31 @@ class ContinuousServeEngine:
             and not (cfg.sparsity.mode == "dynatran" and scfg.adaptive_rho)
         )
         self.prefix_cache = PrefixCache(self.allocators["full"]) if self.prefix_caching else None
+        # host page tier (the evict ladder's middle rung).  Gated like the
+        # prefix cache on rho consistency — spilled K/V embed the taus they
+        # were written at, so an ADAPTIVE rho would restore stale numerics —
+        # and on the bundle: every state kind must have registered tier ops
+        # (``StateBundle.spillable``); one slot-dense component forces the
+        # replay fallback for the whole request.
+        self.tiering = bool(
+            scfg.tiering
+            and scfg.host_tier_mb > 0
+            and self.bundle.spillable
+            and not (cfg.sparsity.mode == "dynatran" and scfg.adaptive_rho)
+        )
+        self.host_store = HostPageStore(int(scfg.host_tier_mb * 1e6)) if self.tiering else None
         self.sched = ContinuousScheduler(
             scfg.slots, self.allocators, self.budgets, scfg.max_len,
             prefix_cache=self.prefix_cache, page_size=scfg.page_size,
+            host_store=self.host_store,
+            spill_fn=self._spill_payload if self.tiering else None,
+            restore_fn=self._restore_payload if self.tiering else None,
         )
+        if self.prefix_cache is not None and self.tiering:
+            # prefix-cache write-behind: reclaimed chain entries spill their
+            # page content so later admissions restore instead of re-prefill
+            self.prefix_cache.host_store = self.host_store
+            self.prefix_cache._spill_page = self._spill_prefix_page
         self.pools = self.fam.init_paged_state(cfg, self.layout, num_pages) if kinds else None
         self.num_pages = num_pages
         # slot-dense components (hybrid SSM side-state, rwkv6 recurrent
@@ -382,6 +457,11 @@ class ContinuousServeEngine:
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0, 1, 2), static_argnames=("sample",))
         self._copy = jax.jit(self._copy_impl, donate_argnums=(0, 1))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+        # host-tier device halves: extract gathers whole pages for a spill
+        # (pools NOT donated — the fetch must not invalidate them), insert
+        # scatters a restored payload back (pools donated and rebound)
+        self._extract = jax.jit(self._extract_impl, static_argnames=("kind",))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0, 1), static_argnames=("kind",))
         self._rid = 0
         self._tick = 0
         self._peak_pages_in_use = 0
@@ -477,6 +557,12 @@ class ContinuousServeEngine:
         # layout-generic; occupancy bits are page content and fork with the page
         return tfm.paged_copy_pages(self.layout, pools, "full", src, dst, occupancy=occ)
 
+    def _extract_impl(self, pools, occ, pages, *, kind: str):
+        return tfm.paged_extract_pages(self.layout, pools, kind, pages, occupancy=occ)
+
+    def _insert_impl(self, pools, occ, dst, payload, *, kind: str):
+        return tfm.paged_insert_pages(self.layout, pools, kind, dst, payload, occupancy=occ)
+
     # --- decode-state plumbing --------------------------------------------
     def state_bytes(self) -> dict:
         """Device bytes per storage class of the bundle: paged pool bytes
@@ -545,11 +631,18 @@ class ContinuousServeEngine:
         """Attach a request drained from another replica (router handoff):
         its generated tokens ride along and replay through the standard
         evict+replay path, so resuming here is lossless — greedy and keyed
-        sampled streams alike continue bit-exactly.  The request keeps its
+        sampled streams alike continue bit-exactly.  If the drain attached
+        a host-tier snapshot (``req._spill``) and this engine is
+        tier-compatible, the snapshot seeds the local host store and
+        admission RESTORES the pages instead of replaying — the handoff
+        moves O(pages), not O(tokens).  The request keeps its
         router-assigned rid; the local rid counter jumps past it so a later
         ``submit`` can never mint a colliding page-allocator owner id."""
         req._engine = self
         self._rid = max(self._rid, req.rid + 1)
+        snap, req._spill = req._spill, None
+        if snap is not None and self._adoptable(snap):
+            self.host_store.put(("req", req.rid), snap, pages=snap["n_pages"])
         self._total_requests += 1
         self._metrics_ver += 1
         self.sched.submit(req)
@@ -597,6 +690,10 @@ class ContinuousServeEngine:
             self._rho_epoch += 1
             if self.prefix_cache is not None:
                 self.prefix_cache.drop_all()
+            if self.host_store is not None:
+                # spilled pages embed the OLD taus: evicted requests must
+                # replay (refilling at the new taus), not restore
+                self.host_store.clear()
         self._fixed_rho = rho
         self._metrics_ver += 1
 
@@ -642,6 +739,8 @@ class ContinuousServeEngine:
         return finished
 
     def run_until_complete(self, max_steps: int = 1_000_000) -> list[Request]:
+        """Step until the queue and every slot drain (or ``max_steps``),
+        returning the requests finished along the way."""
         finished = []
         for _ in range(max_steps):
             if not self.sched.queue and not self.sched.active:
@@ -697,6 +796,24 @@ class ContinuousServeEngine:
         out["pages_in_use"] = {k: a.num_pages - 1 - a.free_pages for k, a in self.allocators.items()}
         out["peak_pages_in_use"] = self._peak_pages_in_use
         out["prefix_cache"] = self.prefix_cache.stats() if self.prefix_cache else None
+        if self.host_store is not None:
+            restores, replays = self.sched.restores, self.sched.tier_replays
+            out["host_tier"] = {
+                **self.host_store.stats(),
+                # monotonic (scheduler-owned, so clear_history never resets them)
+                "spills": self.sched.spills,
+                "spilled_pages": self.sched.spilled_pages,
+                "restores": restores,
+                "restored_pages": self.sched.restored_pages,
+                "tier_replays": replays,
+                # fraction of re-admissions served from the tier; a collapse
+                # toward 0 means the budget is too small (see OPERATIONS.md)
+                "restore_ratio": restores / (restores + replays) if restores + replays else None,
+                "prefix_spills": self.prefix_cache.host_spills if self.prefix_cache else 0,
+                "prefix_restores": self.prefix_cache.host_restores if self.prefix_cache else 0,
+            }
+        else:
+            out["host_tier"] = None
         out["cache_bytes"] = self.pools.bytes() if self.pools is not None else 0
         out["cache_bytes_per_shard"] = self.pools.shard_bytes() if self.pools is not None else 0
         out["state_bytes"] = self.state_bytes()
@@ -718,7 +835,8 @@ class ContinuousServeEngine:
         """Drop finished requests from the metrics window.  Long-lived
         engines should call this after consuming ``metrics()`` — the
         request history grows without bound otherwise.  The monotonic
-        ``total_*`` counters survive the trim."""
+        ``total_*`` counters and the host-tier spill/restore counters
+        (scheduler- and store-owned) survive the trim."""
         self.requests = [r for r in self.requests if not r.done]
         self._metrics_ver += 1
 
@@ -741,6 +859,92 @@ class ContinuousServeEngine:
             src[i], dst[i] = s, d
         self.pools, self.occupancy = self._copy(
             self.pools, self.occupancy, jnp.asarray(src), jnp.asarray(dst)
+        )
+
+    # --- host page tier -----------------------------------------------------
+    def _tier_meta(self) -> dict:
+        """Compatibility stamp carried on every spilled payload: ``adopt``
+        restores a handoff snapshot only when the adopting engine matches
+        on every field (otherwise the request replays, which is always
+        safe)."""
+        return {
+            "page_size": self.scfg.page_size,
+            "family": self.cfg.family,
+            "kv_cache_dtype": self.cfg.kv_cache_dtype,
+            "shape": (self.cfg.n_cycles, self.cfg.kv_heads, self.cfg.hd, self.layout.slot_kinds),
+            "occ": self.occupancy is not None,
+            # spilled K/V embed the taus they were written at; a fixed rho
+            # pins them (adaptive rho disables tiering entirely)
+            "rho": self._fixed_rho if self._dynatran else None,
+        }
+
+    def _spill_payload(self, req: Request) -> Optional[dict]:
+        """Scheduler spill hook (device -> host): fetch ``req``'s device
+        pages — every paged kind, occupancy bits included — as one numpy
+        payload.  Queued COW forks are drained first so the fetched
+        contents are final; page counts are bucketed to powers of two
+        (padding gathers the trash page, sliced off after the fetch) so
+        retraces stay logarithmic in table size."""
+        self._drain_copies()
+        data = {}
+        for kind, table in req.tables.items():
+            if not table:
+                continue
+            pages = np.zeros((_pow2(len(table)),), np.int32)
+            pages[: len(table)] = table
+            fetched = jax.device_get(
+                self._extract(self.pools, self.occupancy, jnp.asarray(pages), kind=kind)
+            )
+            data[kind] = jax.tree_util.tree_map(lambda a: a[:, : len(table)], fetched)
+        if not data:
+            return None
+        return {"data": data, "meta": self._tier_meta()}
+
+    def _restore_payload(self, payload: dict, tables: dict[str, list[int]]) -> None:
+        """Scheduler restore hook (host -> device): upload a spilled payload
+        onto freshly allocated pages, EAGERLY — queued COW forks drain
+        first, so device page ops always apply in queue order and a
+        restored page is never read (or forked) before its content lands.
+        Under TP each K/V leaf is ``device_put`` with its pool's KV-head
+        sharding, so every restored page slice lands on its owning shard;
+        occupancy payloads are per-position and land replicated."""
+        self._drain_copies()
+        for kind, dst in tables.items():
+            data = payload["data"].get(kind)
+            if data is None or not dst:
+                continue
+            n = _pow2(len(dst))
+            dpad = np.zeros((n,), np.int32)  # padding scatters to the trash page
+            dpad[: len(dst)] = dst
+            padded = jax.tree_util.tree_map(lambda a: _pad_pages(a, n), data)
+            if self.mesh is not None:
+                from repro.launch.sharding import paged_payload_shardings
+
+                padded = jax.device_put(padded, paged_payload_shardings(padded, self.mesh))
+            self.pools, self.occupancy = self._insert(
+                self.pools, self.occupancy, jnp.asarray(dpad), padded, kind=kind
+            )
+
+    def _spill_prefix_page(self, page: int) -> Optional[dict]:
+        """PrefixCache write-behind hook: fetch ONE cached "full"-kind
+        page's content, shaped exactly like a one-page request spill so the
+        standard restore hook uploads it."""
+        self._drain_copies()
+        fetched = jax.device_get(
+            self._extract(self.pools, self.occupancy, jnp.asarray(np.array([page], np.int32)), kind="full")
+        )
+        return {"data": {"full": fetched}, "meta": self._tier_meta()}
+
+    def _adoptable(self, snap: dict) -> bool:
+        """Can this engine restore a snapshot spilled by another replica?
+        The meta stamp must match exactly and every per-kind page count
+        must fit this engine's budgets."""
+        if self.host_store is None:
+            return False
+        return (
+            snap["pages"]["meta"] == self._tier_meta()
+            and set(snap["counts"]) <= set(self.budgets)
+            and all(n <= self.budgets[k] for k, n in snap["counts"].items())
         )
 
     def _finish(self, req: Request) -> None:

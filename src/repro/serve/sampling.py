@@ -58,6 +58,7 @@ class SamplingParams:
         object.__setattr__(self, "stop", frozenset(int(t) for t in self.stop))
 
     def with_stop(self, *token_ids: int) -> "SamplingParams":
+        """A copy with ``token_ids`` added to the stop set."""
         return dataclasses.replace(self, stop=self.stop | set(token_ids))
 
 

@@ -27,7 +27,7 @@ import itertools
 from collections import deque
 from typing import Any, Iterator, Optional
 
-from repro.models.kvcache import PageAllocator, PrefixCache
+from repro.models.kvcache import HostPageStore, PageAllocator, PrefixCache
 from repro.serve.sampling import SamplingParams
 
 
@@ -85,6 +85,10 @@ class Request:
     # after submit, and a queue head blocked on pages retries admission
     # (and so the cache lookup) every engine tick
     _prefix_keys: Any = dataclasses.field(default=None, repr=False)
+    # host-tier handoff: a drained replica attaches the request's spilled
+    # page snapshot here so the adopting engine can seed its own host tier
+    # and restore instead of replaying (``engine.adopt`` consumes it)
+    _spill: Any = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
         if self.params is None:
@@ -97,6 +101,7 @@ class Request:
 
     @property
     def stop_ids(self) -> frozenset[int]:
+        """The request's stop-token set (from its ``SamplingParams``)."""
         return self.params.stop
 
     @property
@@ -111,6 +116,7 @@ class Request:
 
     @property
     def done(self) -> bool:
+        """True once the request finished (budget, stop token, or cancel)."""
         return self.finish_time is not None
 
     # --- streaming handle -------------------------------------------------
@@ -138,12 +144,15 @@ class Request:
         self._engine.cancel(self)
 
     def latency(self) -> Optional[float]:
+        """Submit-to-finish wall time in seconds (None while unfinished)."""
         return None if self.finish_time is None else self.finish_time - self.submit_time
 
     def ttft(self) -> Optional[float]:
+        """Time to first token in seconds (None before the first token)."""
         return None if self.first_token_time is None else self.first_token_time - self.submit_time
 
     def slo_met(self) -> Optional[bool]:
+        """Whether latency met the request's SLO (None if no SLO/unfinished)."""
         if self.slo_s is None:
             return None
         lat = self.latency()
@@ -180,6 +189,9 @@ class ContinuousScheduler:
         max_len: int,
         prefix_cache: Optional[PrefixCache] = None,
         page_size: Optional[int] = None,
+        host_store: Optional[HostPageStore] = None,
+        spill_fn: Any = None,
+        restore_fn: Any = None,
     ):
         self.slots = slots
         self.allocators = allocators
@@ -190,6 +202,22 @@ class ContinuousScheduler:
         self.page_size = page_size or (next(iter(allocators.values())).page_size if allocators else 1)
         self.prefix_cache = prefix_cache
         self.pending_copies: list[tuple[int, int]] = []  # "full"-kind (src, dst) COW forks
+        # host page tier (the evict ladder's middle rung, engine-wired):
+        # ``spill_fn(req) -> payload|None`` fetches the request's device
+        # pages to host; ``restore_fn(payload, {kind: pages})`` uploads a
+        # payload back onto freshly allocated pages, EAGERLY (it drains any
+        # queued COW copies first, so device ops apply in queue order and a
+        # restored page is never read or forked before its content lands)
+        self.host_store = host_store
+        self.spill_fn = spill_fn
+        self.restore_fn = restore_fn
+        # monotonic tier counters (the engine's metrics preserve them
+        # across clear_history, like total_tokens)
+        self.spills = 0  # evictions whose pages reached the host tier
+        self.spilled_pages = 0
+        self.restores = 0  # re-admissions served from the host tier
+        self.restored_pages = 0
+        self.tier_replays = 0  # re-admissions that fell back to prompt replay
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self._free_slots = list(range(slots - 1, -1, -1))
@@ -197,10 +225,12 @@ class ContinuousScheduler:
 
     @property
     def queue_depth(self) -> int:
+        """Requests waiting for admission (slots/pages) — the rho signal."""
         return len(self.queue)
 
     @property
     def num_active(self) -> int:
+        """Requests currently holding an engine slot."""
         return len(self.active)
 
     def _peak_pages(self, kind: str, tokens: int) -> int:
@@ -209,6 +239,8 @@ class ContinuousScheduler:
         return min(self.allocators[kind].pages_for(tokens), self.budgets[kind])
 
     def submit(self, req: Request) -> None:
+        """Enqueue ``req`` for admission, validating that its worst-case
+        token count fits ``max_len`` and every page-kind budget."""
         max_tokens = len(req.prompt) + req.max_new_tokens
         if max_tokens > self.max_len:
             raise ValueError(f"request {req.rid}: {max_tokens} tokens exceeds max_len")
@@ -252,28 +284,65 @@ class ContinuousScheduler:
 
     def _link_prefix(self, req: Request) -> int:
         """Link the longest cached prefix of ``req.prompt`` into its "full"
-        table (refcounted, copy-on-write).  Returns the position prefill
-        should start from.  A fresh request whose WHOLE prompt is cached
-        still recomputes its last prompt token (the engine needs its logits
-        to emit the first generated token); that token's K/V write lands in
-        the last shared page, which ``_cow_write_range`` then forks."""
+        table (refcounted, copy-on-write), reading THROUGH the host tier:
+        chain entries whose device pages were reclaimed but whose contents
+        were spilled are restored onto fresh pages and re-registered, so a
+        cached chain survives device pressure.  Returns the position
+        prefill should start from.  A fresh request whose WHOLE prompt is
+        cached still recomputes its last prompt token (the engine needs its
+        logits to emit the first generated token); that token's K/V write
+        lands in the last shared page, which ``_cow_write_range`` then
+        forks."""
         req.shared_tokens = 0
         if self.prefix_cache is None:
             return 0
         if req._prefix_keys is None:
             req._prefix_keys = self.prefix_cache.chain_keys(req.prompt)
         pages = self.prefix_cache.lookup_keys(req._prefix_keys)
-        if not pages:
+        if pages:
+            self.allocators["full"].share(req.rid, pages)
+            req.tables.setdefault("full", []).extend(pages)
+        n_linked = len(pages) + self._readmit_prefix_chain(req, len(pages))
+        if not n_linked:
             return 0
-        shared = len(pages) * self.page_size
+        shared = n_linked * self.page_size
         if not req.generated and shared == len(req.prompt):
             start = len(req.prompt) - 1
         else:
             start = min(shared, len(req.replay))
-        self.allocators["full"].share(req.rid, pages)
-        req.tables.setdefault("full", []).extend(pages)
         req.shared_tokens = shared
         return start
+
+    def _readmit_prefix_chain(self, req: Request, start: int) -> int:
+        """Host-tier read-through for the prefix cache: extend ``req``'s
+        device chain (cached entries ``keys[:start]`` already linked) with
+        spilled chain entries, restoring each onto a fresh page linked into
+        ``req``'s table and re-registered via ``PrefixCache.readmit`` so
+        later requests hit it on-device again.  Stops at the first miss or
+        when the pool runs dry (the remainder prefills normally).  Returns
+        the number of pages readmitted."""
+        cache = self.prefix_cache
+        if cache is None or cache.host_store is None or self.restore_fn is None:
+            return 0
+        keys = req._prefix_keys
+        n = 0
+        for i in range(start, len(keys)):
+            if not cache.host_probe(keys[i]):
+                break
+            pages = self._alloc_pages("full", req.rid, 1)
+            if pages is None:
+                break
+            payload = cache.host_take(keys[i])
+            if payload is None:
+                # the alloc above may reclaim cache entries, whose write-
+                # behind spill can LRU-drop the entry we just probed
+                self.allocators["full"].release(req.rid, pages[0])
+                break
+            self.restore_fn(payload, {"full": pages})
+            cache.readmit(keys[i], pages[0], keys[i - 1] if i else None)
+            req.tables.setdefault("full", []).extend(pages)
+            n += 1
+        return n
 
     def _ensure(self, req: Request, target_tokens: int, write_start: Optional[int] = None) -> bool:
         """Grow ``req``'s tables to hold ``target_tokens`` cache entries and
@@ -339,10 +408,69 @@ class ContinuousScheduler:
         req.tables = {}
         req.ring_hi = 0
 
+    def _spill(self, req: Request) -> None:
+        """Write-behind half of the evict ladder: snapshot ``req``'s device
+        page contents plus the replay-relevant cursors into the host tier
+        under ``("req", rid)``, BEFORE ``_drop_pages`` recycles the page
+        ids.  A spill that cannot happen (no tier, engine veto, payload
+        over budget) is silent — eviction falls back to prompt replay,
+        exactly as before the tier existed."""
+        if self.host_store is None or self.spill_fn is None or not req.tables:
+            return
+        payload = self.spill_fn(req)
+        if payload is None:
+            return
+        n_pages = sum(len(t) for t in req.tables.values())
+        snap = {
+            "pages": payload,
+            "counts": {kind: len(t) for kind, t in req.tables.items()},
+            "ring_hi": req.ring_hi,
+            "cache_len": req.cache_len,
+            "prefill_pos": req.prefill_pos,
+            "ready": req.ready,
+            "pending_token": req.pending_token,
+            "n_pages": n_pages,
+        }
+        if self.host_store.put(("req", req.rid), snap, pages=n_pages):
+            self.spills += 1
+            self.spilled_pages += n_pages
+
+    def _restore(self, req: Request) -> bool:
+        """Re-admission through the host tier: allocate fresh device pages
+        for every spilled kind, upload the snapshot onto them (eagerly, via
+        the engine's ``restore_fn``), and resume ``req`` exactly where
+        eviction froze it — O(pages moved), no replay.  Returns False with
+        the snapshot left in the store when a pool cannot supply the pages
+        yet: the caller stops admitting and retries next tick (falling
+        through to replay would both waste the snapshot and re-prefill
+        tokens the tier already holds)."""
+        snap = self.host_store.peek(("req", req.rid))
+        fresh: dict[str, list[int]] = {}
+        for kind, n in snap["counts"].items():
+            pages = self._alloc_pages(kind, req.rid, n) if n else []
+            if pages is None:
+                self._drop_pages(req)  # roll back the partial reservation
+                return False
+            fresh[kind] = pages
+        snap = self.host_store.take(("req", req.rid))
+        self.restore_fn(snap["pages"], fresh)
+        req.tables = {kind: list(pages) for kind, pages in fresh.items()}
+        req.ring_hi = snap["ring_hi"]
+        req.prefill_pos = snap["prefill_pos"]
+        req.cache_len = snap["cache_len"]
+        req.ready = snap["ready"]
+        req.pending_token = snap["pending_token"]
+        req.shared_tokens = 0
+        self.restores += 1
+        self.restored_pages += snap["n_pages"]
+        return True
+
     def admit_ready(self) -> list[Request]:
         """Admit queue heads while a slot and enough pages are available.
-        Cached prefix pages are linked first (so only the tail allocates);
-        a request whose whole replay is already cached — a re-admitted
+        A queue head with a host-tier snapshot is RESTORED (pages uploaded
+        back, decode resumes where eviction froze it).  Otherwise cached
+        prefix pages are linked first (so only the tail allocates); a
+        request whose whole replay is already cached — a re-admitted
         request hitting its own prompt pages — skips prefill entirely and
         resumes decoding from its last generated token."""
         admitted = []
@@ -351,24 +479,34 @@ class ContinuousScheduler:
             if req.cancelled:
                 self.queue.popleft()
                 self._drop_pages(req)
+                if self.host_store is not None:
+                    self.host_store.pop(("req", req.rid))
                 continue
-            start = self._link_prefix(req)
-            if not self._ensure(req, len(req.replay) + 1, write_start=start):
-                self._drop_pages(req)  # roll back the partial reservation
-                break
+            if self.host_store is not None and self.host_store.contains(("req", req.rid)):
+                if not self._restore(req):
+                    break  # pool pressure: retry next tick, snapshot stays put
+                start = None  # restored: cursors came from the snapshot
+            else:
+                start = self._link_prefix(req)
+                if not self._ensure(req, len(req.replay) + 1, write_start=start):
+                    self._drop_pages(req)  # roll back the partial reservation
+                    break
+                if self.host_store is not None and req.evictions:
+                    self.tier_replays += 1  # spill failed or snapshot LRU-dropped
+                if self.prefix_cache is not None:  # metrics: count committed admissions only
+                    self.prefix_cache.lookups += 1
+                    if req.shared_tokens:
+                        self.prefix_cache.hits += 1
+                        self.prefix_cache.pages_shared += req.shared_tokens // self.page_size
             self.queue.popleft()
-            if self.prefix_cache is not None:  # metrics: count committed admissions only
-                self.prefix_cache.lookups += 1
-                if req.shared_tokens:
-                    self.prefix_cache.hits += 1
-                    self.prefix_cache.pages_shared += req.shared_tokens // self.page_size
             req.slot = self._free_slots.pop()
             req.admit_stamp = next(self._stamps)
-            req.prefill_pos = start
-            req.cache_len = start
-            req.ready = start >= len(req.replay)
-            if req.ready:  # fully cached replay: resume decode directly
-                req.pending_token = req.generated[-1]
+            if start is not None:
+                req.prefill_pos = start
+                req.cache_len = start
+                req.ready = start >= len(req.replay)
+                if req.ready:  # fully cached replay: resume decode directly
+                    req.pending_token = req.generated[-1]
             self.active[req.slot] = req
             admitted.append(req)
         return admitted
@@ -385,6 +523,8 @@ class ContinuousScheduler:
             except ValueError:
                 pass
             self._drop_pages(req)
+        if self.host_store is not None:  # a cancelled snapshot will never restore
+            self.host_store.pop(("req", req.rid))
 
     def register_prefix(self, req: Request) -> int:
         """Offer ``req``'s complete freshly prefilled prompt pages to the
@@ -494,6 +634,8 @@ class ContinuousScheduler:
         return sorted(pending, key=lambda r: r.admit_stamp)
 
     def decode_rows(self) -> list[Request]:
+        """Prefill-complete active requests in admission order — the rows
+        the engine batches into the next decode step."""
         return sorted((r for r in self.active.values() if r.ready), key=lambda r: r.admit_stamp)
 
     def grow(self, req: Request, new_tokens: int = 1) -> bool:
@@ -521,7 +663,11 @@ class ContinuousScheduler:
         return candidates[-1] if len(candidates) > 1 else None
 
     def evict(self, req: Request) -> None:
-        """Release ``req``'s slot and pages and re-queue it at the front."""
+        """Release ``req``'s slot and pages and re-queue it at the front.
+        With a host tier the page contents are spilled write-behind first
+        (the evict ladder: spill -> replay), so re-admission restores
+        O(pages) instead of replaying O(tokens)."""
+        self._spill(req)
         self._drop_pages(req)
         self._release_slot(req)
         req.evictions += 1
@@ -537,10 +683,14 @@ class ContinuousScheduler:
         does) and the queue is emptied behind them, so the returned list
         preserves FIFO order.  Generated tokens ride on the ``Request`` and
         replay through the standard evict+replay path on whichever engine
-        re-admits them, so the handoff is lossless.  ``keep_queue=True``
-        drains only the admitted requests (partial drain)."""
+        re-admits them, so the handoff is lossless.  With a host tier, each
+        drained request's spilled snapshot rides along on ``req._spill`` —
+        ``engine.adopt`` seeds its own tier from it so the handoff restores
+        instead of replaying.  ``keep_queue=True`` drains only the admitted
+        requests (partial drain)."""
         out: list[Request] = []
         for req in sorted(self.active.values(), key=lambda r: r.admit_stamp):
+            self._spill(req)
             self._drop_pages(req)
             self._release_slot(req)
             req.evictions += 1
@@ -551,9 +701,16 @@ class ContinuousScheduler:
         if not keep_queue:
             out.extend(r for r in self.queue if not r.cancelled)
             self.queue.clear()
+        if self.host_store is not None:
+            for req in out:
+                snap = self.host_store.take(("req", req.rid))
+                if snap is not None:
+                    req._spill = snap
         return out
 
     def finish(self, req: Request) -> None:
+        """Release a finished request's pages and slot (prefix-cached page
+        chains stay behind under their retention refs)."""
         self._drop_pages(req)
         self._release_slot(req)
 
@@ -602,11 +759,15 @@ class RhoController:
         self.rho = rho_min
 
     def target(self, queue_depth: int) -> float:
+        """Raw (unsmoothed) rho for ``queue_depth``: linear from ``rho_min``
+        at ``depth_lo`` to ``rho_max`` at ``depth_hi``, clamped."""
         span = max(self.depth_hi - self.depth_lo, 1)
         frac = min(max((queue_depth - self.depth_lo) / span, 0.0), 1.0)
         return self.rho_min + frac * (self.rho_max - self.rho_min)
 
     def update(self, queue_depth: int) -> float:
+        """EMA-step the controller toward ``target(queue_depth)`` and
+        return the smoothed rho."""
         self.rho += self.ema * (self.target(queue_depth) - self.rho)
         return self.rho
 

@@ -1,0 +1,131 @@
+"""Negative tests for the docs checker (``tools/check_docs.py``).
+
+The docs-check CI lane is only trustworthy if a dead link, a dead
+anchor, or a broken README snippet actually FAILS it — every class of
+defect the checker claims to catch is planted here and must be caught.
+The real repo docs are also checked (link pass must be clean), so a
+heading rename that orphans a pointer fails the tier-1 suite locally,
+before CI.
+"""
+from pathlib import Path
+
+import pytest
+
+from tools.check_docs import check_links, doc_files, github_slug, parse_markdown, run_snippets
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def write(root: Path, rel: str, text: str) -> Path:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text, encoding="utf-8")
+    return p
+
+
+class TestSlugs:
+    def test_github_slug_rules(self):
+        seen = {}
+        assert github_slug("The host/device split", seen) == "the-hostdevice-split"
+        assert github_slug("Memory tiers: device pools, host store, replay", {}) == (
+            "memory-tiers-device-pools-host-store-replay"
+        )
+        assert github_slug("Static invariants (reprolint)", {}) == "static-invariants-reprolint"
+        assert github_slug("`code` and *emph*", {}) == "code-and-emph"
+
+    def test_duplicate_headings_get_suffixes(self):
+        seen = {}
+        assert github_slug("Setup", seen) == "setup"
+        assert github_slug("Setup", seen) == "setup-1"
+
+
+class TestParsing:
+    def test_links_inside_code_fences_are_not_links(self, tmp_path):
+        f = write(tmp_path, "a.md", "# T\n```bash\n[not a link](nowhere.md)\n```\n[real](b.md)\n")
+        write(tmp_path, "b.md", "# B\n")
+        _, links, _ = parse_markdown(f)
+        assert [t for _, t in links] == ["b.md"]
+        assert check_links([f], tmp_path) == []
+
+    def test_python_blocks_are_collected_with_line_numbers(self, tmp_path):
+        f = write(tmp_path, "a.md", "# T\n\n```python\nx = 1\nprint(x)\n```\n")
+        _, _, snippets = parse_markdown(f)
+        assert snippets == [(3, "x = 1\nprint(x)")]
+
+
+class TestLinkChecker:
+    def test_clean_tree_passes(self, tmp_path):
+        a = write(tmp_path, "README.md", "# Top\n\n## Deep dive\n\n[arch](docs/x.md#sub-part)\n")
+        b = write(tmp_path, "docs/x.md", "# X\n\n## Sub part\n\n[back](../README.md#deep-dive)\n")
+        assert check_links([a, b], tmp_path) == []
+
+    def test_dead_file_link_fails(self, tmp_path):
+        a = write(tmp_path, "README.md", "[gone](docs/missing.md)\n")
+        findings = check_links([a], tmp_path)
+        assert len(findings) == 1 and "dead link" in findings[0] and "README.md:1" in findings[0]
+
+    def test_dead_anchor_fails_same_file_and_cross_file(self, tmp_path):
+        a = write(tmp_path, "README.md", "# Top\n[self](#nope)\n[cross](docs/x.md#also-nope)\n")
+        write(tmp_path, "docs/x.md", "# X\n")
+        findings = check_links([a], tmp_path)
+        assert len(findings) == 2
+        assert all("dead anchor" in f for f in findings)
+
+    def test_external_and_out_of_root_links_are_skipped(self, tmp_path):
+        a = write(
+            tmp_path, "README.md",
+            "[ext](https://example.com/x#frag)\n"
+            "[badge](../../actions/workflows/ci.yml)\n",
+        )
+        assert check_links([a], tmp_path) == []
+
+    def test_image_links_are_checked(self, tmp_path):
+        a = write(tmp_path, "README.md", "![shot](docs/missing.png)\n")
+        findings = check_links([a], tmp_path)
+        assert len(findings) == 1 and "dead link" in findings[0]
+
+    def test_real_repo_docs_are_clean(self):
+        files = doc_files(REPO)
+        assert REPO / "README.md" in files
+        assert any(f.name == "ARCHITECTURE.md" for f in files)
+        assert any(f.name == "OPERATIONS.md" for f in files)
+        assert check_links(files, REPO) == []
+
+    def test_real_readme_has_exactly_one_executable_snippet(self):
+        # the quickstart contract: CI executes README python blocks, so
+        # every one of them must be self-contained (here: exactly one)
+        _, _, snippets = parse_markdown(REPO / "README.md")
+        assert len(snippets) == 1
+        assert "ContinuousServeEngine" in snippets[0][1]
+
+
+class TestSnippetRunner:
+    def test_failing_snippet_is_a_finding(self, tmp_path):
+        readme = write(tmp_path, "README.md", '# T\n```python\nraise SystemExit("boom")\n```\n')
+        findings = run_snippets(readme, tmp_path)
+        assert len(findings) == 1 and "snippet exited" in findings[0]
+
+    def test_passing_snippet_is_clean(self, tmp_path):
+        readme = write(tmp_path, "README.md", "# T\n```python\nprint('ok')\n```\n")
+        assert run_snippets(readme, tmp_path) == []
+
+    def test_import_error_is_a_finding(self, tmp_path):
+        readme = write(tmp_path, "README.md", "# T\n```python\nimport definitely_not_a_module\n```\n")
+        findings = run_snippets(readme, tmp_path)
+        assert len(findings) == 1 and "snippet exited 1" in findings[0]
+
+
+class TestCli:
+    def test_main_counts_findings_in_exit_status(self, tmp_path):
+        from tools.check_docs import main
+
+        write(tmp_path, "README.md", "[gone](missing.md)\n")
+        assert main(["--root", str(tmp_path), "--no-exec"]) == 1
+        write(tmp_path, "README.md", "# ok\n")
+        assert main(["--root", str(tmp_path), "--no-exec"]) == 0
+
+    @pytest.mark.parametrize("rel", ["docs/ARCHITECTURE.md", "docs/OPERATIONS.md"])
+    def test_docs_are_linked_from_readme(self, rel):
+        # the README is the map: both deep-dive docs must be reachable
+        _, links, _ = parse_markdown(REPO / "README.md")
+        assert any(t.split("#")[0] == rel for _, t in links), f"README does not link {rel}"

@@ -1,0 +1,98 @@
+"""Docstring coverage over the public serving surface.
+
+Walks the ``__all__`` of ``repro.serve``, ``repro.router``, and
+``repro.core.policy`` and fails on any public symbol — or any public
+method/property a public class defines itself — whose docstring is
+missing or empty.  There is no suppression list on purpose: a new
+public name ships documented or it does not ship through this suite.
+(Dataclass fields are exempt structurally — Python attaches no
+``__doc__`` to them — so dataclasses document their fields in the class
+docstring; the test asserts those class docstrings actually mention
+the fields' story by requiring a multi-line docstring on config
+classes.)
+"""
+import dataclasses
+import importlib
+import inspect
+
+import pytest
+
+MODULES = ["repro.serve", "repro.router", "repro.core.policy"]
+
+
+def public_symbols():
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        assert hasattr(mod, "__all__"), f"{modname} must declare __all__"
+        assert mod.__doc__ and mod.__doc__.strip(), f"{modname} needs a module docstring"
+        for name in mod.__all__:
+            yield modname, name, getattr(mod, name)
+
+
+def public_members(cls):
+    """Methods/properties ``cls`` itself defines (inherited and dunder
+    names are the base class's documentation problem, not ours)."""
+    for name, member in vars(cls).items():
+        if name.startswith("_"):
+            continue
+        if isinstance(member, property) or inspect.isfunction(member) or isinstance(
+            member, (classmethod, staticmethod)
+        ):
+            yield name, member
+
+
+def _doc(obj) -> str:
+    if isinstance(obj, (classmethod, staticmethod)):
+        obj = obj.__func__
+    return (getattr(obj, "__doc__", None) or "").strip()
+
+
+SYMBOLS = sorted(public_symbols(), key=lambda t: (t[0], t[1]))
+
+
+@pytest.mark.parametrize("modname,name,obj", SYMBOLS, ids=[f"{m}.{n}" for m, n, _ in SYMBOLS])
+def test_public_symbol_documented(modname, name, obj):
+    assert _doc(obj), f"{modname}.{name} has no docstring"
+    # dataclass configs carry their field documentation in the class
+    # docstring: a one-liner cannot cover a knob surface
+    if inspect.isclass(obj) and dataclasses.is_dataclass(obj) and name.endswith(("Config", "Policy", "Params")):
+        assert "\n" in _doc(obj), (
+            f"{modname}.{name} is a knob dataclass; its docstring must describe the fields"
+        )
+
+
+CLASS_MEMBERS = [
+    (f"{m}.{n}", n2, member)
+    for m, n, obj in SYMBOLS
+    if inspect.isclass(obj) and not dataclasses.is_dataclass(obj)
+    for n2, member in public_members(obj)
+] + [
+    # knob dataclasses document fields in the class docstring, but their
+    # *methods* (from_config, with_taus, ...) still document themselves
+    (f"{m}.{n}", n2, member)
+    for m, n, obj in SYMBOLS
+    if inspect.isclass(obj) and dataclasses.is_dataclass(obj)
+    for n2, member in public_members(obj)
+]
+
+
+@pytest.mark.parametrize(
+    "owner,name,member", CLASS_MEMBERS, ids=[f"{o}.{n}" for o, n, _ in CLASS_MEMBERS]
+)
+def test_public_method_documented(owner, name, member):
+    assert _doc(member), f"{owner}.{name} has no docstring"
+
+
+def test_surface_is_nontrivial():
+    # the walk must actually cover the serving API — if __all__ shrinks
+    # to nothing this suite would pass vacuously
+    names = {f"{m}.{n}" for m, n, _ in SYMBOLS}
+    for expected in [
+        "repro.serve.ContinuousServeEngine",
+        "repro.serve.SamplingParams",
+        "repro.router.Router",
+        "repro.router.RouterPolicy",
+        "repro.core.policy.KernelPolicy",
+    ]:
+        assert expected in names, f"{expected} fell out of __all__"
+    assert len(CLASS_MEMBERS) >= 25, "public method walk looks truncated"

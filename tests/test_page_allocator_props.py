@@ -9,7 +9,9 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.models.kvcache import TRASH_PAGE, PageAllocator, PrefixCache
+import numpy as np
+
+from repro.models.kvcache import TRASH_PAGE, HostPageStore, PageAllocator, PrefixCache
 from repro.serve.scheduler import ContinuousScheduler, Request
 
 
@@ -373,3 +375,131 @@ def test_cow_fork_isolates_writers(plen, num_pages, n_sharers):
         r.finish_time = 1.0
     s.prefix_cache.drop_all()
     assert s.allocators["full"].free_pages == num_pages - 1
+
+# --- host-tier churn: spill on evict, restore on re-admit --------------------
+#
+# The evict ladder's middle rung, driven as a host model (numpy payloads, no
+# device): eviction spills the request's page snapshot into a budgeted
+# HostPageStore, re-admission restores it onto fresh pages.  Invariants at
+# every tick: the device allocator's books stay balanced (spilled pages are
+# COPIES — the device pages are freed at eviction), the store's byte/page
+# accounting matches its entries exactly, an ACTIVE request never also has a
+# live store snapshot, and a restored request resumes at its pre-eviction
+# cursors (cache_len / prefill_pos / ready / pending_token) — the host-model
+# half of the "restored tokens == replay tokens" claim (the engine half, with
+# real device pools, lives in tests/test_host_tier.py).
+
+
+def make_tier_sched(slots: int, num_pages: int, budget_bytes: int):
+    alloc = PageAllocator(num_pages, PAGE)
+    store = HostPageStore(budget_bytes)
+
+    def spill_fn(req):
+        n = sum(len(t) for t in req.tables.values())
+        return {"data": np.full(max(n, 1) * PAGE, req.rid, np.int64)}
+
+    def restore_fn(payload, tables):  # host model: content lands by fiat
+        assert isinstance(payload, dict) and "data" in payload
+
+    s = ContinuousScheduler(
+        slots, {"full": alloc}, {"full": 16}, 64,
+        host_store=store, spill_fn=spill_fn, restore_fn=restore_fn,
+    )
+    return s, store
+
+
+def check_store_books(store: HostPageStore) -> None:
+    assert store.bytes_used == sum(nb for _, nb, _ in store._entries.values())
+    assert store.pages_held == sum(pg for _, _, pg in store._entries.values())
+    assert store.bytes_used <= store.budget_bytes
+    assert store.entries == len(store._entries)
+
+
+@settings(max_examples=75, deadline=None)
+@given(
+    slots=st.integers(1, 3),
+    num_pages=st.integers(6, 24),
+    budget_pages=st.integers(0, 48),
+    arrivals=st.lists(st.tuples(st.integers(1, 12), st.integers(1, 8)), min_size=1, max_size=8),
+    data=st.data(),
+)
+def test_host_tier_churn_conserves_pages_and_cursors(slots, num_pages, budget_pages, arrivals, data):
+    """Random admit/grow/evict/cancel/finish interleavings with a host tier
+    whose budget ranges from useless (0 — everything replays) to ample:
+    device pages + store accounting conserved at every tick, restores land
+    exactly at the spilled cursors, and the drained system leaves nothing
+    behind on either tier."""
+    s, store = make_tier_sched(slots, num_pages, budget_pages * PAGE * 8)
+    reqs = []
+    for rid, (plen, new) in enumerate(arrivals):
+        r = Request(rid=rid, prompt=list(range(1, plen + 1)), max_new_tokens=new)
+        try:
+            s.submit(r)
+        except ValueError:
+            continue
+        reqs.append(r)
+    rids = [r.rid for r in reqs]
+    expected: dict[int, tuple] = {}  # rid -> cursors at spill time
+    for _ in range(300):
+        in_store_before = {r.rid for r in reqs if store.contains(("req", r.rid))}
+        slotless_before = {r.rid for r in reqs if r.slot is None}
+        s.admit_ready()
+        for r in reqs:
+            if r.rid in in_store_before and r.rid in slotless_before and r.slot is not None:
+                if not store.contains(("req", r.rid)):  # snapshot consumed => restored
+                    assert (r.cache_len, r.prefill_pos, r.ready, r.pending_token) == expected[r.rid], (
+                        f"rid {r.rid} restored to different cursors"
+                    )
+        active = list(s.active.values())
+        if not active and not s.queue:
+            break
+        for r in active:
+            if r.slot is None:
+                continue
+            action = data.draw(st.sampled_from(["step", "step", "finish", "cancel", "evict"]),
+                               label=f"rid={r.rid}")
+            if action == "step":
+                if not r.ready:
+                    r.prefill_pos = min(r.prefill_pos + 4, len(r.replay))
+                    r.cache_len = r.prefill_pos
+                    if r.prefill_pos >= len(r.replay):
+                        r.ready = True
+                        if not r.generated:
+                            r.generated.append(1)
+                elif s.grow(r, 1) and r.slot is not None:
+                    r.cache_len += 1
+                    r.generated.append(1)
+                    if len(r.generated) >= r.max_new_tokens:
+                        s.finish(r)
+                        r.finish_time = 1.0
+            elif action == "finish":
+                s.finish(r)
+                r.finish_time = 1.0
+            elif action == "cancel":
+                r.cancelled = True
+                s.cancel(r)
+                r.finish_time = 1.0
+            else:
+                # evict() resets the Request to replay state AFTER spilling;
+                # the snapshot holds the pre-reset cursors, so capture them now
+                cursors = (r.cache_len, r.prefill_pos, r.ready, r.pending_token)
+                s.evict(r)
+                if store.contains(("req", r.rid)):
+                    expected[r.rid] = cursors
+        check_allocator_invariants(s.allocators["full"], rids)
+        check_store_books(store)
+        for r in s.active.values():
+            assert not store.contains(("req", r.rid)), (
+                f"rid {r.rid} is active but still has a host-tier snapshot"
+            )
+    for r in list(s.active.values()):
+        s.finish(r)
+    for r in list(s.queue):
+        r.cancelled = True
+        s.cancel(r)
+    check_allocator_invariants(s.allocators["full"], rids)
+    check_store_books(store)
+    assert s.allocators["full"].free_pages == num_pages - 1
+    # done/cancelled requests never leave a snapshot behind
+    assert not any(store.contains(("req", r.rid)) for r in reqs)
+    assert s.restores + s.tier_replays <= sum(r.evictions for r in reqs) + s.restores

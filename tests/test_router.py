@@ -499,6 +499,10 @@ class TestRealEngines:
         assert "repro_router_requests_completed_total 2" in text
         assert 'repro_router_replica_queue_depth{replica="0"} 0' in text
         assert text.count("# TYPE repro_router_replica_tokens_total counter") == 1
+        # host-tier families render for every replica, zeros when idle
+        assert 'repro_router_replica_tier_restores_total{replica="0"} 0' in text
+        assert "# TYPE repro_router_replica_tier_bytes_used gauge" in text
+        assert 'repro_router_replica_tier_restore_ratio{replica="0"} 0.0' in text
 
 
 class TestRhoEpoch:

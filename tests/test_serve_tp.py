@@ -262,6 +262,10 @@ class TestRegressionGateLogic:
                 "affinity_hit_rate": 0.6,
                 "router2_vs_single": 0.5,
             },
+            "tiering": {
+                "tier_restore_exact": True,
+                "restore_vs_replay": 1.5,
+            },
         }
         result.update(over)
         return result
@@ -375,6 +379,34 @@ class TestRegressionGateLogic:
         fresh = self.fresh()
         fresh["router"]["affinity_hit_rate"] = 0.0
         assert any("affinity hit" in f for f in check_parity(fresh))
+
+    def test_tier_restore_parity_flip_fails(self):
+        """A restored request whose tokens diverged from the straight
+        decode / evict+replay run is a zero-tolerance failure — as is the
+        flag missing entirely (e.g. the tiering section silently dropped)."""
+        from benchmarks.check_regression import check_parity
+
+        for bad in (False, None):
+            fresh = self.fresh()
+            if bad is None:
+                del fresh["tiering"]["tier_restore_exact"]
+            else:
+                fresh["tiering"]["tier_restore_exact"] = bad
+            assert any("tier_restore_exact" in f for f in check_parity(fresh)), bad
+
+    def test_tier_ratio_hard_floor(self):
+        """The restore-vs-replay ratio has a HARD same-run floor of 1.0 —
+        a tier that does not beat re-prefilling is pure overhead.  At the
+        floor, below it, or missing: the gate fails; above it, the ratio
+        feeds the trajectory."""
+        from benchmarks.check_regression import check_parity, throughput_ratios
+
+        assert check_parity(self.fresh()) == []
+        assert throughput_ratios(self.fresh())["tier_restore_vs_replay"] == 1.5
+        for bad in (0.8, 1.0, None):
+            fresh = self.fresh()
+            fresh["tiering"]["restore_vs_replay"] = bad
+            assert any("tier_restore_vs_replay" in f for f in check_parity(fresh)), bad
 
     def test_router_ratio_hard_floor(self):
         """The 2-replica vs single-engine tokens/s ratio has a HARD same-run

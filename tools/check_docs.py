@@ -1,0 +1,162 @@
+"""Docs checker: dead-link/anchor detection + README snippet execution.
+
+CI's docs-check lane runs ``python -m tools.check_docs``, which
+
+1. walks the repo's markdown surface (``README.md`` + ``docs/*.md``) and
+   verifies every **relative** link resolves to a real file and every
+   ``#anchor`` (same-file or cross-file) matches a real heading under
+   GitHub's slug rules — so a renamed heading or moved doc fails CI
+   instead of shipping a dead pointer;
+2. executes every fenced ``python`` block in ``README.md`` in a
+   subprocess — the quickstart snippet is a tested artifact, not prose.
+
+External links (``http://``, ``https://``, ``mailto:``) are not fetched
+(CI must not flake on the network), and targets that resolve *outside*
+the repo root are skipped — GitHub serves repo-app URLs like the CI
+badge's ``../../actions/...`` that have no filesystem counterpart.
+
+Exit status is the number of findings (0 = clean).  ``--no-exec`` skips
+snippet execution (link check only, fast).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+# inline markdown links: [text](target) — images share the syntax
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_FENCE_RE = re.compile(r"^(```+|~~~+)\s*(\S*)\s*$")
+
+
+def github_slug(heading: str, seen: dict[str, int]) -> str:
+    """GitHub's heading→anchor slug: strip markdown emphasis/code marks,
+    lowercase, drop punctuation, spaces→hyphens, ``-N`` suffix on dups."""
+    text = re.sub(r"[*_`]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings keep the text
+    slug = re.sub(r"[^\w\- ]", "", text.lower(), flags=re.UNICODE)
+    slug = slug.replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def parse_markdown(path: Path) -> tuple[set[str], list[tuple[int, str]], list[tuple[int, str]]]:
+    """Return (anchor slugs, [(lineno, link target)], [(lineno, python block)]).
+
+    Links inside fenced code blocks are NOT links (a bash example showing
+    markdown syntax must not trip the checker); fenced ``python`` blocks
+    are collected verbatim for execution.
+    """
+    anchors: set[str] = set()
+    links: list[tuple[int, str]] = []
+    snippets: list[tuple[int, str]] = []
+    seen: dict[str, int] = {}
+    fence: str | None = None  # the opening fence marker while inside a block
+    block_lang, block_lines, block_start = "", [], 0
+    for lineno, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        m = _FENCE_RE.match(line)
+        if fence is None and m:
+            fence, block_lang, block_lines, block_start = m.group(1), m.group(2).lower(), [], lineno
+            continue
+        if fence is not None:
+            if m and m.group(1)[0] == fence[0] and len(m.group(1)) >= len(fence):
+                if block_lang == "python":
+                    snippets.append((block_start, "\n".join(block_lines)))
+                fence = None
+            else:
+                block_lines.append(line)
+            continue
+        h = _HEADING_RE.match(line)
+        if h:
+            anchors.add(github_slug(h.group(2), seen))
+        for lm in _LINK_RE.finditer(line):
+            links.append((lineno, lm.group(1)))
+    return anchors, links, snippets
+
+
+def check_links(files: list[Path], root: Path) -> list[str]:
+    """Dead relative links/anchors across ``files``; returns findings."""
+    parsed = {f.resolve(): parse_markdown(f) for f in files}
+    findings: list[str] = []
+    for f in files:
+        f = f.resolve()
+        _, links, _ = parsed[f]
+        for lineno, target in links:
+            where = f"{f.relative_to(root)}:{lineno}"
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:, ...
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = f if not path_part else (f.parent / path_part).resolve()
+            try:
+                dest.relative_to(root)
+            except ValueError:
+                continue  # repo-app URL (e.g. the CI badge) — no file to check
+            if not dest.exists():
+                findings.append(f"{where}: dead link '{target}' (no such file)")
+                continue
+            if frag:
+                if dest not in parsed:
+                    if dest.suffix.lower() in (".md", ".markdown"):
+                        parsed[dest] = parse_markdown(dest)
+                    else:
+                        continue  # fragment into a non-markdown file: not checkable
+                if frag.lower() not in parsed[dest][0]:
+                    findings.append(f"{where}: dead anchor '{target}' (no heading slugs to '#{frag}')")
+    return findings
+
+
+def run_snippets(readme: Path, root: Path) -> list[str]:
+    """Execute every fenced python block in ``readme``; returns findings."""
+    _, _, snippets = parse_markdown(readme)
+    findings: list[str] = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(root / "src"), env.get("PYTHONPATH", "")) if p
+    )
+    for lineno, code in snippets:
+        where = f"{readme.relative_to(root)}:{lineno}"
+        print(f"[check_docs] executing python block at {where} ...", flush=True)
+        proc = subprocess.run(
+            [sys.executable, "-c", code], cwd=root, env=env,
+            capture_output=True, text=True, timeout=600,
+        )
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()[-8:]
+            findings.append(f"{where}: snippet exited {proc.returncode}:\n    " + "\n    ".join(tail))
+    return findings
+
+
+def doc_files(root: Path) -> list[Path]:
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md")) if (root / "docs").is_dir() else []
+    return [f for f in files if f.exists()]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=Path(__file__).resolve().parent.parent,
+                    help="repo root (default: the checkout containing this tool)")
+    ap.add_argument("--no-exec", action="store_true", help="skip README snippet execution")
+    args = ap.parse_args(argv)
+    root = args.root.resolve()
+
+    files = doc_files(root)
+    findings = check_links(files, root)
+    if not args.no_exec and (root / "README.md").exists():
+        findings += run_snippets(root / "README.md", root)
+
+    for f in findings:
+        print(f"[check_docs] FAIL {f}")
+    n_links = sum(len(parse_markdown(f)[1]) for f in files)
+    print(f"[check_docs] {len(files)} files, {n_links} links checked: "
+          f"{'clean' if not findings else f'{len(findings)} finding(s)'}")
+    return len(findings)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
