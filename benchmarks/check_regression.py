@@ -75,6 +75,10 @@ PARITY_FLAGS = [
     # bitwise-identical to both the straight decode and the evict+replay
     # run, for every paged kind — zero-tolerance
     ("tier_restore_exact", ("tiering", "tier_restore_exact")),
+    # speculative decoding (ISSUE 10): the speculative path must be
+    # invisible in the tokens — spec streams bitwise-identical to the
+    # non-speculative engine for every paged kind — zero-tolerance
+    ("spec_tokens_exact", ("speculative", "spec_tokens_exact")),
 ]
 
 # same-run tokens/s ratio floors (machine-independent, so no tolerance):
@@ -94,6 +98,11 @@ RATIO_FLOORS = [
     # on the long-prompt re-admission workload — a ratio at or below 1.0
     # means the tier is pure overhead, a regression even when exact
     ("tier_restore_vs_replay", ("tiering", "restore_vs_replay"), 1.0),
+    # speculative decoding: verifying k+1 positions in one fused dispatch
+    # must beat one-token-per-dispatch decode on the same run — a ratio at
+    # or below 1.0 means speculation is pure overhead, a regression even
+    # when every stream is exact
+    ("spec_vs_nonspec", ("speculative", "spec_vs_nonspec"), 1.0),
 ]
 
 
@@ -135,6 +144,9 @@ def throughput_ratios(result: dict) -> dict:
     # host page tier (ISSUE 9): restore-vs-replay paired-round median,
     # floored hard in check_parity and tracked here for the trajectory
     out["tier_restore_vs_replay"] = _get(result, ("tiering", "restore_vs_replay"))
+    # speculative decoding (ISSUE 10): spec-vs-nonspec paired-round median,
+    # floored hard in check_parity and tracked here for the trajectory
+    out["spec_vs_nonspec"] = _get(result, ("speculative", "spec_vs_nonspec"))
     return {k: v for k, v in out.items() if v is not None}
 
 

@@ -47,6 +47,10 @@ KNOB_NAMES = frozenset(
         "temperature", "temperatures", "temps",
         "top_k", "top_ks", "top_p", "top_ps",
         "seed", "seeds", "policy",
+        # speculative decoding: the draft-side thresholds are runtime knobs
+        # exactly like the target's (draft_rho moves per tick; only the draft
+        # DEPTH k is legitimately static)
+        "draft_rho", "draft_taus", "draft_policy",
     }
 )
 

@@ -30,12 +30,13 @@ from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dynatran import SITES, SparsityConfig, prune_
 
 Array = jax.Array
 
-__all__ = ["KernelPolicy", "resolve_policy"]
+__all__ = ["KernelPolicy", "derive_draft_policy", "resolve_policy"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -164,6 +165,32 @@ class KernelPolicy:
         known = tuple(s for s in self.sites if s in SITES)
         return SparsityConfig(mode=self.mode, sites=known, block=self.block,
                               topk_k=self.topk_k)
+
+
+def derive_draft_policy(
+    base: KernelPolicy,
+    curves: Mapping[str, tuple],
+    rho,
+) -> KernelPolicy:
+    """The draft-side policy for self-speculation: ``base`` with its taus
+    re-resolved from the DynaTran transfer curves at the (typically higher)
+    draft ``rho`` — AccelTran's accuracy-for-sparsity knob repurposed as a
+    free draft model.
+
+    Same treedef as ``base`` (identical static fields and tau dict keys),
+    so a draft policy and the verify policy share one jit trace and moving
+    ``draft_rho`` at runtime never recompiles: the taus stay runtime leaves,
+    exactly like the engine's own rho controller.  ``curves`` maps site ->
+    ``(rhos, taus)`` interpolation tables (the engine's host-side copies).
+    When ``base`` is not in dynatran mode there is nothing to re-threshold
+    and ``base`` is returned unchanged."""
+    if base.mode != "dynatran" or base.taus is None:
+        return base
+    return base.with_taus({
+        s: np.float32(np.interp(rho, *curves[s]))
+        for s in base.taus
+        if s in curves
+    })
 
 
 _SENTINEL = object()

@@ -15,6 +15,12 @@ DynaTran runtime accuracy/throughput knob.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
         --continuous --tp 4 --prompts 16 --max-new 32
 
+    # speculative decoding: DynaTran-as-draft self-speculation (same weights,
+    # sparser thresholds) drafts K tokens per tick; the target verifies all K
+    # in one fused dispatch.  Output is bitwise identical to --speculate 0:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --continuous --speculate 3 --draft-rho 0.7 --prompts 8 --max-new 32
+
     # multi-replica serving: N continuous engines behind the router, with
     # weighted per-tenant fair queuing, SLO-aware rho degradation, and
     # prefix-affinity placement; --metrics dumps the Prometheus text:
@@ -106,6 +112,19 @@ def main() -> None:
                     help="[router] p99 latency SLO; overruns climb the rho ladder before the backlog would")
     ap.add_argument("--metrics", action="store_true",
                     help="[router] print the Prometheus-style metrics text after the run")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="[continuous] speculative decoding: draft K tokens per "
+                         "sequence per tick and verify them all in one fused "
+                         "dispatch (0 disables; output is bitwise identical "
+                         "either way)")
+    ap.add_argument("--draft-rho", type=float, default=0.5,
+                    help="[speculate] DynaTran sparsity rho for the draft pass "
+                         "(self-speculation: same weights, cheaper thresholds; "
+                         "runtime knob, never recompiles)")
+    ap.add_argument("--draft-arch", default=None, choices=configs.list_archs(),
+                    help="[speculate] draft with a separate small model from the "
+                         "zoo instead of self-speculation (its paged pools shadow "
+                         "the target's page tables)")
     ap.add_argument("--no-prefix-cache", action="store_true", help="[continuous] disable shared-prefix page caching")
     ap.add_argument("--host-tier-mb", type=float, default=64.0,
                     help="[continuous] host page-tier budget (MB): evictions spill KV pages "
@@ -152,6 +171,9 @@ def main() -> None:
             use_pallas=args.use_pallas,
             tile_skip=None if args.tile_skip is None else args.tile_skip == "on",
             host_tier_mb=args.host_tier_mb,
+            speculate=args.speculate,
+            draft_rho=args.draft_rho,
+            draft_arch=args.draft_arch,
         )
         try:
             engines = [ContinuousServeEngine(cfg, params, scfg) for _ in range(max(1, args.replicas))]
@@ -226,6 +248,13 @@ def main() -> None:
         if m["host_tier"] is not None:
             ht = m["host_tier"]
             line += f" | tier spills {ht['spills']} restores {ht['restores']} replays {ht['tier_replays']}"
+        if m["speculative"] is not None:
+            sp = m["speculative"]
+            rate = sp["acceptance_rate"]
+            line += (
+                f" | spec k={sp['k']} ({sp['mode']}) accepted {sp['accepted']}/{sp['drafted']}"
+                + (f" ({rate:.2f})" if rate is not None else "")
+            )
         print(line)
     else:
         engine = ServeEngine(cfg, params, ServeConfig(slots=args.prompts, max_len=args.max_len, target_rho=args.target_rho))

@@ -347,6 +347,23 @@ class PageAllocator:
         self._owned[seq_id].remove(page)
         self._decref(page)
 
+    def claim(self, seq_id: int, page: int) -> bool:
+        """Claim one SPECIFIC page off the free list (refcount 1, linked to
+        ``seq_id``) — the speculative-rollback un-recycle: undoing a ring
+        advance must re-link exactly the page the advance released, because
+        the table slot's twin (a decode that never speculated) still points
+        at it.  Returns False, a no-op, when the page is no longer free
+        (re-allocated in the meantime); the caller falls back to ``alloc``
+        — any page works there, since the un-recycled slot's content is
+        out-of-window by the ring-lookahead invariant and is never read."""
+        try:
+            self._free.remove(page)
+        except ValueError:
+            return False
+        self._ref[page] = 1
+        self._owned.setdefault(seq_id, []).append(page)
+        return True
+
 
 class HostPageStore:
     """Host-memory page tier: a budgeted, insertion-ordered LRU map from

@@ -620,6 +620,71 @@ def paged_insert_pages(
     return PagedKV(k=k, v=v), occ
 
 
+def paged_rollback_chunk(
+    layout: PagedLayout,
+    pools: PagedKV,
+    tables: dict[str, Array],  # page kind -> [B, budget(kind)] int32
+    start: Array,  # [B] int32 — first rejected position (the accepted cache_len)
+    n_clear: Array,  # [B] int32 — rejected span size (0 = row untouched)
+    width: int,  # static span bound (speculation depth k+1)
+    occupancy: dict[str, Array] | None = None,
+) -> tuple[PagedKV, dict[str, Array] | None]:
+    """Rewind a speculative span: zero K/V (int8: both q and scale pools,
+    matching the all-zeros fresh-pool init of ``init_paged_kv``) and re-arm
+    occupancy bits to live (matching ``init_occupancy``'s all-ones init) at
+    positions ``start[b] .. start[b]+n_clear[b]-1`` of every pattern slot.
+
+    Token parity never needs this — rejected entries sit beyond ``cache_len``,
+    are masked by effective length, and are overwritten by the next write to
+    their position before any gather can see them.  The zeroing exists for the
+    STATE contract: after rollback, full/int8 pools compare bitwise-equal to
+    an engine that only ever decoded the accepted prefix (never-written ==
+    zeros), and occupancy bits compare equal everywhere.  Ring offsets that
+    wrapped (position >= capacity) zero a cell a non-speculating twin still
+    holds old out-of-window values in; those cells are unreachable — with
+    ``lookahead >= width`` any such overwritten position is already outside
+    the attention window and the offset is rewritten by subsequent decode
+    before it can re-enter a gather — so ring pools are compared through the
+    window mask, not raw.
+
+    ``width`` is static (one trace per speculation depth); ``n_clear`` is a
+    runtime leaf, so acceptance-count variation never retraces."""
+    k, v = dict(pools.k), dict(pools.v)
+    occ = dict(occupancy) if occupancy is not None else None
+    span = jnp.arange(width)[None, :]
+    for i, slot_kind in enumerate(layout.slot_kinds):
+        table = tables[slot_kind]
+        p = layout.page_size
+        pos = start[:, None] + span  # [B, width]
+        valid = span < n_clear[:, None]
+        if slot_kind == "ring":
+            off = pos % (table.shape[1] * p)
+            page = jnp.take_along_axis(table, off // p, axis=1)
+            off = off % p
+        else:
+            maxp = table.shape[1]
+            idx = pos // p
+            page = jnp.take_along_axis(table, jnp.minimum(idx, maxp - 1), axis=1)
+            valid = valid & (idx < maxp)
+            off = pos % p
+
+        def zero(pool):
+            pg = jnp.where(valid, page, pool.shape[1])  # OOB -> dropped
+            return pool.at[:, pg, off].set(0, mode="drop")
+
+        def zero_entry(entry):
+            if isinstance(entry, dict):
+                return {"q": zero(entry["q"]), "scale": zero(entry["scale"])}
+            return zero(entry)
+
+        k[str(i)] = zero_entry(k[str(i)])
+        v[str(i)] = zero_entry(v[str(i)])
+        if occ is not None:
+            pg = jnp.where(valid, page, occ[str(i)].shape[1])
+            occ[str(i)] = occ[str(i)].at[:, pg, off].set(True, mode="drop")
+    return PagedKV(k=k, v=v), occ
+
+
 def _ring_ctx_positions(start_len: Array, capacity: int) -> Array:
     """Absolute position held by each ring-buffer offset BEFORE the chunk at
     ``start_len`` is written: offset j holds the largest a <= start_len - 1

@@ -115,4 +115,26 @@ def render_prometheus(metrics: dict) -> str:
         "replica_tier_restore_ratio",
         [(tier(m).get("restore_ratio") or 0.0, {"replica": i}) for i, m in enumerate(replicas)],
     )
+
+    # speculative decoding (engines with --speculate 0 report zeros: same
+    # fixed-schema convention as the host tier above)
+    def spec(m: dict) -> dict:
+        return m["engine"].get("speculative") or {}
+
+    counter_family(
+        "replica_spec_drafted_tokens_total",
+        [(spec(m).get("drafted", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    counter_family(
+        "replica_spec_accepted_tokens_total",
+        [(spec(m).get("accepted", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    gauge_family(
+        "replica_spec_k",
+        [(spec(m).get("k", 0), {"replica": i}) for i, m in enumerate(replicas)],
+    )
+    gauge_family(
+        "replica_spec_acceptance_rate",
+        [(spec(m).get("acceptance_rate") or 0.0, {"replica": i}) for i, m in enumerate(replicas)],
+    )
     return "\n".join(out) + "\n"

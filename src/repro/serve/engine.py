@@ -30,11 +30,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.dynatran import SparsityConfig, ThresholdCalculator
-from repro.core.policy import KernelPolicy
+from repro.core.policy import KernelPolicy, derive_draft_policy
 from repro.models import transformer as tfm
 from repro.models import zoo
 from repro.models.kvcache import HostPageStore, PageAllocator, PrefixCache
-from repro.serve.sampling import SamplingParams, fill_row, sample_tokens, sampling_tensors
+from repro.serve.sampling import (
+    SamplingParams, accept_matched, fill_row, sample_tokens, sampling_tensors,
+)
 from repro.serve.scheduler import ContinuousScheduler, Request, RhoController, summarize
 
 
@@ -269,6 +271,25 @@ class ContinuousServeConfig:
     # ADAPTIVE rho: spilled K/V embed the taus they were written at.
     tiering: bool = True
     host_tier_mb: float = 64.0  # host store budget (MB); <= 0 disables
+    # speculative decoding: the draft pass proposes ``speculate`` tokens per
+    # ready row per tick and ONE batched verify pass (a scan of k+1 paged
+    # decode-semantics steps, op-for-op the sequential step, so int8/bf16
+    # decode parity carries over) checks them all; rejected tail entries are
+    # rolled back by truncating page links.  0 disables.  ``speculate`` is
+    # deliberately STATIC — changing the depth recompiles, like decode_window.
+    speculate: int = 0
+    # self-speculation draft knob: the draft pass runs the SAME weights
+    # through the tiled KernelPolicy datapath with taus resolved at this
+    # (typically higher) rho — AccelTran's DynaTran knob as a free draft
+    # model.  A runtime leaf: moving it never recompiles.  Ignored unless
+    # the model config's sparsity mode is "dynatran".
+    draft_rho: float = 0.5
+    # cross-speculation: a separate small zoo arch (configs.get_smoke name)
+    # drafts with its OWN paged state (same page ids through the same
+    # tables, so no extra bookkeeping); its layout must match the target's
+    # page kinds/budgets and its vocab must cover the target's.  Forces
+    # prefix_caching and tiering off (those tiers move only target pages).
+    draft_arch: Optional[str] = None
     target_rho: Optional[float] = None  # fixed DynaTran knob when not adaptive
     adaptive_rho: bool = False  # close the rho loop over queue depth
     rho_min: float = 0.0
@@ -319,8 +340,24 @@ class ContinuousServeEngine:
         # below iterates over the bundle's registered state KINDS instead of
         # hard-coding "page pools + optional SSM side-state"
         self.fam = zoo.serve_module(cfg)
-        self.layout = self.fam.serve_layout(cfg, scfg.max_len, scfg.page_size, lookahead=scfg.decode_window)
+        # speculation needs headroom for the verify scan's k+1 provisional
+        # writes past cache_len, exactly like multi-step decode windows do
+        self._spec_k = int(scfg.speculate)
+        lookahead = max(scfg.decode_window, self._spec_k + 1) if self._spec_k else scfg.decode_window
+        self.layout = self.fam.serve_layout(cfg, scfg.max_len, scfg.page_size, lookahead=lookahead)
         self.bundle = self.fam.serve_state_bundle(cfg, self.layout)
+        if self._spec_k:
+            # speculation is rollback-by-truncation over PAGED state; a
+            # slot-dense component (hybrid SSM, rwkv6 recurrence, whisper
+            # cross-KV) advances cumulatively on every verify step and has
+            # no truncation seam — rejected steps would corrupt it
+            bkinds = list(self.bundle.kinds())
+            if not bkinds or not all(kk.paged for kk in bkinds):
+                raise ValueError(
+                    f"speculate: family '{cfg.family}' carries slot-dense decode "
+                    "state, which cannot rewind rejected draft steps "
+                    f"(bundle: {self.bundle.describe()})"
+                )
         kinds = self.layout.kinds if self.layout is not None else ()
         if "ring" in kinds and scfg.prefill_chunk > self.layout.ring_capacity:
             # a chunk longer than the ring would scatter two laps into one
@@ -343,8 +380,13 @@ class ContinuousServeEngine:
         # must not be linked by a request arriving at another (a FIXED rho
         # keeps taus constant for the engine's lifetime, which keeps cached
         # pages consistent)
+        # cross-speculation shadows every target page with a draft-pool page
+        # under the same id; the prefix cache and the host tier link/move
+        # only target pages, which would desynchronise the shadow — both off
+        cross = bool(self._spec_k and scfg.draft_arch)
         self.prefix_caching = bool(
             scfg.prefix_caching
+            and not cross
             and self.bundle.shareable
             and not (cfg.sparsity.mode == "dynatran" and scfg.adaptive_rho)
         )
@@ -357,6 +399,7 @@ class ContinuousServeEngine:
         # replay fallback for the whole request.
         self.tiering = bool(
             scfg.tiering
+            and not cross
             and scfg.host_tier_mb > 0
             and self.bundle.spillable
             and not (cfg.sparsity.mode == "dynatran" and scfg.adaptive_rho)
@@ -407,6 +450,45 @@ class ContinuousServeEngine:
                     self.slot_state, state_shardings(slot_kind, self.slot_state, self.mesh)
                 )
 
+        # cross-speculation draft: a separate small zoo model with its OWN
+        # paged state, shadowing the target pool page-for-page — the same
+        # page ids flow through the same tables, so the scheduler's
+        # bookkeeping (grow / evict / truncate journals) covers both pools
+        # with zero extra state.  Draft params are freshly initialised here;
+        # callers with real draft weights overwrite ``self._draft["params"]``.
+        self._draft = None
+        if cross:
+            from repro.configs import get_smoke
+
+            dcfg = get_smoke(scfg.draft_arch)
+            dfam = zoo.serve_module(dcfg)
+            dlayout = dfam.serve_layout(dcfg, scfg.max_len, scfg.page_size, lookahead=lookahead)
+            dbundle = dfam.serve_state_bundle(dcfg, dlayout)
+            if dlayout is None or not all(kk.paged for kk in dbundle.kinds()):
+                raise ValueError(
+                    f"draft_arch {scfg.draft_arch!r}: draft family carries "
+                    "slot-dense state and cannot rewind rejected steps"
+                )
+            dbudgets = {k: dlayout.budget(k) for k in dlayout.kinds}
+            if set(dlayout.kinds) != set(kinds) or any(dbudgets[k] != self.budgets[k] for k in kinds):
+                raise ValueError(
+                    f"draft_arch {scfg.draft_arch!r}: draft page layout "
+                    f"{dbudgets} must match the target's {self.budgets} so "
+                    "one page table can index both pools"
+                )
+            if dcfg.vocab_padded < cfg.vocab:
+                raise ValueError(
+                    f"draft_arch {scfg.draft_arch!r}: draft vocab {dcfg.vocab_padded} "
+                    f"does not cover the target vocab {cfg.vocab}"
+                )
+            self._draft = {
+                "cfg": dcfg,
+                "fam": dfam,
+                "layout": dlayout,
+                "params": zoo.init_params(jax.random.PRNGKey(0), dcfg),
+                "pools": dfam.init_paged_state(dcfg, dlayout, num_pages),
+            }
+
         sp: SparsityConfig = cfg.sparsity
         self._dynatran = sp.mode == "dynatran"
         self._sites = sp.sites
@@ -455,6 +537,15 @@ class ContinuousServeEngine:
 
         self._decode = jax.jit(self._decode_impl, donate_argnums=(0, 1, 2), static_argnames=("sample",))
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(0, 1, 2), static_argnames=("sample",))
+        # one fused dispatch per speculative tick: draft scan + verify scan
+        # + device-side accept/rollback.  ``k`` is static (a depth change
+        # recompiles, deliberately); the draft taus ride the draft policy's
+        # runtime leaves, so moving ``draft_rho`` reuses this trace — the
+        # trace-counter test pins both properties.
+        self._spec = jax.jit(
+            self._spec_impl, donate_argnums=(0, 1, 2, 3), static_argnames=("sample", "k")
+        )
+        self._draft_prefill = jax.jit(self._draft_prefill_impl, donate_argnums=(0,))
         self._copy = jax.jit(self._copy_impl, donate_argnums=(0, 1))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
         # host-tier device halves: extract gathers whole pages for a spill
@@ -472,6 +563,11 @@ class ContinuousServeEngine:
         self._total_tokens = 0
         self._total_requests = 0
         self._total_finished = 0
+        # speculative counters (monotonic, like total_tokens: clear_history
+        # never resets them, so fleet-level acceptance tracking stays exact)
+        self._spec_drafted = 0
+        self._spec_accepted = 0
+        self._draft_rho = float(scfg.draft_rho)
         # rho epoch: bumped by set_target_rho so prefix-cache registration
         # can be gated to pages filled entirely at the current taus
         self._rho_epoch = 0
@@ -531,6 +627,121 @@ class ContinuousServeEngine:
             occupancy=occ, ssm=ssm, fresh=fresh, policy=policy,
         )
 
+    def _spec_impl(
+        self, pools, ssm, occ, dpools, tables, lengths, tokens, live, policy, draft_policy,
+        temps, top_ks, top_ps, seeds, steps, *, sample: bool, k: int,
+    ):
+        """One speculative tick, fused into a single dispatch: a draft scan
+        proposes ``k`` tokens per row, a verify scan replays the pending
+        token plus all ``k`` drafts through ``k + 1`` target steps (each
+        op-for-op a ``paged_decode_step``, so the per-token bitwise-parity
+        contract — bf16 AND int8 — carries over verbatim; a chunk-shaped
+        C > 1 verify would not give that for int8), and the rejected tail is
+        rolled back on device.
+
+        Coupling: draft step i and verify step i-1 sample with the SAME
+        per-row key (both at generated-token index ``steps + i - 1``), and
+        the engine emits only the TARGET's samples — so the emitted stream
+        is unconditionally the non-speculative stream, greedy and sampled
+        rows alike, and acceptance is plain token equality
+        (``sampling.accept_matched``).  Verify step j writes position
+        ``lengths + j`` BEFORE its attention gather (overwriting the draft's
+        provisional entry there), so accepted entries hold exactly the bits
+        sequential decode would have written.
+
+        Returns ``(pools, ssm, occ, dpools, target_tokens [k+1, B], m [B])``
+        where ``m`` is the per-row accepted-draft count: the host emits
+        ``m + 1`` tokens and truncates page links past ``lengths + m + 1``.
+        """
+        if dpools is None:
+            # self-speculation: same weights, draft-rho taus, SHARED pools —
+            # every draft write is overwritten by the verify scan before any
+            # later step can gather it, so no second KV cache exists
+            def dbody(carry, _):
+                p_, s_, o_, lens_, toks_, stp = carry
+                logits, p_, o_, s_ = self._step_decode(
+                    p_, s_, o_, tables, lens_, toks_, live, draft_policy
+                )
+                sliced = logits[..., : self.cfg.vocab]
+                if sample:
+                    nxt = sample_tokens(sliced, temps, top_ks, top_ps, seeds, stp)
+                else:
+                    nxt = jnp.argmax(sliced, axis=-1).astype(jnp.int32)
+                return (p_, s_, o_, lens_ + 1, nxt[:, None], stp + 1), nxt
+
+            (pools, ssm, occ, _, _, _), draft_toks = jax.lax.scan(
+                dbody, (pools, ssm, occ, lengths, tokens, steps), None, length=k
+            )
+        else:
+            # cross-speculation: the draft model keeps its own cache of the
+            # accepted sequence.  One EXTRA step (k + 1 total) feeds the
+            # last draft so the draft pool has no hole at lengths + k when
+            # every draft is accepted; its sampled output is discarded.
+            d = self._draft
+
+            def dbody(carry, _):
+                dp, lens_, toks_, stp = carry
+                logits, dp, _, _ = d["fam"].paged_decode_step(
+                    d["params"], d["cfg"], d["layout"], dp, tables, lens_, toks_,
+                    occupancy=None, ssm=None, live=live, policy=draft_policy,
+                )
+                sliced = logits[..., : self.cfg.vocab]
+                if sample:
+                    nxt = sample_tokens(sliced, temps, top_ks, top_ps, seeds, stp)
+                else:
+                    nxt = jnp.argmax(sliced, axis=-1).astype(jnp.int32)
+                return (dp, lens_ + 1, nxt[:, None], stp + 1), nxt
+
+            (dpools, _, _, _), draft_toks = jax.lax.scan(
+                dbody, (dpools, lengths, tokens, steps), None, length=k + 1
+            )
+            draft_toks = draft_toks[:k]
+
+        # verify: feed [pending, d_1 .. d_k]; step j overwrites position
+        # lengths + j, attends through it, and emits the target's token
+        vin = jnp.concatenate([tokens.T, draft_toks], axis=0)  # [k+1, B]
+
+        def vbody(carry, tok_in):
+            p_, s_, o_, lens_, stp = carry
+            logits, p_, o_, s_ = self._step_decode(
+                p_, s_, o_, tables, lens_, tok_in[:, None], live, policy
+            )
+            sliced = logits[..., : self.cfg.vocab]
+            if sample:
+                nxt = sample_tokens(sliced, temps, top_ks, top_ps, seeds, stp)
+            else:
+                nxt = jnp.argmax(sliced, axis=-1).astype(jnp.int32)
+            return (p_, s_, o_, lens_ + 1, stp + 1), nxt
+
+        (pools, ssm, occ, _, _), tgt_toks = jax.lax.scan(
+            vbody, (pools, ssm, occ, lengths, steps), vin
+        )
+        m = accept_matched(draft_toks, tgt_toks[:k])  # [B]
+        # device half of rollback: zero the rejected span (positions
+        # lengths + m + 1 .. lengths + k) and re-arm its occupancy bits —
+        # the scheduler truncates the page links on the host side
+        new_len = lengths + m + 1
+        n_clear = jnp.where(live, k - m, 0)
+        pools, occ = tfm.paged_rollback_chunk(
+            self.layout, pools, tables, new_len, n_clear, k, occupancy=occ
+        )
+        if dpools is not None:
+            dpools, _ = tfm.paged_rollback_chunk(
+                self._draft["layout"], dpools, tables, new_len, n_clear, k
+            )
+        return pools, ssm, occ, dpools, tgt_toks, m
+
+    def _draft_prefill_impl(self, dpools, tables, start, tokens, n_valid, policy):
+        """Cross-speculation prefill ride-along: cache the same chunk into
+        the draft model's pools through the same tables (the draft's logits
+        are irrelevant during prefill — only its cache matters)."""
+        d = self._draft
+        _, dpools, _, _ = d["fam"].paged_prefill_chunk(
+            d["params"], d["cfg"], d["layout"], dpools, tables, start, tokens, n_valid,
+            occupancy=None, ssm=None, fresh=None, policy=policy,
+        )
+        return dpools
+
     def _admit_impl(self, slot_state, slot, inputs, policy):
         """Admission-computed slot state (whisper: encoder cross-KV) — the
         family hook writes one slot row; ``slot`` is a traced scalar so
@@ -588,6 +799,13 @@ class ContinuousServeEngine:
             if s in self._curves
         }
         return self.policy.with_taus(taus)
+
+    def _draft_policy(self, policy: KernelPolicy) -> KernelPolicy:
+        """The draft pass's KernelPolicy: ``policy`` with taus re-resolved
+        at ``self._draft_rho`` (same treedef, so the draft and verify halves
+        of ``_spec_impl`` share one trace and a runtime draft-rho move never
+        recompiles).  Identity when the model has no DynaTran knob."""
+        return derive_draft_policy(policy, self._curves, self._draft_rho)
 
     # --- public API -------------------------------------------------------
     def submit(
@@ -733,7 +951,10 @@ class ContinuousServeEngine:
         if prefill_reqs and (not ready or self._tick % 2 == 1):
             finished += self._prefill_step(prefill_reqs, policy)
         elif ready:
-            finished += self._decode_step(ready, policy)
+            if self._spec_k:
+                finished += self._spec_step(ready, policy)
+            else:
+                finished += self._decode_step(ready, policy)
         in_use = sum(a.num_pages - 1 - a.free_pages for a in self.allocators.values())
         self._peak_pages_in_use = max(self._peak_pages_in_use, in_use)
         return finished
@@ -790,8 +1011,23 @@ class ContinuousServeEngine:
         out["total_tokens"] = self._total_tokens
         out["total_requests"] = self._total_requests
         out["total_finished"] = self._total_finished
-        out["sheds"] = 0  # engines never shed; the router's admission does
+        # NOTE: no "sheds" key here — shedding is admission control, which
+        # only the router performs; its metrics() carries the counter (the
+        # engine used to export a hardcoded 0 stub; see docs/OPERATIONS.md)
         out["rho"] = self.current_rho
+        if self._spec_k:
+            drafted, accepted = self._spec_drafted, self._spec_accepted
+            out["speculative"] = {
+                "k": self._spec_k,
+                "mode": "cross" if self._draft is not None else "self",
+                "draft_rho": self._draft_rho,
+                # monotonic (clear_history never resets them)
+                "drafted": drafted,
+                "accepted": accepted,
+                "acceptance_rate": accepted / drafted if drafted else None,
+            }
+        else:
+            out["speculative"] = None
         out["free_pages"] = {k: a.free_pages for k, a in self.allocators.items()}
         out["pages_in_use"] = {k: a.num_pages - 1 - a.free_pages for k, a in self.allocators.items()}
         out["peak_pages_in_use"] = self._peak_pages_in_use
@@ -999,11 +1235,19 @@ class ContinuousServeEngine:
                 fill_row(st, req.slot, req.params, 0)
                 sample |= req.params.temperature > 0
         self._drain_copies()
+        tables = self._tables_for(reqs)
         self.pools, self.slot_state, self.occupancy, next_tok = self._prefill(
-            self.pools, self.slot_state, self.occupancy, self._tables_for(reqs),
+            self.pools, self.slot_state, self.occupancy, tables,
             jnp.asarray(starts), jnp.asarray(toks), jnp.asarray(nv), jnp.asarray(fresh),
             policy, st["temps"], st["top_ks"], st["top_ps"], st["seeds"], sample=sample,
         )
+        if self._draft is not None:
+            # cross-spec: the draft caches the same chunk through the same
+            # tables (evict + replay rebuilds both pools this way)
+            self._draft["pools"] = self._draft_prefill(
+                self._draft["pools"], tables, jnp.asarray(starts), jnp.asarray(toks),
+                jnp.asarray(nv), self._draft_policy(policy),
+            )
         finished: list[Request] = []
         for req in reqs:
             took = int(nv[req.slot])
@@ -1068,4 +1312,68 @@ class ContinuousServeEngine:
                     self._finish(req)
                     finished.append(req)
                     break  # surplus window tokens are discarded
+        return finished
+
+    def _spec_step(self, ready: list[Request], policy) -> list[Request]:
+        """One speculative tick: reserve pages for the verify scan's k + 1
+        provisional writes (journaling ring advances for rollback), run the
+        fused draft + verify + device-rollback dispatch, emit each row's
+        ``m + 1`` verified target tokens, then truncate page links back to
+        the accepted length.  Rows that finish mid-span skip the truncate —
+        ``_finish`` releases their pages wholesale."""
+        k = self._spec_k
+        rows: list[Request] = []
+        logs: dict[int, list] = {}
+        for req in ready:
+            log: list = []
+            if req.slot is not None and self.sched.grow(req, k + 1, log=log):
+                rows.append(req)
+                logs[req.rid] = log
+        rows = [r for r in rows if r.slot is not None]  # grow() may evict peers
+        if not rows:
+            return []
+        b = self.scfg.slots
+        lens = np.zeros((b,), np.int32)
+        toks = np.zeros((b, 1), np.int32)
+        live = np.zeros((b,), bool)
+        st = sampling_tensors(b)
+        sample = False
+        for req in rows:
+            lens[req.slot] = req.cache_len
+            toks[req.slot, 0] = req.pending_token
+            live[req.slot] = True
+            fill_row(st, req.slot, req.params, len(req.generated))
+            sample |= req.params.temperature > 0
+        self._drain_copies()
+        dpools = self._draft["pools"] if self._draft is not None else None
+        self.pools, self.slot_state, self.occupancy, dpools, tgt_toks, m = self._spec(
+            self.pools, self.slot_state, self.occupancy, dpools, self._tables_for(rows),
+            jnp.asarray(lens), jnp.asarray(toks), jnp.asarray(live),
+            policy, self._draft_policy(policy),
+            st["temps"], st["top_ks"], st["top_ps"], st["seeds"], jnp.asarray(st["steps"]),
+            sample=sample, k=k,
+        )
+        if self._draft is not None:
+            self._draft["pools"] = dpools
+        tgt_toks = np.asarray(tgt_toks)  # [k+1, B]
+        m = np.asarray(m)  # [B]
+        finished: list[Request] = []
+        for req in rows:
+            mi = int(m[req.slot])
+            self._spec_drafted += k
+            self._spec_accepted += mi
+            done = False
+            for j in range(mi + 1):  # the target's tokens, in stream order
+                tok = int(tgt_toks[j, req.slot])
+                req.cache_len += 1
+                req.generated.append(tok)
+                self._total_tokens += 1
+                req.pending_token = tok
+                if len(req.generated) >= req.max_new_tokens or tok in req.stop_ids:
+                    self._finish(req)
+                    finished.append(req)
+                    done = True
+                    break  # surplus accepted tokens are discarded
+            if not done:
+                self.sched.truncate(req, req.cache_len, logs.get(req.rid))
         return finished

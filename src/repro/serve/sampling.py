@@ -130,3 +130,23 @@ def sample_tokens(
     gumbel = jax.vmap(lambda key: jax.random.gumbel(key, (v,), jnp.float32))(_row_keys(seeds, steps))
     sampled = jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
     return jnp.where(temps > 0, sampled, greedy)
+
+
+def accept_matched(draft_tokens: Array, target_tokens: Array) -> Array:
+    """Speculative acceptance count: the longest prefix of ``draft_tokens``
+    [k, B] that token-for-token equals ``target_tokens`` [k, B] — returns
+    ``m`` [B] int32 with 0 <= m <= k.
+
+    Exact token identity is the correct rule for BOTH greedy and sampled
+    rows here, because the engine couples the streams path-wise rather than
+    distribution-wise: draft step i and verify step i sample with the SAME
+    per-row key (``fold_in(PRNGKey(seed), step)`` at the same generated-token
+    index), and the engine always emits the TARGET's samples.  The emitted
+    stream is therefore unconditionally the non-speculative stream, bit for
+    bit; drafts only decide how many of those target tokens a tick may emit
+    (a draft that predicted the target's token validates the next verify
+    position's inputs).  Classic rejection-resampling would accept tokens
+    the target's own keyed stream would not have produced, breaking the
+    repo's replay-determinism contract — equality never does."""
+    match = (draft_tokens == target_tokens).astype(jnp.int32)
+    return jnp.sum(jnp.cumprod(match, axis=0), axis=0).astype(jnp.int32)

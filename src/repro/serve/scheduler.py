@@ -344,12 +344,28 @@ class ContinuousScheduler:
             n += 1
         return n
 
-    def _ensure(self, req: Request, target_tokens: int, write_start: Optional[int] = None) -> bool:
+    def _ensure(
+        self,
+        req: Request,
+        target_tokens: int,
+        write_start: Optional[int] = None,
+        log: Optional[list] = None,
+    ) -> bool:
         """Grow ``req``'s tables to hold ``target_tokens`` cache entries and
         fork any shared page in the write range (positions >=
         ``write_start``, defaulting to ``req.cache_len``).  Returns False
         (keeping partial progress — ``_ensure`` is resumable) when an
-        allocator runs dry."""
+        allocator runs dry.
+
+        ``log`` (the speculative-grow undo journal) records every RING
+        advance as ``(kind, hi, slot, old_page, new_page)`` with ``hi`` the
+        pre-increment ``ring_hi`` and ``old_page`` None for a first-lap
+        append — :meth:`truncate` replays it backwards to rewind rejected
+        speculation.  Full-table growth needs no journal (append-only:
+        rewinding is trimming to ``pages_for``), and copy-on-write forks
+        are deliberately NOT journaled — a fork in the write range may
+        carry accepted writes, and keeping it is never incorrect, only a
+        page of possible waste."""
         if write_start is None:
             write_start = req.cache_len
         for kind, alloc in self.allocators.items():
@@ -372,7 +388,10 @@ class ContinuousScheduler:
                         # fully linked: only the trailing ``budget``
                         # intervals decide which page sits in each slot
                         # (a long replay would otherwise churn O(replay/P)
-                        # recycles at admission)
+                        # recycles at admission).  Unreachable under a
+                        # journaled grow: speculation advances ring_hi by
+                        # at most ceil((k+1)/P)+1 <= budget intervals.
+                        assert log is None, "lap-skip inside a journaled grow"
                         req.ring_hi = hi - budget
                         continue
                     slot = req.ring_hi % budget
@@ -380,6 +399,8 @@ class ContinuousScheduler:
                         pages = alloc.alloc(req.rid, 1)
                         if pages is None:
                             return False
+                        if log is not None:
+                            log.append((kind, req.ring_hi, slot, None, pages[0]))
                         table.append(pages[0])
                     else:
                         # the page in this slot holds only positions that
@@ -390,6 +411,8 @@ class ContinuousScheduler:
                         alloc.release(req.rid, table[slot])
                         pages = alloc.alloc(req.rid, 1)
                         assert pages is not None, "alloc after release cannot fail"
+                        if log is not None:
+                            log.append((kind, req.ring_hi, slot, table[slot], pages[0]))
                         table[slot] = pages[0]
                     req.ring_hi += 1
         return True
@@ -638,18 +661,19 @@ class ContinuousScheduler:
         the engine batches into the next decode step."""
         return sorted((r for r in self.active.values() if r.ready), key=lambda r: r.admit_stamp)
 
-    def grow(self, req: Request, new_tokens: int = 1) -> bool:
+    def grow(self, req: Request, new_tokens: int = 1, log: Optional[list] = None) -> bool:
         """Ensure ``req`` has pages for its next ``new_tokens`` cache
         entries, evicting younger requests if a pool is exhausted.
         Returns False if ``req`` itself was evicted to make room for older
-        work."""
+        work.  ``log`` journals ring advances for :meth:`truncate` (the
+        speculative-rollback path)."""
         # never reserve past the request's own token budget: surplus
         # decode-window writes beyond it are routed out of bounds and
         # dropped, so they need no backing
         budget = len(req.prompt) + req.max_new_tokens
         target = min(req.cache_len + new_tokens, budget, self.max_len)
         while True:
-            if self._ensure(req, target):
+            if self._ensure(req, target, log=log):
                 return True
             victim = self._youngest_victim()
             if victim is None:
@@ -657,6 +681,51 @@ class ContinuousScheduler:
             self.evict(victim)
             if victim is req:
                 return False
+
+    def truncate(self, req: Request, new_len: int, log: Optional[list] = None) -> None:
+        """Rewind ``req``'s page bookkeeping to ``new_len`` cache entries —
+        the host half of speculative rollback (the device half zeroes the
+        span; see ``transformer.paged_rollback_chunk``).  Rollback here is
+        eviction's little sibling: where evict+replay truncates to ZERO and
+        rebuilds, this truncates to the accepted prefix in place.
+
+        Full tables trim append-order back to ``pages_for(new_len)`` —
+        trimmed pages hold only rejected positions (``new_len`` is at least
+        one past the pre-speculation length, so admission's reservation and
+        any linked prefix pages are never touched).  Ring tables replay the
+        grow journal backwards for every advance at interval >=
+        ``ceil(new_len / P)``: a first-lap append pops and releases; a
+        recycle releases the speculative page and re-claims the exact page
+        the advance displaced (its slot twin under a non-speculating
+        schedule).  When that page was re-allocated meanwhile,
+        ``PageAllocator.claim`` declines and any fresh page substitutes —
+        sound because the displaced page's content was already out of the
+        attention window when it was recycled (ring capacity covers
+        window + lookahead), so nothing ever reads it again."""
+        table = req.tables.get("full")
+        if table is not None:
+            alloc = self.allocators["full"]
+            keep = self._peak_pages("full", new_len)
+            while len(table) > keep:
+                alloc.release(req.rid, table.pop())
+        hi_keep = -(-new_len // self.page_size)
+        for kind, hi, slot, old, new in reversed(log or []):
+            if hi < hi_keep:
+                break  # journal is ordered by hi: the rest is accepted
+            alloc = self.allocators[kind]
+            table = req.tables[kind]
+            if old is None:  # first-lap append: undo is pop + release
+                assert table[-1] == new, "journal out of sync with ring table"
+                alloc.release(req.rid, table.pop())
+            else:  # recycle: put the displaced page back in its slot
+                alloc.release(req.rid, new)
+                if not alloc.claim(req.rid, old):
+                    repl = alloc.alloc(req.rid, 1)
+                    assert repl is not None, "alloc after release cannot fail"
+                    old = repl[0]
+                table[slot] = old
+            req.ring_hi -= 1
+        req.cache_len = new_len
 
     def _youngest_victim(self) -> Optional[Request]:
         candidates = sorted(self.active.values(), key=lambda r: r.admit_stamp)

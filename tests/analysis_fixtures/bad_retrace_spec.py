@@ -1,0 +1,23 @@
+"""reprolint positive fixture: speculative-decoding knobs leaked to the
+static side (never imported).  The draft-side thresholds are runtime knobs
+by the same contract as the target taus — only the draft DEPTH k may be
+static."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("draft_rho",))
+def spec_step(pools, tokens, draft_rho):  # RT101: draft rho as a static
+    return pools, tokens * draft_rho
+
+
+@jax.jit
+def verify(pools, tokens, draft_taus):
+    return pools, tokens * draft_taus
+
+
+def drive(pools, tokens):
+    # RT102: draft threshold as a Python float literal — weak-typed scalar
+    # forks the jit cache against the np.float32-typed engine path
+    return verify(pools, tokens, draft_taus=0.7)

@@ -1,0 +1,21 @@
+"""reprolint negative fixture: the sanctioned speculative-decoding split —
+draft depth k is static (changing it deliberately recompiles the fused
+verify scan), draft thresholds ride in as runtime leaves."""
+import functools
+
+import jax
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def spec_step(pools, tokens, draft_taus, *, k):
+    for _ in range(k):  # unrolled draft scan: k shapes the trace, taus do not
+        tokens = tokens * draft_taus
+    return pools, tokens
+
+
+def drive(pools, tokens):
+    # draft_rho -> taus resolution happens host-side; the jitted step only
+    # ever sees typed scalars (same no-recompile discipline as target taus)
+    draft_taus = np.float32(np.interp(0.7, [0.0, 1.0], [0.0, 0.2]))
+    return spec_step(pools, tokens, draft_taus, k=3)

@@ -26,6 +26,7 @@ class TestFixtures:
         "name, expected",
         [
             ("bad_retrace.py", {"RT101", "RT102", "RT103", "RT104", "RT105", "RT106"}),
+            ("bad_retrace_spec.py", {"RT101", "RT102"}),
             ("bad_hostdevice_host.py", {"HD201"}),
             ("bad_hostdevice_device.py", {"HD202"}),
             # pragma-free on purpose: the repro/router/ path segment alone
@@ -42,6 +43,7 @@ class TestFixtures:
         "name",
         [
             "good_retrace.py",
+            "good_retrace_spec.py",
             "good_hostdevice.py",
             "repro/router/good_hostdevice_router.py",
             "good_donation.py",

@@ -266,6 +266,10 @@ class TestRegressionGateLogic:
                 "tier_restore_exact": True,
                 "restore_vs_replay": 1.5,
             },
+            "speculative": {
+                "spec_tokens_exact": True,
+                "spec_vs_nonspec": 1.3,
+            },
         }
         result.update(over)
         return result
@@ -407,6 +411,34 @@ class TestRegressionGateLogic:
             fresh = self.fresh()
             fresh["tiering"]["restore_vs_replay"] = bad
             assert any("tier_restore_vs_replay" in f for f in check_parity(fresh)), bad
+
+    def test_spec_parity_flip_fails(self):
+        """A speculative run whose emitted streams diverged from the
+        non-speculative engine is a zero-tolerance failure — as is the flag
+        missing entirely (e.g. the speculative section silently dropped)."""
+        from benchmarks.check_regression import check_parity
+
+        for bad in (False, None):
+            fresh = self.fresh()
+            if bad is None:
+                del fresh["speculative"]["spec_tokens_exact"]
+            else:
+                fresh["speculative"]["spec_tokens_exact"] = bad
+            assert any("spec_tokens_exact" in f for f in check_parity(fresh)), bad
+
+    def test_spec_ratio_hard_floor(self):
+        """The spec-vs-nonspec tokens/s ratio has a HARD same-run floor of
+        1.0 — speculation that does not beat one-token-per-dispatch decode
+        is pure overhead.  At the floor, below it, or missing: the gate
+        fails; above it, the ratio feeds the trajectory."""
+        from benchmarks.check_regression import check_parity, throughput_ratios
+
+        assert check_parity(self.fresh()) == []
+        assert throughput_ratios(self.fresh())["spec_vs_nonspec"] == 1.3
+        for bad in (0.9, 1.0, None):
+            fresh = self.fresh()
+            fresh["speculative"]["spec_vs_nonspec"] = bad
+            assert any("spec_vs_nonspec" in f for f in check_parity(fresh)), bad
 
     def test_router_ratio_hard_floor(self):
         """The 2-replica vs single-engine tokens/s ratio has a HARD same-run
